@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks (functional timing on CPU).
+
+The Pallas kernels target TPU; on this CPU host they execute in
+interpret mode, so the numbers here measure the *oracle* path (the
+production-relevant CPU number) and validate kernel/oracle agreement.
+The roofline-relevant kernel accounting lives in the dry-run, not here.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import duot as duot_lib
+from repro.kernels import ops
+from repro.kernels.ref import flash_attention_ref, vclock_audit_ref
+
+
+def run(out_dir: str = "results/benchmarks") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    results = {}
+    key = jax.random.key(0)
+
+    # flash attention: oracle timing + kernel agreement
+    b, h, hkv, s, hd = 1, 4, 2, 512, 64
+    q = jax.random.normal(key, (b, h, s, hd), jnp.float32)
+    k = jax.random.normal(key, (b, hkv, s, hd), jnp.float32)
+    v = jax.random.normal(key, (b, hkv, s, hd), jnp.float32)
+    ref_jit = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us, ref_out = time_call(lambda: ref_jit(q, k, v).block_until_ready(),
+                            repeats=3)
+    kern = ops.flash_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True, layout="bshd", interpret=True)
+    err = float(jnp.max(jnp.abs(jnp.swapaxes(kern, 1, 2) - ref_out)))
+    results["flash_attention"] = {"us_ref": us, "max_err": err}
+    emit("kernels/flash_attention", us, f"max_err={err:.2e}")
+
+    # vclock audit
+    rng = np.random.default_rng(0)
+    M, N = 256, 16
+    t = duot_lib.make(M, N)
+    batch = {
+        "client": jnp.asarray(rng.integers(0, N, M), jnp.int32),
+        "kind": jnp.asarray(rng.integers(0, 2, M), jnp.int32),
+        "resource": jnp.asarray(rng.integers(0, 8, M), jnp.int32),
+        "version": jnp.asarray(rng.integers(0, 50, M), jnp.int32),
+        "replica": jnp.asarray(rng.integers(0, 3, M), jnp.int32),
+        "vc": jnp.asarray(rng.integers(0, 30, (M, N)), jnp.int32),
+    }
+    t = duot_lib.record(t, batch)
+    ref_jit2 = jax.jit(lambda: vclock_audit_ref(
+        t.vc, t.client, t.kind, t.resource, t.version, t.seq, t.valid,
+        delta=16))
+    us2, codes_ref = time_call(lambda: ref_jit2().block_until_ready(),
+                               repeats=3)
+    codes_k = ops.audit_duot(t, delta=16, interpret=True)
+    agree = bool(jnp.all(codes_k == codes_ref))
+    results["vclock_audit"] = {"us_ref": us2, "agree": agree}
+    emit("kernels/vclock_audit", us2, f"agree={agree}")
+
+    with open(os.path.join(out_dir, "kernels.json"), "w") as f:
+        json.dump(results, f, indent=2, default=float)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""§Roofline table: aggregate the dry-run sweep into the per-(arch x
+shape x mesh) three-term roofline report consumed by EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(dryrun_dir: str = "results/dryrun",
+        out_dir: str = "results/benchmarks") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        try:
+            r = json.load(open(path))
+        except Exception:
+            continue
+        base = os.path.basename(path)
+        if r.get("status") == "skipped":
+            rows.append({"cell": base, "status": "skipped",
+                         "reason": r.get("reason", "")})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"cell": base, "status": "error",
+                         "error": r.get("error", "")[:200]})
+            continue
+        ro = r["roofline"]
+        rows.append({
+            "cell": base,
+            "status": "ok",
+            "mesh": r["mesh"],
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "compute_s": ro["compute_s"],
+            "memory_s": ro["memory_s"],
+            "collective_s": ro["collective_s"],
+            "dominant": ro["dominant"],
+            "step_time_s": ro["step_time_s"],
+            "mfu": ro["mfu"],
+            "useful_flops_fraction": ro["useful_flops_fraction"],
+            "fits": r["memory"]["fits"],
+            "inter_pod_gb_per_step": ro["inter_pod_bytes"] / 1e9,
+            "cost_1000_steps": r["monetary_cost_1000_steps"]["total"],
+        })
+        emit(
+            f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+            ro["step_time_s"] * 1e6,
+            f"dom={ro['dominant']};mfu={ro['mfu']:.3f};"
+            f"fits={r['memory']['fits']}",
+        )
+    ok = [r for r in rows if r["status"] == "ok"]
+    err = [r for r in rows if r["status"] == "error"]
+    emit("roofline/summary", 0.0,
+         f"ok={len(ok)};skipped={len([r for r in rows if r['status']=='skipped'])};"
+         f"errors={len(err)}")
+    with open(os.path.join(out_dir, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (the scaffold
+contract): ``us_per_call`` is the wall time of one measured call on this
+host; ``derived`` is the benchmark's headline metric (a figure-level
+quantity from the paper)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, *args, repeats: int = 1, **kw) -> tuple[float, object]:
+    """(microseconds per call, last result)."""
+    out = fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return dt * 1e6, out
+
+
+def emit(name: str, us_per_call: float, derived) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,41 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  storage   — Figs 8-15 (throughput/staleness/violations/monetary) on
+              the 24-node 3-DC cluster simulation.
+  sync_cost — the technique applied to multi-pod training (traffic +
+              violations + bill per consistency level).
+  kernels   — Pallas kernel agreement + oracle timing.
+  roofline  — aggregates results/dryrun into the §Roofline table.
+
+Each prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import bench_kernels, bench_roofline, bench_storage, bench_sync_cost
+
+    failures = []
+    for name, mod in [
+        ("storage", bench_storage),
+        ("sync_cost", bench_sync_cost),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ]:
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((name, e))
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+    if failures:
+        for name, e in failures:
+            print(f"benchmark {name} failed: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

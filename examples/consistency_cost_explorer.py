@@ -1,0 +1,65 @@
+"""Consistency-cost explorer: the paper's central trade-off, both ways.
+
+Storage side (the paper's own evaluation): throughput / staleness /
+violations / dollars per consistency level on the 24-node 3-DC cluster.
+
+Training side (our mapping): inter-pod traffic and the Table-2 bill per
+level for a multi-pod run, including the Δ and compression knobs the
+paper doesn't have.
+
+    PYTHONPATH=src python examples/consistency_cost_explorer.py
+"""
+
+from repro.core import PAPER_LEVELS, policy_for
+from repro.core.cost_model import TPU_PRICING, training_run_cost
+from repro.storage import WORKLOAD_A, evaluate_level
+
+
+def storage_side():
+    print("== Storage (paper §4): workload-A, 64 threads ==")
+    print(f"{'level':8s} {'ops/s':>9} {'stale':>7} {'viol':>7} "
+          f"{'sev':>7} {'$total':>9}")
+    for lv in PAPER_LEVELS:
+        m = evaluate_level(lv, WORKLOAD_A, 64, engine_ops=2500)
+        print(f"{lv.value:8s} {m.throughput_ops_s:9.0f} "
+              f"{m.staleness_rate:7.3f} {m.violation_rate:7.3f} "
+              f"{m.severity:7.4f} {m.cost['total']:9.2f}")
+
+
+def training_side():
+    print("\n== Training (our mapping): 512 chips, 7B params, "
+          "1000 steps ==")
+    param_bytes = 2 * 7.6e9
+    print(f"{'policy':18s} {'inter-pod GB/step':>18} {'network $':>10} "
+          f"{'staleness bound':>16}")
+    for name, delta, compress in [
+        ("ALL", 1, "none"),
+        ("QUORUM", 1, "none"),
+        ("ONE (Δ=8)", 8, "none"),
+        ("X_STCC (Δ=8)", 8, "none"),
+        ("X_STCC (Δ=32)", 32, "none"),
+        ("X_STCC+int8", 8, "int8"),
+        ("X_STCC+topk1%", 8, "topk"),
+    ]:
+        pods = 2
+        payload = param_bytes
+        if compress == "int8":
+            payload = param_bytes / 2
+        elif compress == "topk":
+            payload = param_bytes * 0.01 * (8 / 2)  # values+indices
+        per_merge = 2 * (pods - 1) * payload
+        per_step = per_merge / delta
+        bill = training_run_cost(
+            n_chips=512, step_time_s=0.5, n_steps=1000,
+            inter_pod_bytes_per_step=per_step,
+            intra_pod_bytes_per_step=100e9,
+            ckpt_bytes=param_bytes, ckpt_every=100,
+            pricing=TPU_PRICING)
+        bound = "0 (sync)" if delta == 1 else f"{delta} steps"
+        print(f"{name:18s} {per_step / 1e9:18.2f} {bill.network:10.2f} "
+              f"{bound:>16}")
+
+
+if __name__ == "__main__":
+    storage_side()
+    training_side()

@@ -1,0 +1,3 @@
+from repro.checkpoint.store import CheckpointStore, SessionToken
+
+__all__ = ["CheckpointStore", "SessionToken"]

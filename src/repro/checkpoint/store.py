@@ -1,0 +1,216 @@
+"""Replicated checkpoint store with consistency levels.
+
+The paper's storage system, applied to the artifact ML clusters actually
+replicate: checkpoints.  A :class:`CheckpointStore` spans N replica
+directories (stand-ins for per-datacenter blob stores).  Writes are
+acknowledged per the consistency level (ONE/QUORUM/ALL) and propagate to
+the remaining replicas after a configurable lag (the Tp of the staleness
+model); causal-family levels stamp each write with the writer's session
+version and readers are session-guarded (a restarting worker can never
+observe an older checkpoint than one it has already seen — monotonic
+read — nor miss its own last save — read-your-write).
+
+Payloads are flat ``.npz`` files; metadata is JSON.  Everything is
+synchronous and local-disk here, but the ack/propagate split is the real
+protocol — tests inject propagation lag and verify the guarantees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consistency import ConsistencyLevel
+
+
+def _flatten(params) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = flat[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class SessionToken:
+    """Client-side session floors (MR + RYW) for checkpoint readers."""
+
+    client_id: int
+    read_floor: int = 0   # highest version observed
+    write_floor: int = 0  # highest version written
+
+
+class CheckpointStore:
+    def __init__(
+        self,
+        root: str,
+        n_replicas: int = 3,
+        level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+        propagation_lag_s: float = 0.0,
+    ):
+        self.root = root
+        self.n_replicas = n_replicas
+        self.level = level
+        self.propagation_lag_s = propagation_lag_s
+        for r in range(n_replicas):
+            os.makedirs(self._rdir(r), exist_ok=True)
+
+    def _rdir(self, r: int) -> str:
+        return os.path.join(self.root, f"replica_{r}")
+
+    def _meta_path(self, r: int) -> str:
+        return os.path.join(self._rdir(r), "META.json")
+
+    def _read_meta(self, r: int) -> dict:
+        try:
+            with open(self._meta_path(r)) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return {"version": 0, "entries": {}}
+
+    def _write_meta(self, r: int, meta: dict) -> None:
+        tmp = self._meta_path(r) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, self._meta_path(r))
+
+    # -- write path -----------------------------------------------------------
+
+    def save(self, params, step: int, session: SessionToken) -> int:
+        """Write a checkpoint; ack per the level; propagate to the rest.
+
+        Returns the committed version."""
+        flat = _flatten(params)
+        version = max(self._read_meta(r)["version"]
+                      for r in range(self.n_replicas)) + 1
+        acks = self.level.write_acks(self.n_replicas)
+        entry = {
+            "step": int(step),
+            "version": version,
+            "client": session.client_id,
+            "time": time.time(),
+        }
+        payload_name = f"ckpt_v{version}.npz"
+        order = list(range(self.n_replicas))
+        # Coordinator = client's home replica first (local write, T≈0).
+        home = session.client_id % self.n_replicas
+        order.remove(home)
+        order.insert(0, home)
+        for i, r in enumerate(order):
+            if i >= acks and self.propagation_lag_s > 0:
+                # Lagged propagation: recorded as pending; `propagate()`
+                # (or the next save) completes it.  Models Tp.
+                meta = self._read_meta(r)
+                meta.setdefault("pending", []).append(
+                    dict(entry, payload=payload_name,
+                         due=time.time() + self.propagation_lag_s)
+                )
+                self._write_meta(r, meta)
+                continue
+            np.savez(os.path.join(self._rdir(r), payload_name), **flat)
+            meta = self._read_meta(r)
+            meta["version"] = version
+            meta["entries"][str(version)] = entry
+            self._write_meta(r, meta)
+        session.write_floor = max(session.write_floor, version)
+        session.read_floor = max(session.read_floor, version)
+        return version
+
+    def propagate(self, now: float | None = None) -> int:
+        """Complete due pending propagations.  Returns count applied."""
+        now = time.time() if now is None else now
+        done = 0
+        for r in range(self.n_replicas):
+            meta = self._read_meta(r)
+            still = []
+            for p in meta.get("pending", []):
+                if p["due"] <= now:
+                    src = None
+                    for r2 in range(self.n_replicas):
+                        cand = os.path.join(self._rdir(r2), p["payload"])
+                        if os.path.exists(cand):
+                            src = cand
+                            break
+                    if src:
+                        dst = os.path.join(self._rdir(r), p["payload"])
+                        if src != dst and not os.path.exists(dst):
+                            import shutil
+
+                            shutil.copyfile(src, dst)
+                        meta["version"] = max(meta["version"], p["version"])
+                        meta["entries"][str(p["version"])] = {
+                            k: p[k] for k in ("step", "version", "client", "time")
+                        }
+                        done += 1
+                else:
+                    still.append(p)
+            meta["pending"] = still
+            self._write_meta(r, meta)
+        return done
+
+    # -- read path -------------------------------------------------------------
+
+    def latest_version(self, replica: int) -> int:
+        return self._read_meta(replica)["version"]
+
+    def restore(
+        self,
+        template,
+        session: SessionToken,
+        replica: int | None = None,
+    ) -> tuple[Any, int, bool]:
+        """Session-guarded restore.
+
+        Returns (params, version, rerouted).  Under X-STCC, a replica
+        below the session floor is inadmissible — the read reroutes to an
+        admissible replica (monotonic-read / read-your-write).  Weaker
+        levels serve the raw replica (possibly stale)."""
+        replica = session.client_id % self.n_replicas if replica is None else replica
+        floor = max(session.read_floor, session.write_floor)
+        v = self.latest_version(replica)
+        rerouted = False
+        if self.level.is_session_guarded and v < floor:
+            # Reroute to the freshest admissible replica.
+            best = max(range(self.n_replicas), key=self.latest_version)
+            if self.latest_version(best) < floor:
+                raise RuntimeError(
+                    f"no replica satisfies session floor {floor}"
+                )
+            replica, rerouted = best, True
+            v = self.latest_version(replica)
+        if v == 0:
+            raise FileNotFoundError("no checkpoint available")
+        path = os.path.join(self._rdir(replica), f"ckpt_v{v}.npz")
+        flat = dict(np.load(path))
+        params = _unflatten(template, flat)
+        session.read_floor = max(session.read_floor, v)
+        return params, v, rerouted
+
+    def stale_read_probe(self, session: SessionToken, replica: int) -> bool:
+        """True if a raw read at `replica` would be stale (for metrics)."""
+        global_latest = max(
+            self.latest_version(r) for r in range(self.n_replicas)
+        )
+        return self.latest_version(replica) < global_latest

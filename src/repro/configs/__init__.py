@@ -1,0 +1,41 @@
+"""Architecture configs (the 10 assigned archs) + shape cells."""
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeSpec,
+    reduced,
+    shapes_for,
+)
+from repro.configs.registry import ARCH_IDS, get_config, list_archs
+from repro.configs.shapes import (
+    SHAPES_BY_NAME,
+    adjust_config,
+    cache_specs,
+    input_specs,
+    make_batch,
+)
+
+__all__ = [
+    "ALL_SHAPES",
+    "ARCH_IDS",
+    "DECODE_32K",
+    "LONG_500K",
+    "ModelConfig",
+    "PREFILL_32K",
+    "SHAPES_BY_NAME",
+    "ShapeSpec",
+    "TRAIN_4K",
+    "adjust_config",
+    "cache_specs",
+    "get_config",
+    "input_specs",
+    "list_archs",
+    "make_batch",
+    "reduced",
+    "shapes_for",
+]

@@ -1,0 +1,153 @@
+"""Input specs for every (architecture x shape) cell.
+
+``input_specs(cfg, shape, mesh=...)`` returns ShapeDtypeStruct stand-ins
+for every model input — weak-type-correct, shardable, no device
+allocation — consumed by the dry-run's ``jit(...).lower()``.
+
+``make_batch(cfg, shape, key)`` materializes small concrete batches for
+smoke tests and examples (reduced configs only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeSpec,
+    shapes_for,
+)
+
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def adjust_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Per-shape config tweaks (documented in DESIGN.md §6)."""
+    if shape is LONG_500K or shape.name == "long_500k":
+        if cfg.family == "hybrid":
+            # Sliding-window ring-buffer KV for the shared attention.
+            return dataclasses.replace(cfg, sliding_window=4096)
+    return cfg
+
+
+def _sharding(mesh, *axes):
+    if mesh is None:
+        return None
+    resolved = []
+    for a in axes:
+        if a == "data" and "pod" in mesh.shape:
+            resolved.append(("pod", "data"))
+        else:
+            resolved.append(a)
+    return NamedSharding(mesh, P(*resolved))
+
+
+def _sds(shape, dtype, sharding=None):
+    if sharding is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh=None) -> dict:
+    """ShapeDtypeStructs for the step function's ``batch`` argument.
+
+    train:   {tokens, labels [, vis_embeds | frames]}
+    prefill: {tokens [, vis_embeds | frames]}
+    decode:  {tokens (B, 1)} (the cache comes from ``cache_specs``).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok_dtype = jnp.int32
+    act_dtype = jnp.dtype(cfg.dtype)
+    batch_sh = _sharding(mesh, "data", None)
+    batch3_sh = _sharding(mesh, "data", None, None)
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((b, s), tok_dtype, batch_sh),
+            "labels": _sds((b, s), tok_dtype, batch_sh),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s), tok_dtype, batch_sh)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"tokens": _sds((b, 1), tok_dtype, batch_sh)}
+
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["vis_embeds"] = _sds((b, cfg.n_vis_tokens, cfg.d_model),
+                                   act_dtype, batch3_sh)
+    if cfg.is_encdec and shape.kind != "decode":
+        specs["frames"] = _sds((b, cfg.n_frames, cfg.d_model),
+                               act_dtype, batch3_sh)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh=None) -> dict:
+    """ShapeDtypeStructs for the decode cache at ``shape.seq_len``."""
+    from repro.models import build_model
+
+    cfg = adjust_config(cfg, shape)
+    model = build_model(cfg)
+    tree = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+    if mesh is None:
+        return tree
+
+    def axis_size(axis) -> int:
+        n = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            n *= int(mesh.shape.get(a, 1))
+        return n
+
+    def shard_leaf(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if leaf.ndim == 0:
+            return _sds(leaf.shape, leaf.dtype)
+        spec: list = [None] * leaf.ndim
+        # Layer-stacked leaves: dim0 = layers; dim1 = batch.
+        bdim = 1 if leaf.ndim >= 2 else 0
+        spec[bdim] = ("pod", "data") if "pod" in mesh.shape else "data"
+        if name in ("k", "v", "ck", "cv") and leaf.ndim == 5:
+            spec[2] = "model"        # sequence-sharded KV
+        elif name in ("state", "ssm") and leaf.ndim == 5:
+            spec[2] = "model"        # rwkv / mamba heads
+        # Drop axes that do not divide their dim (batch=1, 40 heads on a
+        # 16-way axis, ...) — replicate instead of padding.
+        for d in range(leaf.ndim):
+            if spec[d] is not None:
+                n = axis_size(spec[d])
+                if n <= 1 or leaf.shape[d] % n != 0:
+                    spec[d] = None
+        # If the batch could not shard over (pod, data), try data alone.
+        if spec[bdim] is None and "pod" in mesh.shape:
+            if leaf.shape[bdim] % axis_size("data") == 0:
+                spec[bdim] = "data"
+        return _sds(leaf.shape, leaf.dtype, NamedSharding(mesh, P(*spec)))
+
+    return jax.tree_util.tree_map_with_path(shard_leaf, tree)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, key=None) -> dict:
+    """Concrete small batch (smoke tests; reduced configs only)."""
+    key = key if key is not None else jax.random.key(0)
+    specs = input_specs(cfg, shape, mesh=None)
+    out = {}
+    for name, sds in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(
+                sub, sds.shape, 0, cfg.vocab_size, dtype=sds.dtype
+            )
+        else:
+            out[name] = jax.random.normal(sub, sds.shape, jnp.float32).astype(
+                sds.dtype
+            )
+    return out

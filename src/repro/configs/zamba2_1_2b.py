@@ -1,0 +1,28 @@
+"""zamba2-1.2b [hybrid]: Mamba2 backbone + shared attention blocks.
+
+38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000 ssm_state=64
+[arXiv:2411.15242; hf].  One shared attention+MLP block is applied every
+6 mamba layers (Zamba's parameter-sharing trick).  ``long_500k`` runs
+with a 4096-token sliding-window KV ring buffer (set by the launcher) —
+the sub-quadratic long-context path for this family.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    head_dim=64,
+    mlp_kind="swiglu",
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    attn_every=6,
+)

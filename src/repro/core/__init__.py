@@ -1,0 +1,34 @@
+"""X-STCC core — the paper's contribution as a composable JAX library.
+
+Modules:
+  vector_clock — Fidge/Mattern clock algebra (jit-able).
+  duot         — Distributed User Operations Table (bounded op log).
+  audit        — eq. 1a–1d pair classification + violation detection.
+  odg          — Operations Dependency Graph (Timed/Causal/Data edges).
+  consistency  — ConsistencyLevel / ConsistencyPolicy.
+  xstcc        — the protocol engine (sessions + timed-causal merge).
+  staleness    — Appendix A stale-read model (analytic + Monte-Carlo).
+  cost_model   — Appendix B monetary cost model (Table 2 pricing).
+"""
+
+from repro.core import audit, cost_model, duot, odg, staleness, vector_clock, xstcc
+from repro.core.consistency import (
+    PAPER_LEVELS,
+    ConsistencyLevel,
+    ConsistencyPolicy,
+    policy_for,
+)
+
+__all__ = [
+    "audit",
+    "cost_model",
+    "duot",
+    "odg",
+    "staleness",
+    "vector_clock",
+    "xstcc",
+    "ConsistencyLevel",
+    "ConsistencyPolicy",
+    "PAPER_LEVELS",
+    "policy_for",
+]

@@ -1,0 +1,207 @@
+"""Auditing strategy — paper §3.3 and the five-phase flowchart (§3.4).
+
+Given the DUOT, every ordered pair of live operations ``(o1, o2)`` with
+``T(o1) < T(o2)`` on the same resource is classified (paper eq. 1a–1d and
+Fig. 4) and checked for the consistency guarantee the pair falls under:
+
+  same client, o1 -> o2:
+    a1  R,R  monotonic read       (MR)
+    a2  W,W  monotonic write      (MW)
+    a3  W,R  read-your-write      (RYW)
+    a4  R,W  write-follows-read   (WFR)
+  different clients, o1 -> o2:
+    b1       timed causal         (TCC, server side)
+  no happens-before (same or different clients):
+    b2       concurrent — conflict-resolved by the deterministic linear
+             extension (LWW on (clock-sum, client)); never a violation by
+             itself.
+
+Violation semantics on versions (monotone per resource; a read's
+``version`` is the version it returned, a write's the version it created):
+
+  MR  violated  iff version(o2) <  version(o1)   (read went backwards)
+  MW  violated  iff version(o2) <= version(o1)   (writes applied out of order)
+  RYW violated  iff version(o2) <  version(o1)   (own write not visible)
+  WFR violated  iff version(o2) <= version(o1)   (write not ordered after read)
+  TCC violated  iff o1 is a write, o1 -> o2, and o2 (a read) returned an
+                 older version — a causally-preceding write was invisible.
+  TIMED violated iff seq(o2) - seq(o1) > delta and o2 still missed o1's
+                 write — the propagation exceeded the timed bound Δ
+                 (Torres-Rojas timed consistency; the "T" in X-STCC).
+
+The dense pairwise pass is the O(m^2·n) hot-spot; a tiled Pallas TPU
+kernel with an identical contract lives in ``repro.kernels.vclock_audit``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vector_clock as vclock
+from repro.core.duot import Duot, READ, WRITE
+
+Array = jax.Array
+
+# Phase codes (paper Fig. 4).
+PHASE_NONE = 0
+PHASE_A1_MR = 1
+PHASE_A2_MW = 2
+PHASE_A3_RYW = 3
+PHASE_A4_WFR = 4
+PHASE_B1_TCC = 5
+PHASE_B2_CONCURRENT = 6
+
+PHASE_NAMES = {
+    PHASE_NONE: "none",
+    PHASE_A1_MR: "a1:monotonic-read",
+    PHASE_A2_MW: "a2:monotonic-write",
+    PHASE_A3_RYW: "a3:read-your-write",
+    PHASE_A4_WFR: "a4:write-follows-read",
+    PHASE_B1_TCC: "b1:timed-causal",
+    PHASE_B2_CONCURRENT: "b2:concurrent",
+}
+
+# ODG edge-kind weights for severity (paper §3.4.1: Timed, Causal, Data).
+WEIGHT_TIMED = 1.0
+WEIGHT_CAUSAL = 2.0
+WEIGHT_DATA = 3.0
+
+
+class AuditResult(NamedTuple):
+    """Dense audit output over an m-entry log."""
+
+    phase: Array        # (m, m) int32 — phase code for pair (i, j)
+    violation: Array    # (m, m) bool — pair (i, j) violates its guarantee
+    vio_kind: Array     # (m, m) int32 — phase code of the violated rule
+    timed_vio: Array    # (m, m) bool — Δ-bound exceeded
+    n_audited: Array    # () int32 — pairs classified (phase != NONE)
+    n_violations: Array  # () int32
+    severity: Array     # () float32 — weighted severity in [0, 1]
+
+
+def classify_pairs(table: Duot) -> Array:
+    """Phase classification matrix (paper Fig. 4), no violation check."""
+    m = table.capacity
+    valid = table.valid
+    pair_valid = valid[:, None] & valid[None, :]
+    same_res = table.resource[:, None] == table.resource[None, :]
+    ordered = table.seq[:, None] < table.seq[None, :]
+    same_client = table.client[:, None] == table.client[None, :]
+    hb = vclock.happens_before_matrix(table.vc)
+
+    base = pair_valid & same_res & ordered
+    ki = table.kind[:, None]
+    kj = table.kind[None, :]
+
+    phase = jnp.zeros((m, m), dtype=jnp.int32)
+    sc_hb = base & same_client & hb
+    phase = jnp.where(sc_hb & (ki == READ) & (kj == READ), PHASE_A1_MR, phase)
+    phase = jnp.where(sc_hb & (ki == WRITE) & (kj == WRITE), PHASE_A2_MW, phase)
+    phase = jnp.where(sc_hb & (ki == WRITE) & (kj == READ), PHASE_A3_RYW, phase)
+    phase = jnp.where(sc_hb & (ki == READ) & (kj == WRITE), PHASE_A4_WFR, phase)
+    phase = jnp.where(base & ~same_client & hb, PHASE_B1_TCC, phase)
+    phase = jnp.where(base & ~hb, PHASE_B2_CONCURRENT, phase)
+    return phase
+
+
+def audit(table: Duot, *, delta: int | Array = 0) -> AuditResult:
+    """Full audit: classify every pair and flag violations.
+
+    Args:
+      table: the DUOT.
+      delta: timed bound Δ in ``seq`` (timestamp) units; 0 disables the
+        timed check (pure causal audit).
+    """
+    phase = classify_pairs(table)
+    vi = table.version[:, None]
+    vj = table.version[None, :]
+    ki = table.kind[:, None]
+    kj = table.kind[None, :]
+
+    viol = jnp.zeros(phase.shape, dtype=bool)
+    viol |= (phase == PHASE_A1_MR) & (vj < vi)
+    viol |= (phase == PHASE_A2_MW) & (vj <= vi)
+    viol |= (phase == PHASE_A3_RYW) & (vj < vi)
+    viol |= (phase == PHASE_A4_WFR) & (vj <= vi)
+    # b1: a causally-later read must observe causally-earlier writes.
+    viol |= (
+        (phase == PHASE_B1_TCC) & (ki == WRITE) & (kj == READ) & (vj < vi)
+    )
+
+    # Timed bound: any (write, later read) on the same resource separated
+    # by more than Δ timestamps must be visible regardless of causality.
+    delta = jnp.asarray(delta, jnp.int32)
+    gap = table.seq[None, :] - table.seq[:, None]
+    base = (
+        table.valid[:, None]
+        & table.valid[None, :]
+        & (table.resource[:, None] == table.resource[None, :])
+        & (table.seq[:, None] < table.seq[None, :])
+    )
+    timed_vio = (
+        (delta > 0)
+        & base
+        & (ki == WRITE)
+        & (kj == READ)
+        & (gap > delta)
+        & (vj < vi)
+    )
+
+    vio_kind = jnp.where(viol, phase, PHASE_NONE).astype(jnp.int32)
+
+    audited = phase != PHASE_NONE
+    n_audited = jnp.sum(audited.astype(jnp.int32))
+    n_violations = jnp.sum(viol.astype(jnp.int32)) + jnp.sum(
+        timed_vio.astype(jnp.int32)
+    )
+
+    # Severity (paper §3.4.1): violated ODG edges weighted by kind over
+    # all audited edges.  Data edges: pairs where a read returned a write's
+    # value (vi == vj across W->R); Causal edges: happens-before pairs;
+    # Timed edges: adjacent-in-time pairs (all ordered same-resource).
+    hb = vclock.happens_before_matrix(table.vc)
+    data_edge = base & (ki == WRITE) & (kj == READ)
+    causal_edge = base & hb
+    timed_edge = base
+    w = (
+        WEIGHT_DATA * (viol & data_edge)
+        + WEIGHT_CAUSAL * (viol & causal_edge & ~data_edge)
+        + WEIGHT_TIMED * ((viol | timed_vio) & ~causal_edge & ~data_edge)
+    )
+    denom = (
+        WEIGHT_DATA * data_edge
+        + WEIGHT_CAUSAL * (causal_edge & ~data_edge)
+        + WEIGHT_TIMED * (timed_edge & ~causal_edge & ~data_edge)
+    )
+    severity = jnp.sum(w) / jnp.maximum(jnp.sum(denom), 1.0)
+
+    return AuditResult(
+        phase=phase,
+        violation=viol,
+        vio_kind=vio_kind,
+        timed_vio=timed_vio,
+        n_audited=n_audited,
+        n_violations=n_violations,
+        severity=severity.astype(jnp.float32),
+    )
+
+
+audit_jit = jax.jit(audit, static_argnames=())
+
+
+def session_guarantee_report(result: AuditResult) -> dict[str, Array]:
+    """Per-guarantee violation counts (for Figs 12–13 style reporting)."""
+    out = {}
+    for code, name in [
+        (PHASE_A1_MR, "monotonic_read"),
+        (PHASE_A2_MW, "monotonic_write"),
+        (PHASE_A3_RYW, "read_your_write"),
+        (PHASE_A4_WFR, "write_follows_read"),
+        (PHASE_B1_TCC, "timed_causal"),
+    ]:
+        out[name] = jnp.sum((result.vio_kind == code).astype(jnp.int32))
+    out["timed_bound"] = jnp.sum(result.timed_vio.astype(jnp.int32))
+    return out

@@ -1,0 +1,162 @@
+"""Monetary cost model — paper §3.5.2, §4.2.4 and Appendix B.
+
+``Cost_all(cl) = Cost_in(cl) + Cost_st(cl) + Cost_tr(cl)``          (eq .5)
+
+  * instances: ``nbInstances × price × runtime/timeUnit``            (eq .6)
+  * storage:   physical hosting (GB-month) + I/O requests            (eq .7)
+  * network:   inter-DC traffic × price(interDC)
+             + intra-DC traffic × price(intraDC)                     (eq .8)
+
+Pricing defaults are the paper's Table 2 (Amazon EC2/EBS, 2020):
+$0.0464/inst-hr, $0.10/GB-month, $0.10 per million requests,
+intra-DC $0.00/GB, inter-DC $0.01/GB.
+
+Two front-ends share these formulas:
+
+  * the paper-faithful storage simulation (``repro.storage``) — traffic
+    and runtime measured by the discrete-event simulator;
+  * the TPU multi-pod application (``repro.launch.dryrun``) — traffic
+    taken from compiled-HLO collective bytes classified intra-pod
+    (intra-DC, free) vs inter-pod (inter-DC, billed), and runtime from
+    the roofline step-time estimate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PricingScheme:
+    """Paper Table 2 (defaults) — all prices in USD."""
+
+    compute_unit_per_hour: float = 0.0464       # VM instance $/hour
+    storage_gb_month: float = 0.10              # leased volume $/GB-month
+    storage_per_million_requests: float = 0.10  # I/O $/1e6 requests
+    intra_dc_per_gb: float = 0.00               # free inside a DC / pod
+    inter_dc_per_gb: float = 0.01               # billed across DCs / pods
+
+
+PAPER_PRICING = PricingScheme()
+
+# TPU-application pricing: v5e on-demand equivalent.  Only the instance
+# price differs; relative orderings across consistency levels are
+# insensitive to it (network/storage terms dominate the *differences*).
+TPU_PRICING = PricingScheme(compute_unit_per_hour=1.20)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    instances: float
+    storage: float
+    network: float
+
+    @property
+    def total(self) -> float:
+        return self.instances + self.storage + self.network
+
+    def as_dict(self) -> dict[str, float]:
+        return {
+            "instances": self.instances,
+            "storage": self.storage,
+            "network": self.network,
+            "total": self.total,
+        }
+
+
+def cost_instances(
+    *, nb_instances: int, runtime_hours: float, pricing: PricingScheme
+) -> float:
+    """Eq. (.6): leasing nbInstances for `runtime` at `price`/timeUnit."""
+    return nb_instances * pricing.compute_unit_per_hour * runtime_hours
+
+
+def cost_storage(
+    *,
+    hosted_gb: float,
+    months: float,
+    io_requests: float,
+    pricing: PricingScheme,
+) -> float:
+    """Eq. (.7): physical hosting + I/O requests."""
+    hosting = hosted_gb * pricing.storage_gb_month * months
+    io = (io_requests / 1e6) * pricing.storage_per_million_requests
+    return hosting + io
+
+
+def cost_network(
+    *,
+    inter_dc_gb: float,
+    intra_dc_gb: float,
+    pricing: PricingScheme,
+) -> float:
+    """Eq. (.8): inter- + intra-DC transfer."""
+    return (
+        inter_dc_gb * pricing.inter_dc_per_gb
+        + intra_dc_gb * pricing.intra_dc_per_gb
+    )
+
+
+def cost_all(
+    *,
+    nb_instances: int,
+    runtime_hours: float,
+    hosted_gb: float,
+    months: float,
+    io_requests: float,
+    inter_dc_gb: float,
+    intra_dc_gb: float,
+    pricing: PricingScheme = PAPER_PRICING,
+) -> CostBreakdown:
+    """Eq. (.5): the full bill for one consistency level."""
+    return CostBreakdown(
+        instances=cost_instances(
+            nb_instances=nb_instances,
+            runtime_hours=runtime_hours,
+            pricing=pricing,
+        ),
+        storage=cost_storage(
+            hosted_gb=hosted_gb,
+            months=months,
+            io_requests=io_requests,
+            pricing=pricing,
+        ),
+        network=cost_network(
+            inter_dc_gb=inter_dc_gb,
+            intra_dc_gb=intra_dc_gb,
+            pricing=pricing,
+        ),
+    )
+
+
+def training_run_cost(
+    *,
+    n_chips: int,
+    step_time_s: float,
+    n_steps: int,
+    inter_pod_bytes_per_step: float,
+    intra_pod_bytes_per_step: float,
+    ckpt_bytes: float,
+    ckpt_every: int,
+    pricing: PricingScheme = TPU_PRICING,
+) -> CostBreakdown:
+    """The paper's bill applied to a multi-pod training run.
+
+    * instances: chip-hours over the run (latency ⇒ money, §3.5.2);
+    * storage: checkpoint volume held for the run duration + one I/O
+      request per parameter-shard write;
+    * network: inter-pod collective bytes billed as inter-DC, intra-pod
+      as intra-DC (free) — this is the term X-STCC shrinks by ~Δ×.
+    """
+    runtime_hours = step_time_s * n_steps / 3600.0
+    n_ckpts = max(1, n_steps // max(1, ckpt_every))
+    return cost_all(
+        nb_instances=n_chips,
+        runtime_hours=runtime_hours,
+        hosted_gb=ckpt_bytes / 1e9,
+        months=runtime_hours / (30 * 24),
+        io_requests=float(n_ckpts) * n_chips,
+        inter_dc_gb=inter_pod_bytes_per_step * n_steps / 1e9,
+        intra_dc_gb=intra_pod_bytes_per_step * n_steps / 1e9,
+        pricing=pricing,
+    )

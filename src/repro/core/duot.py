@@ -1,0 +1,209 @@
+"""Distributed User Operations Table (DUOT) — paper §3.2.
+
+The DUOT is the globally-shared, timestamp-ordered log of client
+operations.  Every client registers each read/write with its vector clock
+before execution; all servers derive an identical view of the causal
+order from the table (the basis of the server-side timed-causal layer).
+
+We implement it as a fixed-capacity structure-of-arrays pytree so it can
+live inside jit/shard_map programs (appends are ``dynamic_update_index``,
+no reallocation).  Entries:
+
+  ``client``    int32  — user id ``U_i``
+  ``kind``      int32  — READ=0 / WRITE=1
+  ``resource``  int32  — resource id ``x``
+  ``version``   int32  — version written (W) or observed (R)
+  ``replica``   int32  — replica/server the op executed on
+  ``seq``       int32  — global arrival timestamp (linear, the table's
+                         "timed sequential" access order, paper §3.2)
+  ``vc``        int32 (cap, n_clients) — Fidge vector clock
+  ``valid``     bool   — live entry (False = empty / garbage-collected)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vector_clock as vclock
+
+Array = jax.Array
+
+READ = 0
+WRITE = 1
+
+
+class Duot(NamedTuple):
+    """Fixed-capacity distributed user operations table."""
+
+    client: Array    # (cap,) int32
+    kind: Array      # (cap,) int32
+    resource: Array  # (cap,) int32
+    version: Array   # (cap,) int32
+    replica: Array   # (cap,) int32
+    seq: Array       # (cap,) int32
+    vc: Array        # (cap, n_clients) int32
+    valid: Array     # (cap,) bool
+    size: Array      # () int32 — next free slot (monotone; wraps never)
+    next_seq: Array  # () int32 — next global timestamp
+
+    @property
+    def capacity(self) -> int:
+        return self.client.shape[0]
+
+    @property
+    def n_clients(self) -> int:
+        return self.vc.shape[1]
+
+
+def make(capacity: int, n_clients: int) -> Duot:
+    """Empty table: all logical clocks zero (paper §3.2)."""
+    return Duot(
+        client=jnp.full((capacity,), -1, dtype=jnp.int32),
+        kind=jnp.zeros((capacity,), dtype=jnp.int32),
+        resource=jnp.full((capacity,), -1, dtype=jnp.int32),
+        version=jnp.zeros((capacity,), dtype=jnp.int32),
+        replica=jnp.full((capacity,), -1, dtype=jnp.int32),
+        seq=jnp.zeros((capacity,), dtype=jnp.int32),
+        vc=jnp.zeros((capacity, n_clients), dtype=jnp.int32),
+        valid=jnp.zeros((capacity,), dtype=bool),
+        size=jnp.zeros((), dtype=jnp.int32),
+        next_seq=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def append(
+    table: Duot,
+    *,
+    client: Array | int,
+    kind: Array | int,
+    resource: Array | int,
+    version: Array | int,
+    replica: Array | int,
+    vc: Array,
+) -> Duot:
+    """Register one operation (jit-able; drops silently when full —
+    callers must garbage-collect via :func:`gc` before that happens).
+    """
+    i = table.size
+    in_range = i < table.capacity
+    iw = jnp.where(in_range, i, table.capacity - 1)
+
+    def wr(arr, val):
+        new = arr.at[iw].set(jnp.asarray(val, arr.dtype))
+        return jnp.where(in_range, new, arr)
+
+    return Duot(
+        client=wr(table.client, client),
+        kind=wr(table.kind, kind),
+        resource=wr(table.resource, resource),
+        version=wr(table.version, version),
+        replica=wr(table.replica, replica),
+        seq=wr(table.seq, table.next_seq),
+        vc=jnp.where(in_range, table.vc.at[iw].set(vc.astype(jnp.int32)), table.vc),
+        valid=jnp.where(in_range, table.valid.at[iw].set(True), table.valid),
+        size=i + jnp.where(in_range, 1, 0).astype(jnp.int32),
+        next_seq=table.next_seq + 1,
+    )
+
+
+def record(table: Duot, ops: dict[str, Array]) -> Duot:
+    """Bulk-append a batch of operations (vectorized ``append``).
+
+    ``ops`` maps field name -> (b,) arrays (plus ``vc`` -> (b, n)).
+    Entries are placed at slots ``[size, size+b)``; overflow is clamped.
+    """
+    b = ops["client"].shape[0]
+    idx = table.size + jnp.arange(b, dtype=jnp.int32)
+    ok = idx < table.capacity
+    idx = jnp.minimum(idx, table.capacity - 1)
+
+    def put(arr, val):
+        val = jnp.asarray(val, arr.dtype)
+        cur = arr[idx]
+        return arr.at[idx].set(jnp.where(ok, val, cur))
+
+    seqs = table.next_seq + jnp.arange(b, dtype=jnp.int32)
+    vc_cur = table.vc[idx]
+    okc = ok[:, None]
+    return Duot(
+        client=put(table.client, ops["client"]),
+        kind=put(table.kind, ops["kind"]),
+        resource=put(table.resource, ops["resource"]),
+        version=put(table.version, ops["version"]),
+        replica=put(table.replica, ops["replica"]),
+        seq=put(table.seq, seqs),
+        vc=table.vc.at[idx].set(jnp.where(okc, ops["vc"].astype(jnp.int32), vc_cur)),
+        valid=table.valid.at[idx].set(jnp.where(ok, True, table.valid[idx])),
+        size=jnp.minimum(
+            table.size + jnp.int32(b), jnp.int32(table.capacity)
+        ),
+        next_seq=table.next_seq + jnp.int32(b),
+    )
+
+
+def gc(table: Duot, frontier: Array) -> Duot:
+    """Garbage collection (paper §3.4.1).
+
+    Removes operations whose effects are *covered* at every replica: an
+    entry may be dropped once the global stability frontier (the
+    component-wise minimum of all replicas' applied vector clocks)
+    dominates its clock — every server has observed it, so it can no
+    longer participate in a violation.
+
+    Args:
+      frontier: ``(n_clients,)`` — min over replicas of applied clocks.
+    Returns:
+      Compacted table (live entries moved to the front, order preserved).
+    """
+    covered = jnp.logical_and(table.valid, vclock.leq(table.vc, frontier))
+    keep = jnp.logical_and(table.valid, jnp.logical_not(covered))
+    # Stable compaction: position of each kept entry = rank among kept.
+    rank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    cap = table.capacity
+    dest = jnp.where(keep, rank, cap - 1)
+
+    def compact(arr, fill):
+        out = jnp.full_like(arr, fill)
+        # Scatter kept entries to their ranks. Non-kept all collide on the
+        # last slot and are overwritten below by the validity mask anyway.
+        out = out.at[dest].set(arr)
+        n_keep = jnp.sum(keep.astype(jnp.int32))
+        idx = jnp.arange(cap)
+        live = idx < n_keep
+        if arr.ndim == 1:
+            return jnp.where(live, out, jnp.asarray(fill, arr.dtype))
+        return jnp.where(live[:, None], out, jnp.asarray(fill, arr.dtype))
+
+    n_keep = jnp.sum(keep.astype(jnp.int32))
+    return Duot(
+        client=compact(table.client, -1),
+        kind=compact(table.kind, 0),
+        resource=compact(table.resource, -1),
+        version=compact(table.version, 0),
+        replica=compact(table.replica, -1),
+        seq=compact(table.seq, 0),
+        vc=compact(table.vc, 0),
+        valid=jnp.arange(cap) < n_keep,
+        size=n_keep,
+        next_seq=table.next_seq,
+    )
+
+
+def live_mask(table: Duot) -> Array:
+    return table.valid
+
+
+def as_dict(table: Duot) -> dict[str, Array]:
+    return {
+        "client": table.client,
+        "kind": table.kind,
+        "resource": table.resource,
+        "version": table.version,
+        "replica": table.replica,
+        "seq": table.seq,
+        "vc": table.vc,
+        "valid": table.valid,
+    }

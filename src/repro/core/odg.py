@@ -1,0 +1,133 @@
+"""Operations Dependency Graph (ODG) — paper §3.4.1.
+
+The ODG is a directed graph over the operations logged in the DUOT with
+three edge kinds:
+
+  * **Timed**  — temporal priority between operations (``seq`` order on
+    the same resource);
+  * **Causal** — vector-clock happens-before between operations of the
+    same or different clients;
+  * **Data**   — read-from: a write of version v to a read returning v on
+    the same resource.
+
+The graph serves two purposes in the paper: it determines *which process
+observes which write* (driving the merge order of the server-side timed
+causal layer), and it is the structure over which the severity of
+violations is computed.  We expose it as dense boolean adjacency matrices
+(the log is bounded), plus reductions used by the benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vector_clock as vclock
+from repro.core.duot import Duot, READ, WRITE
+
+Array = jax.Array
+
+
+class Odg(NamedTuple):
+    timed: Array    # (m, m) bool — temporal priority edges
+    causal: Array   # (m, m) bool — happens-before edges
+    data: Array     # (m, m) bool — read-from edges
+    valid: Array    # (m,)  bool — live vertices
+
+
+def build(table: Duot) -> Odg:
+    """Construct the three edge sets from the DUOT."""
+    valid = table.valid
+    pair = valid[:, None] & valid[None, :]
+    same_res = table.resource[:, None] == table.resource[None, :]
+    ordered = table.seq[:, None] < table.seq[None, :]
+
+    # Timed: immediate temporal successor on the same resource.  Dense
+    # "ordered" minus transitive edges = adjacent pairs; we keep the full
+    # ordered relation and mark *adjacency* by absence of an intermediate.
+    base = pair & same_res & ordered
+    # k is between (i, j) if i<k<j in seq on the same resource.
+    si = table.seq[:, None, None]
+    sk = table.seq[None, :, None]
+    sj = table.seq[None, None, :]
+    res_ik = table.resource[:, None, None] == table.resource[None, :, None]
+    res_kj = table.resource[None, :, None] == table.resource[None, None, :]
+    vk = valid[None, :, None]
+    between = (si < sk) & (sk < sj) & res_ik & res_kj & vk
+    has_mid = jnp.any(between, axis=1)
+    timed = base & ~has_mid
+
+    causal = pair & vclock.happens_before_matrix(table.vc)
+
+    ki = table.kind[:, None]
+    kj = table.kind[None, :]
+    same_version = table.version[:, None] == table.version[None, :]
+    data = base & (ki == WRITE) & (kj == READ) & same_version
+
+    return Odg(timed=timed, causal=causal, data=data, valid=valid)
+
+
+def reachability(adj: Array, iters: int | None = None) -> Array:
+    """Transitive closure by repeated boolean matmul squaring."""
+    m = adj.shape[0]
+    steps = iters if iters is not None else max(1, (m - 1).bit_length())
+    reach = adj
+
+    def body(_, r):
+        nxt = jnp.logical_or(r, (r.astype(jnp.int32) @ r.astype(jnp.int32)) > 0)
+        return nxt
+
+    return jax.lax.fori_loop(0, steps, body, reach)
+
+
+def dependency_closure(odg: Odg) -> Array:
+    """All-edges transitive closure — the paper's 'which operation is
+    related to other operations' relation used for the merge order."""
+    union = odg.timed | odg.causal | odg.data
+    return reachability(union)
+
+
+def observation_frontier(table: Duot, odg: Odg) -> Array:
+    """For each write w, the clients that have *observed* it — i.e. there
+    is a data edge w -> r for a read r of that client.  Used by DUOT GC:
+    a write covered by every client's frontier is collectable."""
+    n = table.n_clients
+    obs = jnp.zeros((table.capacity, n), dtype=bool)
+    # data[i, j]: write i read by j's client.
+    reader = jax.nn.one_hot(table.client, n, dtype=bool)  # (m, n)
+    obs = (odg.data[:, :, None] & reader[None, :, :]).any(axis=1)
+    # A write trivially observes itself at its own client.
+    is_write = table.kind == WRITE
+    self_obs = jax.nn.one_hot(table.client, n, dtype=bool) & is_write[:, None]
+    return obs | self_obs
+
+
+def edge_counts(odg: Odg) -> dict[str, Array]:
+    return {
+        "timed": jnp.sum(odg.timed.astype(jnp.int32)),
+        "causal": jnp.sum(odg.causal.astype(jnp.int32)),
+        "data": jnp.sum(odg.data.astype(jnp.int32)),
+    }
+
+
+def severity_from_odg(
+    odg: Odg, violation: Array, *, w_timed=1.0, w_causal=2.0, w_data=3.0
+) -> Array:
+    """Paper's severity metric over ODG edges.
+
+    ``violation`` is the (m, m) pair-violation matrix from the audit; an
+    edge contributes its weight if its endpoint pair is violated."""
+    num = (
+        w_data * jnp.sum((odg.data & violation).astype(jnp.float32))
+        + w_causal * jnp.sum((odg.causal & violation & ~odg.data).astype(jnp.float32))
+        + w_timed
+        * jnp.sum((odg.timed & violation & ~odg.causal & ~odg.data).astype(jnp.float32))
+    )
+    den = (
+        w_data * jnp.sum(odg.data.astype(jnp.float32))
+        + w_causal * jnp.sum((odg.causal & ~odg.data).astype(jnp.float32))
+        + w_timed * jnp.sum((odg.timed & ~odg.causal & ~odg.data).astype(jnp.float32))
+    )
+    return num / jnp.maximum(den, 1.0)

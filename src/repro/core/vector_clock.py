@@ -1,0 +1,103 @@
+"""Fidge/Mattern vector clocks, vectorized in JAX.
+
+The paper (§3.2) stamps every operation in the DUOT with an N-client
+logical clock vector ``<LC_1, ..., LC_N>`` [Fidge 1987].  All causal
+reasoning in X-STCC (happens-before, concurrency, merge order) reduces to
+component-wise comparisons of these vectors, so we keep them as plain
+``int32`` arrays of shape ``(n_clients,)`` (or batched ``(..., n_clients)``)
+and expose the partial-order algebra as jit-able functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def zeros(n_clients: int) -> Array:
+    """Initial clock: no operation has been performed (paper §3.2)."""
+    return jnp.zeros((n_clients,), dtype=jnp.int32)
+
+
+def tick(vc: Array, client: Array | int) -> Array:
+    """Advance ``client``'s component by one (a local event)."""
+    client = jnp.asarray(client, dtype=jnp.int32)
+    return vc.at[client].add(1)
+
+
+def merge(a: Array, b: Array) -> Array:
+    """Join of two clocks: component-wise max.
+
+    ``merge`` is the least upper bound in the vector-clock lattice; the
+    receive rule is ``tick(merge(local, incoming), self)``.
+    """
+    return jnp.maximum(a, b)
+
+
+def receive(local: Array, incoming: Array, client: Array | int) -> Array:
+    """Message-receive rule: join then tick own component."""
+    return tick(merge(local, incoming), client)
+
+
+def leq(a: Array, b: Array) -> Array:
+    """``a <= b`` in the partial order: every component <=."""
+    return jnp.all(a <= b, axis=-1)
+
+
+def dominates(a: Array, b: Array) -> Array:
+    """Strict happens-before ``a -> b``: a <= b and a != b.
+
+    Paper §3.3: causality between operations, ``O1 ~> O2``.
+    """
+    return jnp.logical_and(leq(a, b), jnp.any(a < b, axis=-1))
+
+
+def concurrent(a: Array, b: Array) -> Array:
+    """``a || b``: neither dominates (paper: operations executed at the
+    same time; no causality)."""
+    return jnp.logical_and(
+        jnp.logical_not(dominates(a, b)), jnp.logical_not(dominates(b, a))
+    )
+
+
+def happens_before_matrix(vcs: Array) -> Array:
+    """Dense pairwise happens-before over a batch of clocks.
+
+    Args:
+      vcs: ``(m, n_clients)`` int32.
+    Returns:
+      ``(m, m)`` bool where ``out[i, j]`` iff ``vcs[i] -> vcs[j]``.
+
+    This is the O(m^2 * n) audit hot-spot; ``repro.kernels.vclock_audit``
+    provides the tiled Pallas equivalent for large logs.
+    """
+    a = vcs[:, None, :]  # (m, 1, n)
+    b = vcs[None, :, :]  # (1, m, n)
+    le = jnp.all(a <= b, axis=-1)
+    lt = jnp.any(a < b, axis=-1)
+    return jnp.logical_and(le, lt)
+
+
+def concurrency_matrix(vcs: Array) -> Array:
+    """Pairwise concurrency (off-diagonal; diagonal is False)."""
+    hb = happens_before_matrix(vcs)
+    conc = jnp.logical_not(jnp.logical_or(hb, hb.T))
+    m = vcs.shape[0]
+    return jnp.logical_and(conc, ~jnp.eye(m, dtype=bool))
+
+
+def total_order_key(vcs: Array, clients: Array) -> Array:
+    """Deterministic linear extension of the causal order.
+
+    X-STCC requires *all servers to have the same view* of the execution
+    order (paper §1, §3.2).  Concurrent operations are tie-broken by
+    (clock sum, client id) — a last-writer-wins rule applied identically
+    at every replica, so the extension is unique and causal: if
+    ``a -> b`` then sum(a) < sum(b) component-wise sums strictly increase
+    along happens-before edges.
+    """
+    sums = jnp.sum(vcs, axis=-1, dtype=jnp.int32)
+    n_clients = vcs.shape[-1]
+    return sums * jnp.int32(n_clients + 1) + clients.astype(jnp.int32)

@@ -1,0 +1,267 @@
+"""X-STCC protocol engine — paper §3.4 (the proposed method).
+
+A functional state machine over ``(clients × replicas × resources)``:
+
+  * **server side** — every replica applies writes in the deterministic
+    causal linear extension derived from DUOT vector clocks (timed causal:
+    propagation bounded by Δ); all replicas share one view of the order.
+  * **client side** — per-session floors enforce the four guarantees:
+      MR  : a session's reads never return a version below its read floor;
+      RYW : ... nor below its own-write floor;
+      MW  : a session's writes are applied everywhere in issue order
+            (guaranteed by the causal extension: same-client writes are
+            totally ordered by the session's own clock component);
+      WFR : a session's write is ordered after every write whose value
+            the session has read (its clock dominates those writes').
+
+The same engine backs three layers of the framework:
+``repro.storage.simulator`` (keys = user table rows — the paper's own
+evaluation), ``repro.sync.engine`` (single resource = the parameter
+vector; replicas = pods), and ``repro.serve.engine`` (resources = model
+snapshots; sessions = request streams).
+
+Everything is fixed-shape jnp so it can run under jit/vmap in property
+tests and inside the training step.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vector_clock as vclock
+from repro.core.consistency import ConsistencyLevel
+
+Array = jax.Array
+
+
+class ClusterState(NamedTuple):
+    """Replicated-store state.
+
+    P replicas, C clients/sessions, R resources."""
+
+    replica_version: Array   # (P, R) int32 — applied version per resource
+    replica_vc: Array        # (P, C) int32 — applied vector clock
+    session_vc: Array        # (C, C) int32 — each session's clock
+    read_floor: Array        # (C, R) int32 — MR floor
+    write_floor: Array       # (C, R) int32 — RYW floor
+    global_version: Array    # (R,) int32 — latest committed version
+    # Pending writes ring (bounded): writes committed but not yet applied
+    # everywhere. Slots cycle; capacity bounds in-flight writes.
+    pend_client: Array       # (Q,) int32
+    pend_resource: Array     # (Q,) int32
+    pend_version: Array      # (Q,) int32
+    pend_vc: Array           # (Q, C) int32
+    pend_coord: Array        # (Q,) int32  — coordinator replica
+    pend_time: Array         # (Q,) int32  — commit step
+    pend_live: Array         # (Q,) bool
+    pend_applied: Array      # (Q, P) bool — applied at replica p?
+    clock: Array             # () int32 — logical step counter
+
+
+def make_cluster(
+    n_replicas: int, n_clients: int, n_resources: int, pending_cap: int = 128
+) -> ClusterState:
+    P, C, R, Q = n_replicas, n_clients, n_resources, pending_cap
+    return ClusterState(
+        replica_version=jnp.zeros((P, R), jnp.int32),
+        replica_vc=jnp.zeros((P, C), jnp.int32),
+        session_vc=jnp.zeros((C, C), jnp.int32),
+        read_floor=jnp.zeros((C, R), jnp.int32),
+        write_floor=jnp.zeros((C, R), jnp.int32),
+        global_version=jnp.zeros((R,), jnp.int32),
+        pend_client=jnp.full((Q,), -1, jnp.int32),
+        pend_resource=jnp.full((Q,), -1, jnp.int32),
+        pend_version=jnp.zeros((Q,), jnp.int32),
+        pend_vc=jnp.zeros((Q, C), jnp.int32),
+        pend_coord=jnp.full((Q,), -1, jnp.int32),
+        pend_time=jnp.zeros((Q,), jnp.int32),
+        pend_live=jnp.zeros((Q,), bool),
+        pend_applied=jnp.zeros((Q, P), bool),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+class WriteResult(NamedTuple):
+    state: ClusterState
+    version: Array  # version created
+    vc: Array       # clock stamped on the op
+
+
+def client_write(
+    state: ClusterState,
+    *,
+    client: Array | int,
+    replica: Array | int,
+    resource: Array | int,
+) -> WriteResult:
+    """Commit a write at its coordinator replica; enqueue propagation.
+
+    The write's clock is ``tick(merge(session, replica_view), client)`` —
+    it therefore dominates every write the session has read (WFR) and the
+    session's own previous writes (MW).
+    """
+    c = jnp.asarray(client, jnp.int32)
+    p = jnp.asarray(replica, jnp.int32)
+    r = jnp.asarray(resource, jnp.int32)
+
+    svc = vclock.receive(state.session_vc[c], state.replica_vc[p], c)
+    ver = state.global_version[r] + 1
+
+    # Apply at coordinator immediately (local write, T ≈ 0).
+    replica_version = state.replica_version.at[p, r].max(ver)
+    replica_vc = state.replica_vc.at[p].set(
+        vclock.merge(state.replica_vc[p], svc)
+    )
+
+    # Enqueue for propagation: next free pending slot (LRU overwrite of
+    # fully-applied slots; capacity pressure surfaces in tests).
+    free = jnp.logical_not(state.pend_live)
+    slot = jnp.argmax(free)  # first free; if none, slot 0 is recycled
+    q = slot.astype(jnp.int32)
+    applied0 = jnp.zeros((state.pend_applied.shape[1],), bool).at[p].set(True)
+
+    new = state._replace(
+        replica_version=replica_version,
+        replica_vc=replica_vc,
+        session_vc=state.session_vc.at[c].set(svc),
+        write_floor=state.write_floor.at[c, r].max(ver),
+        read_floor=state.read_floor.at[c, r].max(ver),
+        global_version=state.global_version.at[r].set(ver),
+        pend_client=state.pend_client.at[q].set(c),
+        pend_resource=state.pend_resource.at[q].set(r),
+        pend_version=state.pend_version.at[q].set(ver),
+        pend_vc=state.pend_vc.at[q].set(svc),
+        pend_coord=state.pend_coord.at[q].set(p),
+        pend_time=state.pend_time.at[q].set(state.clock),
+        pend_live=state.pend_live.at[q].set(True),
+        pend_applied=state.pend_applied.at[q].set(applied0),
+        clock=state.clock + 1,
+    )
+    return WriteResult(state=new, version=ver, vc=svc)
+
+
+class ReadResult(NamedTuple):
+    state: ClusterState
+    version: Array      # version returned
+    admissible: Array   # bool — replica satisfied the session floors
+    stale: Array        # bool — returned < globally-latest version
+    violation: Array    # bool — a session guarantee was actually violated
+
+
+def client_read(
+    state: ClusterState,
+    *,
+    client: Array | int,
+    replica: Array | int,
+    resource: Array | int,
+    enforce_sessions: bool | Array = True,
+) -> ReadResult:
+    """Serve a read at ``replica`` for ``client``.
+
+    Under X-STCC (``enforce_sessions=True``) an inadmissible replica
+    (below the session floors) is *repaired before serving*: the engine
+    waits for / fetches the missing version — modeled as serving
+    ``max(replica_version, floors)``, which is exactly what rerouting to
+    an admissible replica returns.  Weaker levels serve the raw replica
+    value and may violate MR/RYW.
+    """
+    c = jnp.asarray(client, jnp.int32)
+    p = jnp.asarray(replica, jnp.int32)
+    r = jnp.asarray(resource, jnp.int32)
+
+    raw = state.replica_version[p, r]
+    floor = jnp.maximum(state.read_floor[c, r], state.write_floor[c, r])
+    admissible = raw >= floor
+    enforce = jnp.asarray(enforce_sessions, bool)
+    served = jnp.where(enforce, jnp.maximum(raw, floor), raw)
+    violation = jnp.logical_and(jnp.logical_not(enforce),
+                                jnp.logical_not(admissible))
+    stale = served < state.global_version[r]
+
+    svc = vclock.receive(state.session_vc[c], state.replica_vc[p], c)
+    new = state._replace(
+        session_vc=state.session_vc.at[c].set(svc),
+        read_floor=state.read_floor.at[c, r].max(served),
+        clock=state.clock + 1,
+    )
+    return ReadResult(
+        state=new, version=served, admissible=admissible, stale=stale,
+        violation=violation,
+    )
+
+
+def server_merge(
+    state: ClusterState,
+    *,
+    delta: Array | int,
+    level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+) -> tuple[ClusterState, Array]:
+    """Timed-causal propagation step (server side).
+
+    Applies, at every replica, all pending writes that (a) are older than
+    Δ, or (b) whose causal predecessors are already applied — in the
+    deterministic linear extension (clock-sum, client) order.  Because
+    application is in causal order at every replica, all servers share
+    one view (paper: "all servers have the same view of the causality
+    relations").
+
+    Returns (state, n_applied).
+    """
+    del level  # the order is identical; levels differ in *when* merge runs
+    d = jnp.asarray(delta, jnp.int32)
+    Q, P = state.pend_applied.shape
+
+    due = jnp.logical_and(
+        state.pend_live, (state.clock - state.pend_time) >= 0
+    )
+    overdue = jnp.logical_and(
+        state.pend_live, (state.clock - state.pend_time) >= d
+    )
+    # Apply in the deterministic causal extension: sort by LWW key.
+    key = vclock.total_order_key(state.pend_vc, state.pend_client)
+    key = jnp.where(due, key, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key)
+
+    def apply_one(carry, qi):
+        rv, rvc, applied, n = carry
+        live = state.pend_live[qi]
+        must = overdue[qi]
+        # A write is applicable at all replicas once its causal deps are
+        # stable: its vc (minus its own tick) ≤ the replica's vc.
+        dep_vc = state.pend_vc[qi].at[state.pend_client[qi]].add(-1)
+        deps_ok = jnp.all(dep_vc[None, :] <= rvc, axis=1)  # (P,)
+        do = jnp.logical_and(live, jnp.logical_or(must, jnp.all(deps_ok)))
+        r = state.pend_resource[qi]
+        ver = state.pend_version[qi]
+        rv2 = jnp.where(do, rv.at[:, r].max(ver), rv)
+        rvc2 = jnp.where(
+            do, jnp.maximum(rvc, state.pend_vc[qi][None, :]), rvc
+        )
+        applied2 = applied.at[qi].set(
+            jnp.where(do, jnp.ones((P,), bool), applied[qi])
+        )
+        return (rv2, rvc2, applied2, n + do.astype(jnp.int32)), None
+
+    (rv, rvc, applied, n_applied), _ = jax.lax.scan(
+        apply_one,
+        (state.replica_version, state.replica_vc, state.pend_applied,
+         jnp.zeros((), jnp.int32)),
+        order,
+    )
+    fully = jnp.all(applied, axis=1)
+    new = state._replace(
+        replica_version=rv,
+        replica_vc=rvc,
+        pend_applied=applied,
+        pend_live=jnp.logical_and(state.pend_live, jnp.logical_not(fully)),
+        clock=state.clock + 1,
+    )
+    return new, n_applied
+
+
+def stability_frontier(state: ClusterState) -> Array:
+    """Component-wise min of replica clocks — DUOT GC frontier."""
+    return jnp.min(state.replica_vc, axis=0)

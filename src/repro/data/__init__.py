@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, batch_at, extra_inputs
+
+__all__ = ["DataConfig", "batch_at", "extra_inputs"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (+ jnp oracles) for the framework's hot-spots:
+
+  flash_attention — prefill/train attention (MXU-tiled online softmax).
+  vclock_audit    — DUOT pairwise causality audit (paper §3.3).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,97 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On a TPU runtime the kernels compile natively; on CPU (this container,
+CI) they run in interpret mode — same code path, Python-executed kernel
+body — which is how the correctness sweeps in ``tests/test_kernels.py``
+validate them against the ``ref.py`` oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import vclock_audit as _va
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    layout: str = "bshd",
+    interpret: bool | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """GQA flash attention.
+
+    layout 'bshd': q (B, S, H, hd), k/v (B, T, Hkv, hd) — the model
+    substrate's layout; internally transposed to the kernel's (B, H, S,
+    hd).  layout 'bhsd': already kernel-native.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    if layout == "bshd":
+        q = jnp.swapaxes(q, 1, 2)
+        k = jnp.swapaxes(k, 1, 2)
+        v = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    if layout == "bshd":
+        out = jnp.swapaxes(out, 1, 2)
+    return out
+
+
+def audit_duot(duot, *, delta: int = 0, block: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """Run the Pallas audit over a ``repro.core.duot.Duot``.
+
+    Returns the (M, M) packed code matrix (phase | viol<<8 | timed<<9).
+    The log is padded to a block multiple with invalid entries."""
+    interpret = _on_cpu() if interpret is None else interpret
+    m = duot.capacity
+    pad = (-m) % block
+    def p(x, fill=0):
+        if pad == 0:
+            return x
+        width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, width, constant_values=fill)
+
+    return _va.vclock_audit(
+        p(duot.vc),
+        p(duot.client, -1),
+        p(duot.kind),
+        p(duot.resource, -1),
+        p(duot.version),
+        p(duot.seq),
+        p(duot.valid, False),
+        delta=delta,
+        block=block,
+        interpret=interpret,
+    )[: m, : m]
+
+
+def audit_summary(codes: jax.Array) -> dict[str, jax.Array]:
+    """Counts from the packed code matrix."""
+    phase = codes & 0xFF
+    viol = (codes >> 8) & 1
+    timed = (codes >> 9) & 1
+    return {
+        "n_audited": jnp.sum((phase > 0).astype(jnp.int32)),
+        "n_violations": jnp.sum(viol) + jnp.sum(timed),
+        "by_phase": jnp.stack(
+            [jnp.sum(((phase == c) & (viol > 0)).astype(jnp.int32))
+             for c in range(1, 6)]
+        ),
+    }

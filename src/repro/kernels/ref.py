@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined HERE; the Pallas
+implementations must match these to float tolerance (tests sweep shapes
+and dtypes with ``assert_allclose``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softmax_scale: float | None = None,
+) -> Array:
+    """Reference attention.
+
+    q: (B, H, S, hd); k/v: (B, Hkv, T, hd) with H % Hkv == 0.
+    Returns (B, H, S, hd), computed in f32, cast back to q.dtype.
+    """
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = (hd ** -0.5) if softmax_scale is None else softmax_scale
+
+    qg = q.reshape(b, hkv, g, s, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) * scale
+    t = k.shape[2]
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        mask = kpos <= qpos
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", weights, vf)
+    return out.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def vclock_audit_ref(
+    vc: Array,        # (M, N) int32 vector clocks
+    client: Array,    # (M,) int32
+    kind: Array,      # (M,) int32 (0=read, 1=write)
+    resource: Array,  # (M,) int32
+    version: Array,   # (M,) int32
+    seq: Array,       # (M,) int32 arrival timestamps
+    valid: Array,     # (M,) bool
+    *,
+    delta: int = 0,
+) -> Array:
+    """Reference pairwise audit (paper eq. 1a-1d + timed bound).
+
+    Returns (M, M) int32 codes: ``phase | violation << 8 | timed << 9``
+    where phase follows repro.core.audit.PHASE_* (0..6).
+    """
+    m = vc.shape[0]
+    a = vc[:, None, :]
+    b_ = vc[None, :, :]
+    le = jnp.all(a <= b_, axis=-1)
+    lt = jnp.any(a < b_, axis=-1)
+    hb = jnp.logical_and(le, lt)
+
+    pair_valid = valid[:, None] & valid[None, :]
+    same_res = resource[:, None] == resource[None, :]
+    ordered = seq[:, None] < seq[None, :]
+    same_client = client[:, None] == client[None, :]
+    base = pair_valid & same_res & ordered
+    ki = kind[:, None]
+    kj = kind[None, :]
+    vi = version[:, None]
+    vj = version[None, :]
+
+    phase = jnp.zeros((m, m), jnp.int32)
+    sc = base & same_client & hb
+    phase = jnp.where(sc & (ki == 0) & (kj == 0), 1, phase)   # a1 MR
+    phase = jnp.where(sc & (ki == 1) & (kj == 1), 2, phase)   # a2 MW
+    phase = jnp.where(sc & (ki == 1) & (kj == 0), 3, phase)   # a3 RYW
+    phase = jnp.where(sc & (ki == 0) & (kj == 1), 4, phase)   # a4 WFR
+    phase = jnp.where(base & ~same_client & hb, 5, phase)     # b1 TCC
+    phase = jnp.where(base & ~hb, 6, phase)                   # b2 conc
+
+    viol = jnp.zeros((m, m), bool)
+    viol |= (phase == 1) & (vj < vi)
+    viol |= (phase == 2) & (vj <= vi)
+    viol |= (phase == 3) & (vj < vi)
+    viol |= (phase == 4) & (vj <= vi)
+    viol |= (phase == 5) & (ki == 1) & (kj == 0) & (vj < vi)
+
+    gap = seq[None, :] - seq[:, None]
+    timed = (
+        (delta > 0) & base & (ki == 1) & (kj == 0) & (gap > delta) & (vj < vi)
+    )
+    return phase | (viol.astype(jnp.int32) << 8) | (timed.astype(jnp.int32) << 9)

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel for the DUOT causality audit (paper §3.3-3.4).
+
+The audit is O(M^2 * N) vector-clock comparisons over an M-entry op log
+with N clients — the server-side hot-spot of X-STCC (every merge audits
+the log; Cassandra-scale logs run to millions of ops).  The kernel tiles
+the (M x M) pair space into (block x block) VMEM tiles; the N clock
+components are reduced with an unrolled 2-D loop (max/min of component
+differences), keeping every intermediate a (block x block) tile — TPU
+vector-unit friendly, no 3-D temporaries.
+
+happens-before(a, b)  <=>  max_n(a_n - b_n) <= 0  and  min_n(a_n - b_n) < 0
+
+Output codes match ``repro.kernels.ref.vclock_audit_ref``:
+``phase | violation << 8 | timed << 9``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# meta columns
+CLIENT, KIND, RESOURCE, VERSION, SEQ, VALID = 0, 1, 2, 3, 4, 5
+META_COLS = 8
+
+
+def _audit_kernel(vci_ref, vcj_ref, mi_ref, mj_ref, out_ref,
+                  *, n_clients: int, delta: int):
+    vci = vci_ref[...]          # (bm, N)
+    vcj = vcj_ref[...]          # (bm, N)
+    mi = mi_ref[...]            # (bm, META_COLS)
+    mj = mj_ref[...]            # (bm, META_COLS)
+    bm = vci.shape[0]
+
+    big = jnp.int32(-(2 ** 30))
+    maxd = jnp.full((bm, bm), big, jnp.int32)
+    mind = jnp.full((bm, bm), -big, jnp.int32)
+    for n in range(n_clients):
+        diff = vci[:, n][:, None] - vcj[:, n][None, :]
+        maxd = jnp.maximum(maxd, diff)
+        mind = jnp.minimum(mind, diff)
+    hb = jnp.logical_and(maxd <= 0, mind < 0)
+
+    def col(m, c):
+        return m[:, c]
+
+    valid = jnp.logical_and(
+        col(mi, VALID)[:, None] > 0, col(mj, VALID)[None, :] > 0)
+    same_res = col(mi, RESOURCE)[:, None] == col(mj, RESOURCE)[None, :]
+    ordered = col(mi, SEQ)[:, None] < col(mj, SEQ)[None, :]
+    same_client = col(mi, CLIENT)[:, None] == col(mj, CLIENT)[None, :]
+    ki = col(mi, KIND)[:, None]
+    kj = col(mj, KIND)[None, :]
+    vi = col(mi, VERSION)[:, None]
+    vj = col(mj, VERSION)[None, :]
+
+    base = valid & same_res & ordered
+    sc = base & same_client & hb
+
+    phase = jnp.zeros((bm, bm), jnp.int32)
+    phase = jnp.where(sc & (ki == 0) & (kj == 0), 1, phase)
+    phase = jnp.where(sc & (ki == 1) & (kj == 1), 2, phase)
+    phase = jnp.where(sc & (ki == 1) & (kj == 0), 3, phase)
+    phase = jnp.where(sc & (ki == 0) & (kj == 1), 4, phase)
+    phase = jnp.where(base & ~same_client & hb, 5, phase)
+    phase = jnp.where(base & ~hb, 6, phase)
+
+    viol = jnp.zeros((bm, bm), bool)
+    viol |= (phase == 1) & (vj < vi)
+    viol |= (phase == 2) & (vj <= vi)
+    viol |= (phase == 3) & (vj < vi)
+    viol |= (phase == 4) & (vj <= vi)
+    viol |= (phase == 5) & (ki == 1) & (kj == 0) & (vj < vi)
+
+    gap = col(mj, SEQ)[None, :] - col(mi, SEQ)[:, None]
+    timed = base & (ki == 1) & (kj == 0) & (vj < vi) & (gap > delta)
+    if delta <= 0:
+        timed = jnp.zeros_like(timed)
+
+    out_ref[...] = (
+        phase
+        | (viol.astype(jnp.int32) << 8)
+        | (timed.astype(jnp.int32) << 9)
+    )
+
+
+def vclock_audit(
+    vc: jax.Array,       # (M, N) int32
+    client: jax.Array,   # (M,) int32
+    kind: jax.Array,
+    resource: jax.Array,
+    version: jax.Array,
+    seq: jax.Array,
+    valid: jax.Array,    # (M,) bool
+    *,
+    delta: int = 0,
+    block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tiled pairwise audit.  Returns (M, M) int32 codes."""
+    m, n = vc.shape
+    block = min(block, m)
+    assert m % block == 0, f"M={m} must divide block={block}"
+    meta = jnp.stack(
+        [
+            client.astype(jnp.int32),
+            kind.astype(jnp.int32),
+            resource.astype(jnp.int32),
+            version.astype(jnp.int32),
+            seq.astype(jnp.int32),
+            valid.astype(jnp.int32),
+            jnp.zeros((m,), jnp.int32),
+            jnp.zeros((m,), jnp.int32),
+        ],
+        axis=1,
+    )  # (M, META_COLS)
+
+    kernel = functools.partial(_audit_kernel, n_clients=n, delta=delta)
+    nb = m // block
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, META_COLS), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, META_COLS), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(vc, vc, meta, meta)

@@ -1,0 +1,275 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs          / (chips x 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes_accessed / (chips x 819e9  B/s HBM)
+  collective = collective_bytes   / (chips x 50e9   B/s ICI)
+
+``compiled.cost_analysis()`` reports *per-device* FLOPs/bytes of the
+partitioned program, so chips x per-device = total, and the per-device
+form divides out: compute_term = flops_per_device / 197e12.  Collective
+bytes are NOT in cost_analysis — we parse the post-optimization HLO and
+sum wire traffic per collective op (ring cost model), classifying each
+op intra-pod vs inter-pod from its replica groups (the paper's
+intra-DC/inter-DC split).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per chip (link bandwidth)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(?P<dtype>\w+)\[(?P<shape>[\d,]*)\][^=]*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(",
+)
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(?P<ng>\d+),(?P<gs>\d+)\]<=\[(?P<dims>[\d,]+)\]"
+    r"(?:T\((?P<perm>[\d,]+)\))?"
+)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(?P<body>[^}]*(?:\},\{[^}]*)*)\}\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(?P<body>[^}]*(?:\},\{[^}]*)*)\}\}")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int      # per-device result size
+    group_size: int
+    n_groups: int
+    spans_pods: bool
+    wire_bytes: float      # total traffic across the whole system
+
+
+def _parse_groups(line: str, pod_size: int | None):
+    """Returns (group_size, n_groups, spans_pods)."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, gs = int(m.group("ng")), int(m.group("gs"))
+        dims = [int(x) for x in m.group("dims").split(",")]
+        n = int(np.prod(dims))
+        ids = np.arange(n).reshape(dims)
+        if m.group("perm"):
+            perm = [int(x) for x in m.group("perm").split(",")]
+            ids = np.transpose(ids, perm)
+        groups = ids.reshape(ng, gs)
+        spans = False
+        if pod_size:
+            pods = groups // pod_size
+            spans = bool(np.any(pods != pods[:, :1]))
+        return gs, ng, spans
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        body = m.group("body")
+        groups = [
+            [int(x) for x in g.split(",") if x.strip() != ""]
+            for g in body.replace("},{", "|").strip("{}").split("|")
+        ]
+        gs = max(len(g) for g in groups)
+        spans = False
+        if pod_size:
+            for g in groups:
+                if len({d // pod_size for d in g}) > 1:
+                    spans = True
+                    break
+        return gs, len(groups), spans
+    return 1, 1, False
+
+
+def _ring_wire_bytes(kind: str, result_bytes: int, gs: int, ng: int) -> float:
+    """Total bytes on the wire (sum over devices of bytes sent), ring
+    algorithms; `result_bytes` is the per-device result size."""
+    if gs <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (gs - 1) * result_bytes * ng
+    if kind == "all-gather":
+        return (gs - 1) * result_bytes * ng
+    if kind == "reduce-scatter":
+        return gs * (gs - 1) * result_bytes * ng
+    if kind == "all-to-all":
+        return (gs - 1) * result_bytes * ng
+    if kind == "collective-permute":
+        return result_bytes * gs * ng
+    return 0.0
+
+
+def _parse_permute_pairs(line: str, pod_size: int | None):
+    """collective-permute: (n_pairs, spans_pods) from source_target_pairs."""
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return 0, False
+    pairs = [
+        [int(x) for x in g.split(",") if x.strip() != ""]
+        for g in m.group("body").replace("},{", "|").strip("{}").split("|")
+    ]
+    spans = False
+    if pod_size:
+        spans = any(len(p) == 2 and p[0] // pod_size != p[1] // pod_size
+                    for p in pairs)
+    return len(pairs), spans
+
+
+def parse_collectives(hlo_text: str, *, pod_size: int | None = None
+                      ) -> list[CollectiveOp]:
+    out = []
+    for line in hlo_text.splitlines():
+        if "replica_groups" not in line and "source_target_pairs" not in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        # Skip the companion -done ops (the -start carries the shape).
+        if re.search(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)-done", line):
+            continue
+        dtype = m.group("dtype")
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = m.group("shape")
+        numel = 1
+        if shape:
+            for d in shape.split(","):
+                if d:
+                    numel *= int(d)
+        rbytes = numel * _DTYPE_BYTES[dtype]
+        kind = m.group("op")
+        if kind == "collective-permute":
+            n_pairs, spans = _parse_permute_pairs(line, pod_size)
+            # Every pair moves one per-device buffer: wire = bytes x pairs.
+            out.append(
+                CollectiveOp(
+                    kind=kind, result_bytes=rbytes, group_size=2,
+                    n_groups=n_pairs, spans_pods=spans,
+                    wire_bytes=float(rbytes) * max(n_pairs, 1),
+                )
+            )
+            continue
+        gs, ng, spans = _parse_groups(line, pod_size)
+        out.append(
+            CollectiveOp(
+                kind=kind,
+                result_bytes=rbytes,
+                group_size=gs,
+                n_groups=ng,
+                spans_pods=spans,
+                wire_bytes=_ring_wire_bytes(kind, rbytes, gs, ng),
+            )
+        )
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_total: float
+    inter_pod_bytes: float
+    intra_pod_bytes: float
+    n_chips: int
+    model_flops: float = 0.0      # 6·N·D (or 6·N_active·D) for the shape
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_total / (self.n_chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate: max of the three terms (perfect
+        overlap assumption — the optimistic bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — remat/redundancy waste probe."""
+        total = self.flops_per_device * self.n_chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (chips x peak x step_time) — roofline fraction."""
+        denom = self.n_chips * PEAK_FLOPS * self.step_time_s
+        return self.model_flops / denom if denom > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_total": self.collective_bytes_total,
+            "inter_pod_bytes": self.inter_pod_bytes,
+            "intra_pod_bytes": self.intra_pod_bytes,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu": self.mfu,
+        }
+
+
+def analyze(compiled, *, n_chips: int, pod_size: int | None = None,
+            model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text(), pod_size=pod_size)
+    total = sum(c.wire_bytes for c in colls)
+    inter = sum(c.wire_bytes for c in colls if c.spans_pods)
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_total=total,
+        inter_pod_bytes=inter,
+        intra_pod_bytes=total - inter,
+        n_chips=n_chips,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for inference; N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

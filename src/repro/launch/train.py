@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Production entry point: picks the arch config, builds the mesh (or runs
+host-local for reduced configs), wires the consistency policy, the
+replicated checkpoint store and the failure detector, and runs the loop.
+
+On this CPU container only reduced configs actually execute; full
+configs go through ``--dry-run`` (which defers to repro.launch.dryrun).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
+        --steps 50 --policy X_STCC --pods 2
+"""
+
+import argparse
+import dataclasses
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--policy", default="X_STCC")
+    ap.add_argument("--delta", type=int, default=8)
+    ap.add_argument("--compress", default="none")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import subprocess
+
+        return subprocess.call([
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", args.arch, "--shape", "train_4k", "--mesh", "both",
+            "--policy", args.policy, "--delta", str(args.delta),
+            "--compress", args.compress,
+        ])
+
+    from repro.checkpoint import CheckpointStore, SessionToken
+    from repro.configs import get_config, reduced
+    from repro.core import ConsistencyLevel, policy_for
+    from repro.data import DataConfig
+    from repro.optim import AdamWConfig
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    else:
+        print("full config on CPU is impractical; pass --reduced or "
+              "--dry-run", file=sys.stderr)
+        return 2
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=min(10, args.steps // 5 + 1),
+                      total_steps=args.steps)
+    policy = policy_for(args.policy, delta_steps=args.delta,
+                        compress_inter_pod=args.compress)
+    store = session = None
+    if args.ckpt_dir:
+        store = CheckpointStore(args.ckpt_dir, n_replicas=3,
+                                level=ConsistencyLevel.X_STCC)
+        session = SessionToken(client_id=0)
+    trainer = Trainer(
+        cfg, data, opt, policy,
+        TrainerConfig(n_steps=args.steps, n_pods=args.pods,
+                      log_every=max(1, args.steps // 10),
+                      ckpt_every=args.ckpt_every),
+        ckpt_store=store, ckpt_session=session)
+    trainer.run()
+    for h in trainer.history:
+        print(h)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

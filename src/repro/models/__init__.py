@@ -1,0 +1,5 @@
+"""Model substrate: all assigned architecture families in pure JAX."""
+
+from repro.models.model_zoo import Model, abstract_params, build_model
+
+__all__ = ["Model", "abstract_params", "build_model"]

@@ -1,0 +1,454 @@
+"""GQA attention: training, prefill, and decode (with sharded KV cache).
+
+Decode supports two communication strategies (the §Perf hillclimb
+surface for decode shapes):
+
+  * ``xla``          — plain jnp ops + sharding constraints; XLA SPMD
+    chooses the collectives (baseline: it all-gathers the KV cache when
+    kv-heads cannot shard over the model axis).
+  * ``lse_shardmap`` — the KV cache stays sequence-sharded over the
+    'model' axis; each shard computes a partial flash-decode (local max /
+    sum-exp / weighted values) and the shards combine with a tiny
+    log-sum-exp ``psum`` — O(B·H·hd) bytes instead of O(B·S·Hkv·hd).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding
+from repro.models.common import apply_rope, fan_in_init, softcap, zeros_init
+
+Array = jax.Array
+NEG_INF = -2.0 ** 30  # large-but-finite; avoids NaN from (-inf) - (-inf)
+
+
+def init_attention_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    p = {
+        "wq": fan_in_init(keys[0], (d, cfg.q_dim), dtype),
+        "wk": fan_in_init(keys[1], (d, cfg.kv_dim), dtype),
+        "wv": fan_in_init(keys[2], (d, cfg.kv_dim), dtype),
+        "wo": fan_in_init(keys[3], (cfg.q_dim, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init(None, (cfg.q_dim,), dtype)
+        p["bk"] = zeros_init(None, (cfg.kv_dim,), dtype)
+        p["bv"] = zeros_init(None, (cfg.kv_dim,), dtype)
+    return p
+
+
+def _model_axis_size() -> int:
+    mesh = sharding.get_mesh()
+    if mesh is None:
+        return 1
+    axis = sharding.get_rule("heads")
+    if axis is None or axis not in mesh.shape:
+        return 1
+    return int(mesh.shape[axis])
+
+
+def attn_parallel_mode(cfg) -> str:
+    """'tp' (shard heads over 'model') when n_heads divides the model
+    axis; otherwise 'dp' — attention internals shard over 'data' only
+    (compute duplicated across 'model'; zero model-axis collectives).
+    The fixed 16-way model axis does not divide 28/24/20/40-head archs,
+    so 'dp' is the safe baseline; the ring-attention path
+    (cfg.decode_comm / §Perf) is the optimized alternative."""
+    m = _model_axis_size()
+    if m == 1:
+        return "tp"
+    # Both the query heads AND the kv heads must divide the axis — the
+    # grouped score/value tensors are kv-head-major, so a non-dividing
+    # kv count replicates the quadratic intermediates (measured: 64 s of
+    # per-step collectives on internvl2 prefill; EXPERIMENTS.md §Perf).
+    if cfg.n_heads % m == 0 and cfg.n_kv_heads % m == 0:
+        return "tp"
+    return "dp"
+
+
+def _project_qkv(x, p, cfg, positions, *, rope=True):
+    """x: (B, S, D) -> q (B,S,H,hd), k,v (B,S,Hkv,hd)."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if rope and getattr(cfg, "use_rope", True):
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if attn_parallel_mode(cfg) == "tp":
+        q = sharding.shard(q, "batch", None, "heads", None)
+        k = sharding.shard(k, "batch", None, "kv_heads", None)
+        v = sharding.shard(v, "batch", None, "kv_heads", None)
+    elif _ring_applicable(cfg, s, s):
+        q = sharding.shard(q, "batch", "kv_seq", None, None)
+        k = sharding.shard(k, "batch", "kv_seq", None, None)
+        v = sharding.shard(v, "batch", "kv_seq", None, None)
+    else:  # batch-only: no model-axis collectives inside attention
+        q = sharding.shard(q, "batch", None, None, None)
+        k = sharding.shard(k, "batch", None, None, None)
+        v = sharding.shard(v, "batch", None, None, None)
+    return q, k, v
+
+
+def _shard_scores(scores, cfg):
+    """scores: (B, Hkv, G, S, T) — shard heads (tp) or batch only (dp)."""
+    if attn_parallel_mode(cfg) == "tp":
+        return sharding.shard(scores, "batch", "kv_heads", None, None, None)
+    return sharding.shard(scores, "batch", None, None, None, None)
+
+
+def _gqa_scores(q, k, cfg):
+    """(B,S,H,hd) x (B,T,Hkv,hd) -> (B,Hkv,G,S,T) grouped scores."""
+    b, s, h, hd = q.shape
+    g = h // cfg.n_kv_heads
+    qg = q.reshape(b, s, cfg.n_kv_heads, g, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) / (hd ** 0.5)
+
+
+def _gqa_out(weights, v, cfg):
+    """(B,Hkv,G,S,T) x (B,T,Hkv,hd) -> (B,S,H,hd)."""
+    b = v.shape[0]
+    out = jnp.einsum("bkgst,btkd->bskgd", weights, v)
+    s = out.shape[1]
+    return out.reshape(b, s, cfg.n_heads, cfg.head_dim)
+
+
+def _ring_attention(q, k, v, cfg, qpos, kpos, causal):
+    """Ring attention (context parallelism) over the 'model' axis.
+
+    q/k/v are sequence-sharded across the ring; K/V blocks rotate via
+    ``ppermute`` while each shard maintains flash-style running
+    (max, sum, out) statistics.  Per-layer collective traffic is
+    (P-1)/P x |K|+|V| — versus the full-score gathers XLA inserts for
+    the auto-sharded formulation (measured 3 orders of magnitude more:
+    EXPERIMENTS.md §Perf).  Differentiable (python-unrolled ring, static
+    P) and vmap-compatible (pod-replica dimension).
+    """
+    mesh = sharding.get_mesh()
+    axis = sharding.get_rule("kv_seq")
+    p = int(mesh.shape[axis])
+    b, s, h, hd = q.shape
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    data_axis = sharding.get_rule("batch")
+    perm = [(j, (j + 1) % p) for j in range(p)]
+
+    def inner(q_l, k_l, v_l, qp_l, kp_l):
+        bl, sl = q_l.shape[0], q_l.shape[1]
+        sb = k_l.shape[1]
+        qg = q_l.reshape(bl, sl, kvh, g, hd)
+        m = jnp.full((bl, kvh, g, sl, 1), NEG_INF, jnp.float32)
+        acc_l = jnp.zeros((bl, kvh, g, sl, 1), jnp.float32)
+        acc_o = jnp.zeros((bl, kvh, g, sl, hd), jnp.float32)
+        k_cur, v_cur, kp_cur = k_l, v_l, kp_l
+        for step in range(p):
+            scores = jnp.einsum(
+                "bskgd,btkd->bkgst", qg, k_cur
+            ).astype(jnp.float32) / (hd ** 0.5)
+            if cfg.attn_logit_softcap > 0.0:
+                scores = cfg.attn_logit_softcap * jnp.tanh(
+                    scores / cfg.attn_logit_softcap)
+            if causal:
+                mask = kp_cur[:, None, :] <= qp_l[:, :, None]
+                if cfg.sliding_window > 0:
+                    mask = jnp.logical_and(
+                        mask,
+                        kp_cur[:, None, :] > qp_l[:, :, None] - cfg.sliding_window,
+                    )
+                scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(scores - m_new)
+            acc_l = acc_l * alpha + jnp.sum(pexp, axis=-1, keepdims=True)
+            acc_o = acc_o * alpha + jnp.einsum(
+                "bkgst,btkd->bkgsd", pexp.astype(v_cur.dtype), v_cur
+            ).astype(jnp.float32)
+            m = m_new
+            if step < p - 1:
+                k_cur = jax.lax.ppermute(k_cur, axis, perm)
+                v_cur = jax.lax.ppermute(v_cur, axis, perm)
+                kp_cur = jax.lax.ppermute(kp_cur, axis, perm)
+        out = acc_o / jnp.maximum(acc_l, 1e-30)
+        out = jnp.moveaxis(out, 3, 1)  # (B,kv,g,S,hd) -> (B,S,kv,g,hd)
+        return out.reshape(bl, sl, h, hd).astype(q_l.dtype)
+
+    fn = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(
+            P(data_axis, axis, None, None),
+            P(data_axis, axis, None, None),
+            P(data_axis, axis, None, None),
+            P(data_axis, axis),
+            P(data_axis, axis),
+        ),
+        out_specs=P(data_axis, axis, None, None),
+        check_vma=False,
+    )
+    return fn(q, k, v, qpos, kpos)
+
+
+def _ring_applicable(cfg, s: int, t: int) -> bool:
+    mesh = sharding.get_mesh()
+    if mesh is None or getattr(cfg, "attn_impl", "auto") != "auto":
+        return False
+    axis = sharding.get_rule("kv_seq")
+    if axis is None or axis not in mesh.shape:
+        return False
+    p = int(mesh.shape[axis])
+    return p > 1 and s == t and s % p == 0 and attn_parallel_mode(cfg) != "tp"
+
+
+def _attend_block(q_i, k, v, cfg, qpos_i, kpos, causal):
+    """One query block vs the full key range.
+
+    q_i: (B, Sq, H, hd); k/v: (B, T, Hkv, hd); qpos_i: (B, Sq);
+    kpos: (B, T).  Returns (B, Sq, H, hd)."""
+    scores = _gqa_scores(q_i, k, cfg)             # (B,Hkv,G,Sq,T)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    if causal:
+        mask = kpos[:, None, :] <= qpos_i[:, :, None]        # (B,Sq,T)
+        if cfg.sliding_window > 0:
+            mask = jnp.logical_and(
+                mask, kpos[:, None, :] > qpos_i[:, :, None] - cfg.sliding_window
+            )
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    scores = _shard_scores(scores, cfg)
+    weights = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(
+        q_i.dtype)
+    return _gqa_out(weights, v, cfg)
+
+
+def _masked_attention(q, k, v, cfg, qpos, kpos, causal):
+    """Query-chunked attention: O(chunk x T) live scores instead of
+    O(S x T) — the CPU-compilable stand-in with the same working-set
+    profile as the Pallas flash kernel (which owns the TPU runtime
+    path)."""
+    b, s, h, hd = q.shape
+    if _ring_applicable(cfg, s, k.shape[1]):
+        return _ring_attention(q, k, v, cfg, qpos, kpos, causal)
+    chunk = getattr(cfg, "attn_chunk", 0)
+    if not chunk or s <= chunk or s % chunk:
+        return _attend_block(q, k, v, cfg, qpos, kpos, causal)
+    n = s // chunk
+    qr = jnp.moveaxis(q.reshape(b, n, chunk, h, hd), 1, 0)   # (n,B,chunk,H,hd)
+    pr = jnp.moveaxis(qpos.reshape(b, n, chunk), 1, 0)       # (n,B,chunk)
+
+    def body(_, inp):
+        q_i, p_i = inp
+        return None, _attend_block(q_i, k, v, cfg, p_i, kpos, causal)
+
+    if getattr(cfg, "unroll_scans", False):
+        outs = jnp.stack([
+            _attend_block(qr[i], k, v, cfg, pr[i], kpos, causal)
+            for i in range(n)
+        ])
+    else:
+        _, outs = jax.lax.scan(body, None, (qr, pr))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+
+
+def full_attention(
+    x: Array,
+    p: dict,
+    cfg,
+    positions: Array,
+    *,
+    causal: bool = True,
+    cross_kv: tuple[Array, Array] | None = None,
+) -> Array:
+    """Training / prefill attention over the whole sequence.
+
+    ``cross_kv`` switches to encoder-decoder cross attention (k, v are
+    precomputed from the encoder; no causal mask).
+    """
+    b, s, _ = x.shape
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k, v = cross_kv
+        causal = False
+    else:
+        if cfg.use_flash_kernel and causal and cfg.attn_logit_softcap == 0.0:
+            # Pallas TPU fast path (forward); see repro.kernels.
+            from repro.kernels import ops as kernel_ops
+
+            q, k, v = _project_qkv(x, p, cfg, positions)
+            out = kernel_ops.flash_attention(
+                q, k, v, causal=True, window=cfg.sliding_window
+            )
+            out = out.reshape(b, s, cfg.q_dim)
+            return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+        q, k, v = _project_qkv(x, p, cfg, positions)
+
+    t = k.shape[1]
+    kpos = (positions[:, :t] if positions.shape[1] >= t
+            else jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t)))
+    out = _masked_attention(q, k, v, cfg, positions, kpos, causal)
+    if attn_parallel_mode(cfg) == "tp":
+        out = sharding.shard(out, "batch", None, "heads", None)
+    else:
+        out = sharding.shard(out, "batch", None, None, None)
+    out = out.reshape(b, s, cfg.q_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def prefill_attention_with_cache(
+    x: Array, p: dict, cfg, positions: Array
+) -> tuple[Array, Array, Array]:
+    """Prefill: returns (output, k, v) so the caller can fill the cache."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    out = _masked_attention(q, k, v, cfg, positions, positions, True)
+    out = out.reshape(b, s, cfg.q_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k, v
+
+
+# ---- decode -----------------------------------------------------------------
+
+
+def decode_attention(
+    x: Array,
+    p: dict,
+    cfg,
+    k_cache: Array,
+    v_cache: Array,
+    pos: Array,
+    *,
+    cross: bool = False,
+    ring: bool = False,
+) -> tuple[Array, Array, Array]:
+    """One-token decode.  x: (B, 1, D); caches: (B, S, Hkv, hd);
+    pos: () or (B,) current position (the new token's index).
+
+    ``ring=True`` treats the cache as a sliding-window ring buffer of
+    length ``k_cache.shape[1]`` (hybrid long-context path): the new
+    entry lands at ``pos % len`` and every populated slot is valid.
+
+    Returns (output (B,1,D), new_k_cache, new_v_cache)."""
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    posb = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+
+    if cross:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        new_k, new_v = k_cache, v_cache
+        valid_len = jnp.full((b,), k_cache.shape[1], jnp.int32)
+        window_lo = jnp.zeros((b,), jnp.int32)
+    else:
+        kv_len = k_cache.shape[1]
+        scatter = posb % kv_len if ring else posb
+        q, k, v = _project_qkv(x, p, cfg, posb[:, None])
+        # Scatter the new token's k/v into the cache at `scatter`.
+        new_k = jax.vmap(
+            lambda c, kk, i: jax.lax.dynamic_update_slice(c, kk, (i, 0, 0))
+        )(k_cache, k, scatter)
+        new_v = jax.vmap(
+            lambda c, vv, i: jax.lax.dynamic_update_slice(c, vv, (i, 0, 0))
+        )(v_cache, v, scatter)
+        new_k = sharding.shard(new_k, "batch", "kv_seq", None, None)
+        new_v = sharding.shard(new_v, "batch", "kv_seq", None, None)
+        if ring:
+            valid_len = jnp.minimum(posb + 1, kv_len)
+            window_lo = jnp.zeros((b,), jnp.int32)
+        else:
+            valid_len = posb + 1
+            window_lo = (
+                jnp.maximum(valid_len - cfg.sliding_window, 0)
+                if cfg.sliding_window > 0
+                else jnp.zeros((b,), jnp.int32)
+            )
+
+    if cfg.decode_comm == "lse_shardmap" and sharding.get_mesh() is not None:
+        out = _decode_lse_shardmap(q, new_k, new_v, valid_len, window_lo, cfg)
+    else:
+        out = _decode_xla(q, new_k, new_v, valid_len, window_lo, cfg)
+    out = out.reshape(b, 1, cfg.q_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_k, new_v
+
+
+def _decode_scores_masked(q, k, valid_len, window_lo, cfg):
+    scores = _gqa_scores(q, k, cfg)  # (B,Hkv,G,1,T)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    t = k.shape[1]
+    idx = jnp.arange(t, dtype=jnp.int32)[None, :]
+    mask = jnp.logical_and(
+        idx < valid_len[:, None], idx >= window_lo[:, None]
+    )  # (B,T)
+    return jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+
+
+def _decode_xla(q, k, v, valid_len, window_lo, cfg):
+    scores = _decode_scores_masked(q, k, valid_len, window_lo, cfg)
+    weights = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return _gqa_out(weights, v, cfg)
+
+
+def _decode_lse_shardmap(q, k, v, valid_len, window_lo, cfg):
+    """Flash-decode combine across the sequence-sharded KV cache."""
+    mesh = sharding.get_mesh()
+    axis = sharding.get_rule("kv_seq")
+    if axis is None or axis not in mesh.shape:
+        return _decode_xla(q, k, v, valid_len, window_lo, cfg)
+    n_shards = mesh.shape[axis]
+    t = k.shape[1]
+    if t % n_shards != 0:
+        return _decode_xla(q, k, v, valid_len, window_lo, cfg)
+
+    data_axis = sharding.get_rule("batch")
+
+    def partial_attn(q_, k_, v_, valid_, lo_, base_):
+        # k_/v_: (B, T/n, Hkv, hd) — local shard; base_ = global offset.
+        b_, tl = k_.shape[0], k_.shape[1]
+        scores = _gqa_scores(q_, k_, cfg)  # (B,Hkv,G,1,Tl)
+        scores = softcap(scores, cfg.attn_logit_softcap)
+        idx = base_ + jnp.arange(tl, dtype=jnp.int32)[None, :]
+        mask = jnp.logical_and(idx < valid_[:, None], idx >= lo_[:, None])
+        scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+        scores = scores.astype(jnp.float32)
+        m_loc = jnp.max(scores, axis=-1, keepdims=True)        # (B,K,G,1,1)
+        m_glob = jax.lax.pmax(m_loc, axis)
+        e = jnp.exp(scores - m_glob)
+        denom = jax.lax.psum(jnp.sum(e, axis=-1, keepdims=True), axis)
+        part = jnp.einsum("bkgst,btkd->bskgd", e.astype(q_.dtype), v_)
+        num = jax.lax.psum(part.astype(jnp.float32), axis)
+        # denom: (B,K,G,1,1) -> align to num's (B,S=1,K,G,hd)
+        d_ = denom[:, :, :, 0, 0][:, None, :, :]  # (B,1,K,G)
+        out = num / jnp.maximum(d_[..., None], 1e-30)
+        return out.astype(q_.dtype)
+
+    shard_offsets = jnp.arange(n_shards, dtype=jnp.int32) * (t // n_shards)
+
+    fn = jax.shard_map(
+        partial_attn,
+        mesh=mesh,
+        in_specs=(
+            P(data_axis, None, None, None),        # q replicated over model
+            P(data_axis, axis, None, None),        # k seq-sharded
+            P(data_axis, axis, None, None),        # v seq-sharded
+            P(data_axis),                          # valid_len
+            P(data_axis),                          # window_lo
+            P(axis),                               # per-shard base offset
+        ),
+        out_specs=P(data_axis, None, None, None, None),
+        check_vma=False,
+    )
+    out = fn(q, k, v, valid_len, window_lo, shard_offsets)  # (B,1,K,G,hd)
+    b = q.shape[0]
+    return out.reshape(b, 1, cfg.n_heads, cfg.head_dim)

@@ -1,0 +1,115 @@
+"""Shared model components: norms, RoPE, embeddings, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x: Array, weight: Array, eps: float) -> Array:
+    """RMSNorm in fp32 accumulation (the universal modern choice)."""
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(orig)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array, eps: float) -> Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(orig)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    """Inverse frequencies for rotary embeddings, fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary position embedding.
+
+    Args:
+      x: (..., seq, heads, head_dim)
+      positions: (..., seq) int32 absolute positions.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (.., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (.., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_positions: int, d_model: int) -> Array:
+    """Whisper-style fixed sinusoidal embeddings (fp32)."""
+    pos = jnp.arange(n_positions, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def softcap(logits: Array, cap: float) -> Array:
+    """Gemma-style logit soft-capping; no-op when cap == 0."""
+    if cap <= 0.0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---- initializers -----------------------------------------------------------
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype):
+    """Truncated-normal with 1/sqrt(fan_in) scale (last-1 dim = fan_in)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = fan_in ** -0.5
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def split_tree(key, template: dict):
+    """One PRNG key per leaf of a (possibly nested) dict template."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def cross_entropy_loss(logits: Array, labels: Array, *, z_loss: float = 0.0) -> Array:
+    """Mean token cross-entropy in fp32 with optional z-loss.
+
+    logits: (..., V); labels: (...,) int32.  Ignores label == -100.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1
+    ).squeeze(-1)
+    nll = lse - gold
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

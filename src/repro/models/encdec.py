@@ -1,0 +1,260 @@
+"""Whisper-style encoder-decoder backbone ([audio] family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings (B, n_frames, D).  The encoder is
+a bidirectional transformer over those frames; the decoder is a causal
+transformer with cross-attention.  Positions are fixed sinusoidal (the
+whisper convention), not RoPE; MLPs are plain GELU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp, sharding
+from repro.models.common import (
+    cross_entropy_loss,
+    dtype_of,
+    fan_in_init,
+    layer_norm,
+    normal_init,
+    sinusoidal_positions,
+)
+
+Array = jax.Array
+
+
+def _init_ln(d):
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _init_ln(cfg.d_model),
+        "attn": attention.init_attention_params(k1, cfg, dtype),
+        "ln2": _init_ln(cfg.d_model),
+        "mlp": mlp.init_mlp_params(k2, cfg.d_model, cfg.d_ff, dtype, "gelu"),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": _init_ln(cfg.d_model),
+        "self_attn": attention.init_attention_params(k1, cfg, dtype),
+        "ln2": _init_ln(cfg.d_model),
+        "cross_attn": attention.init_attention_params(k2, cfg, dtype),
+        "ln3": _init_ln(cfg.d_model),
+        "mlp": mlp.init_mlp_params(k3, cfg.d_model, cfg.d_ff, dtype, "gelu"),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": normal_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(ks[1], cfg.n_encoder_layers)
+        ),
+        "enc_final_ln": _init_ln(cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+            jax.random.split(ks[2], cfg.n_layers)
+        ),
+        "dec_final_ln": _init_ln(cfg.d_model),
+    }
+    # lm_head is tied to embed (whisper convention).
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+def encode(params, cfg, frames: Array) -> Array:
+    """frames: (B, F, D) stub embeddings -> encoder memory (B, F, D)."""
+    b, f, d = frames.shape
+    pos = sinusoidal_positions(f, d).astype(frames.dtype)
+    x = frames + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+    def block(x, blk):
+        h = _ln(x, blk["ln1"], cfg.norm_eps)
+        x = x + attention.full_attention(h, blk["attn"], cfg, positions,
+                                         causal=False)
+        h = _ln(x, blk["ln2"], cfg.norm_eps)
+        x = x + mlp.mlp(h, blk["mlp"], "gelu")
+        return sharding.shard(x, "batch", None, None), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(block, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.n_encoder_layers):
+            blk = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+            x, _ = block(x, blk)
+    return _ln(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _cross_kv(blk, cfg, memory):
+    b, f, _ = memory.shape
+    k = jnp.einsum("bfd,dh->bfh", memory, blk["cross_attn"]["wk"])
+    v = jnp.einsum("bfd,dh->bfh", memory, blk["cross_attn"]["wv"])
+    if cfg.qkv_bias:
+        k = k + blk["cross_attn"]["bk"]
+        v = v + blk["cross_attn"]["bv"]
+    k = k.reshape(b, f, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, f, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _dec_block(x, blk, cfg, positions, memory):
+    h = _ln(x, blk["ln1"], cfg.norm_eps)
+    x = x + attention.full_attention(h, blk["self_attn"], cfg, positions)
+    h = _ln(x, blk["ln2"], cfg.norm_eps)
+    ck, cv = _cross_kv(blk, cfg, memory)
+    x = x + attention.full_attention(h, blk["cross_attn"], cfg, positions,
+                                     cross_kv=(ck, cv))
+    h = _ln(x, blk["ln3"], cfg.norm_eps)
+    x = x + mlp.mlp(h, blk["mlp"], "gelu")
+    return sharding.shard(x, "batch", None, None)
+
+
+def forward(params, cfg, batch) -> tuple[Array, Array]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    memory = encode(params, cfg, batch["frames"].astype(dtype_of(cfg)))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+
+    if cfg.scan_layers:
+        def scan_fn(xx, blk):
+            return _dec_block(xx, blk, cfg, positions, memory), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["dec_blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+            x = _dec_block(x, blk, cfg, positions, memory)
+
+    x = _ln(x, params["dec_final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])  # tied head
+    return sharding.shard(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, aux = forward(params, cfg, batch)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": aux}
+
+
+# ---- serving ----------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_seq: int) -> dict:
+    dtype = dtype_of(cfg)
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "ck": jnp.zeros((L, batch_size, cfg.n_frames, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "cv": jnp.zeros((L, batch_size, cfg.n_frames, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, batch) -> tuple[Array, dict]:
+    """Encode + decoder prefill; fills self- and cross-attention caches."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    memory = encode(params, cfg, batch["frames"].astype(dtype_of(cfg)))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+
+    def block_fn(xx, blk):
+        h = _ln(xx, blk["ln1"], cfg.norm_eps)
+        att, k, v = attention.prefill_attention_with_cache(
+            h, blk["self_attn"], cfg, positions
+        )
+        xx = xx + att
+        h = _ln(xx, blk["ln2"], cfg.norm_eps)
+        ck, cv = _cross_kv(blk, cfg, memory)
+        xx = xx + attention.full_attention(
+            h, blk["cross_attn"], cfg, positions, cross_kv=(ck, cv)
+        )
+        h = _ln(xx, blk["ln3"], cfg.norm_eps)
+        xx = xx + mlp.mlp(h, blk["mlp"], "gelu")
+        return sharding.shard(xx, "batch", None, None), (k, v, ck, cv)
+
+    if cfg.scan_layers:
+        x, (ks, vs, cks, cvs) = jax.lax.scan(block_fn, x, params["dec_blocks"])
+    else:
+        acc = []
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+            x, kv = block_fn(x, blk)
+            acc.append(kv)
+        ks, vs, cks, cvs = (jnp.stack([a[j] for a in acc]) for j in range(4))
+
+    max_seq = batch.get("max_seq", s)
+    pad = max_seq - s
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    x = _ln(x, params["dec_final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embed"])
+    return logits, {"k": ks, "v": vs, "ck": cks, "cv": cvs,
+                    "pos": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cfg, cache, tokens) -> tuple[Array, dict]:
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"][tokens]
+    posf = jnp.asarray(pos, jnp.float32)
+    d = cfg.d_model
+    # Sinusoidal position for the single new token.
+    dims_ = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = posf / jnp.power(10000.0, dims_ / d)
+    posemb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+    x = x + posemb.astype(x.dtype)
+
+    def layer_step(xx, inp):
+        blk, kc, vc, ck, cv = inp
+        h = _ln(xx, blk["ln1"], cfg.norm_eps)
+        att, nk, nv = attention.decode_attention(
+            h, blk["self_attn"], cfg, kc, vc, pos
+        )
+        xx = xx + att
+        h = _ln(xx, blk["ln2"], cfg.norm_eps)
+        catt, _, _ = attention.decode_attention(
+            h, blk["cross_attn"], cfg, ck, cv, pos, cross=True
+        )
+        xx = xx + catt
+        h = _ln(xx, blk["ln3"], cfg.norm_eps)
+        xx = xx + mlp.mlp(h, blk["mlp"], "gelu")
+        return xx, (nk, nv)
+
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(
+            layer_step, x,
+            (params["dec_blocks"], cache["k"], cache["v"], cache["ck"],
+             cache["cv"]),
+        )
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+            x, (k_, v_) = layer_step(
+                x, (blk, cache["k"][i], cache["v"][i], cache["ck"][i],
+                    cache["cv"][i])
+            )
+            nks.append(k_)
+            nvs.append(v_)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+
+    x = _ln(x, params["dec_final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, dict(cache, k=nk, v=nv, pos=pos + 1)

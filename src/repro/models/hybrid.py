@@ -1,0 +1,308 @@
+"""Zamba2-style hybrid backbone: Mamba2 layers + one *shared* attention
+block applied every ``cfg.attn_every`` layers.
+
+The shared block (attention + MLP, one parameter set reused at every
+application — Zamba's signature trick) keeps the parameter count low
+while restoring global mixing.  Serving keeps one KV cache per
+*application site* (the activations differ per site even though the
+weights are shared).
+
+``long_500k`` runs with a sliding-window KV (cfg.sliding_window set by
+the launcher) — bounded attention + O(1) SSM state is the sub-quadratic
+path that makes the 524k-token cell legal for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mamba2, mlp, sharding
+from repro.models.common import cross_entropy_loss, dtype_of, normal_init, rms_norm
+
+Array = jax.Array
+
+
+def site_count(cfg) -> int:
+    """Number of shared-attention application sites."""
+    if not cfg.attn_every:
+        return 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def _grouping(cfg) -> tuple[int, int, int]:
+    """(n_groups, per_group, remainder) over mamba layers."""
+    per = cfg.attn_every if cfg.attn_every else cfg.n_layers
+    return cfg.n_layers // per, per, cfg.n_layers % per
+
+
+def init_params(key, cfg) -> dict:
+    dtype = dtype_of(cfg)
+    k0, k1, k2, k3, k4 = jax.random.split(key, 5)
+    n_groups, per, rem = _grouping(cfg)
+
+    def mamba_layer(k):
+        return {
+            "norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mamba": mamba2.init_mamba2_params(k, cfg, dtype),
+        }
+
+    params = {
+        "embed": normal_init(k0, (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head": normal_init(k1, (cfg.d_model, cfg.vocab_size), dtype),
+        "mamba_blocks": jax.vmap(
+            lambda k: jax.vmap(mamba_layer)(jax.random.split(k, per))
+        )(jax.random.split(k2, n_groups)),
+    }
+    if rem:
+        params["mamba_tail"] = jax.vmap(mamba_layer)(jax.random.split(k3, rem))
+    if site_count(cfg):
+        ka, kb = jax.random.split(k4)
+        params["shared_attn"] = {
+            "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": attention.init_attention_params(ka, cfg, dtype),
+            "mlp_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mlp": mlp.init_mlp_params(kb, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_kind),
+        }
+    return params
+
+
+def _mamba_block(x, blk, cfg):
+    h = rms_norm(x, blk["norm"], cfg.norm_eps)
+    return sharding.shard(x + mamba2.mamba2_forward(h, blk["mamba"], cfg),
+                          "batch", None, None)
+
+
+def _shared_block(x, blk, cfg, positions):
+    h = rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+    x = x + attention.full_attention(h, blk["attn"], cfg, positions)
+    h = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+    return x + mlp.mlp(h, blk["mlp"], cfg.mlp_kind)
+
+
+def forward(params, cfg, batch) -> tuple[Array, Array]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]
+    n_groups, per, rem = _grouping(cfg)
+    shared = params.get("shared_attn")
+
+    def group_fn(xx, grp):
+        def inner(xy, blk):
+            return _mamba_block(xy, blk, cfg), None
+
+        xx, _ = jax.lax.scan(inner, xx, grp)
+        if shared is not None:
+            xx = _shared_block(xx, shared, cfg, positions)
+        return xx, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(group_fn, x, params["mamba_blocks"])
+    else:
+        for gi in range(n_groups):
+            grp = jax.tree.map(lambda a: a[gi], params["mamba_blocks"])
+            for li in range(per):
+                blk = jax.tree.map(lambda a: a[li], grp)
+                x = _mamba_block(x, blk, cfg)
+            if shared is not None:
+                x = _shared_block(x, shared, cfg, positions)
+    if rem:
+        for li in range(rem):
+            blk = jax.tree.map(lambda a: a[li], params["mamba_tail"])
+            x = _mamba_block(x, blk, cfg)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return sharding.shard(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, aux = forward(params, cfg, batch)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": aux}
+
+
+# ---- serving ----------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_seq: int) -> dict:
+    dtype = dtype_of(cfg)
+    n_sites = site_count(cfg)
+    d_in, nh, hp, ns = mamba2.dims(cfg)
+    conv_ch = d_in + 2 * ns
+    cache = {
+        "ssm": jnp.zeros((cfg.n_layers, batch_size, nh, ns, hp), jnp.float32),
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch_size, mamba2.CONV_WIDTH - 1, conv_ch), dtype
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if n_sites:
+        kv_len = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+        cache["k"] = jnp.zeros(
+            (n_sites, batch_size, kv_len, cfg.n_kv_heads, cfg.head_dim), dtype
+        )
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def prefill(params, cfg, batch) -> tuple[Array, dict]:
+    """Exact one-pass prefill: chunked SSD yields end-of-sequence SSM
+    states; the shared attention sites fill their KV caches."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]
+    n_groups, per, rem = _grouping(cfg)
+    shared = params.get("shared_attn")
+    max_seq = batch.get("max_seq", s)
+    kv_len = (min(max_seq, cfg.sliding_window) if cfg.sliding_window
+              else max_seq)
+
+    def mamba_pre(xx, blk):
+        h = rms_norm(xx, blk["norm"], cfg.norm_eps)
+        out, st = mamba2.mamba2_forward(h, blk["mamba"], cfg,
+                                        return_state=True)
+        xx = sharding.shard(xx + out, "batch", None, None)
+        return xx, st
+
+    def group_fn(xx, grp):
+        def inner(xy, blk):
+            return mamba_pre(xy, blk)
+
+        xx, sts = jax.lax.scan(inner, xx, grp) if cfg.scan_layers else _loop(
+            xx, grp, per)
+        if shared is not None:
+            h = rms_norm(xx, shared["attn_norm"], cfg.norm_eps)
+            att, k, v = attention.prefill_attention_with_cache(
+                h, shared["attn"], cfg, positions
+            )
+            xx = xx + att
+            h = rms_norm(xx, shared["mlp_norm"], cfg.norm_eps)
+            xx = xx + mlp.mlp(h, shared["mlp"], cfg.mlp_kind)
+            # Keep the trailing kv_len positions, rotated so position p
+            # sits at ring slot p % kv_len (decode's scatter convention).
+            k = k[:, -kv_len:]
+            v = v[:, -kv_len:]
+            if cfg.sliding_window and s > kv_len and s % kv_len:
+                k = jnp.roll(k, s % kv_len, axis=1)
+                v = jnp.roll(v, s % kv_len, axis=1)
+        else:
+            k = v = jnp.zeros((b, 0, cfg.n_kv_heads, cfg.head_dim), x.dtype)
+        return xx, (sts, k, v)
+
+    def _loop(xx, grp, n):
+        sts = []
+        for li in range(n):
+            blk = jax.tree.map(lambda a: a[li], grp)
+            xx, st = mamba_pre(xx, blk)
+            sts.append(st)
+        return xx, jax.tree.map(lambda *a: jnp.stack(a), *sts)
+
+    if cfg.scan_layers:
+        x, (sts, ks, vs) = jax.lax.scan(group_fn, x, params["mamba_blocks"])
+        # sts leaves: (G, per, B, ...) -> (G*per, B, ...)
+        sts = jax.tree.map(
+            lambda a: a.reshape((n_groups * per,) + a.shape[2:]), sts)
+    else:
+        st_list, k_list, v_list = [], [], []
+        for gi in range(n_groups):
+            grp = jax.tree.map(lambda a: a[gi], params["mamba_blocks"])
+            x, (st, k, v) = group_fn(x, grp)
+            st_list.append(st)
+            k_list.append(k)
+            v_list.append(v)
+        sts = jax.tree.map(lambda *a: jnp.concatenate(a), *st_list)
+        ks = jnp.stack(k_list)
+        vs = jnp.stack(v_list)
+
+    tail_sts = None
+    if rem:
+        tails = []
+        for li in range(rem):
+            blk = jax.tree.map(lambda a: a[li], params["mamba_tail"])
+            x, st = mamba_pre(x, blk)
+            tails.append(st)
+        tail_sts = jax.tree.map(lambda *a: jnp.stack(a), *tails)
+        sts = jax.tree.map(lambda a, t: jnp.concatenate([a, t]), sts, tail_sts)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"])
+
+    cache = {
+        "ssm": sts["ssm"],
+        "conv": sts["conv"],
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    if shared is not None:
+        pad = kv_len - min(kv_len, s)
+        if pad > 0:
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["k"] = ks
+        cache["v"] = vs
+    return logits[:, None, :], cache
+
+
+def decode_step(params, cfg, cache, tokens) -> tuple[Array, dict]:
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"][tokens]
+    n_groups, per, rem = _grouping(cfg)
+    shared = params.get("shared_attn")
+
+    new_ssm = []
+    new_conv = []
+    new_k = []
+    new_v = []
+    li = 0
+    for gi in range(n_groups):
+        for pj in range(per):
+            blk = jax.tree.map(lambda a: a[gi][pj], params["mamba_blocks"])
+            h = rms_norm(x, blk["norm"], cfg.norm_eps)
+            out, st = mamba2.mamba2_decode(
+                h, blk["mamba"], cfg,
+                {"ssm": cache["ssm"][li], "conv": cache["conv"][li]},
+            )
+            x = x + out
+            new_ssm.append(st["ssm"])
+            new_conv.append(st["conv"])
+            li += 1
+        if shared is not None:
+            h = rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+            att, nk, nv = attention.decode_attention(
+                h, shared["attn"], cfg, cache["k"][gi], cache["v"][gi], pos,
+                ring=cfg.sliding_window > 0,
+            )
+            x = x + att
+            h = rms_norm(x, shared["mlp_norm"], cfg.norm_eps)
+            x = x + mlp.mlp(h, shared["mlp"], cfg.mlp_kind)
+            new_k.append(nk)
+            new_v.append(nv)
+    if rem:
+        for pj in range(rem):
+            blk = jax.tree.map(lambda a: a[pj], params["mamba_tail"])
+            h = rms_norm(x, blk["norm"], cfg.norm_eps)
+            out, st = mamba2.mamba2_decode(
+                h, blk["mamba"], cfg,
+                {"ssm": cache["ssm"][li], "conv": cache["conv"][li]},
+            )
+            x = x + out
+            new_ssm.append(st["ssm"])
+            new_conv.append(st["conv"])
+            li += 1
+
+    new_cache = {
+        "ssm": jnp.stack(new_ssm),
+        "conv": jnp.stack(new_conv),
+        "pos": pos + 1,
+    }
+    if shared is not None:
+        new_cache["k"] = jnp.stack(new_k)
+        new_cache["v"] = jnp.stack(new_v)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, new_cache

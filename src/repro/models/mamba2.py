@@ -1,0 +1,194 @@
+"""Mamba2 block (SSD — state-space duality), chunked-parallel form.
+
+Used by zamba2-1.2b's backbone.  The sequence is processed in chunks of
+``cfg.ssm_chunk``: quadratic attention-like compute within a chunk,
+linear state passing across chunks (``lax.scan``) — the standard SSD
+algorithm, which keeps both the HLO compact (one scan) and the working
+set bounded (the full (L, H, P, N) state tensor never materializes).
+
+Decode carries the per-head state ``(B, H, N, P)`` plus a short
+depthwise-conv ring buffer — O(1) per token, which is what makes
+``long_500k`` runnable for the hybrid/ssm families.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fan_in_init, normal_init
+
+Array = jax.Array
+
+CONV_WIDTH = 4
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nh, hp, ns = dims(cfg)
+    conv_ch = d_in + 2 * ns
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z (d_in), x (d_in), B (ns), C (ns), dt (nh)]
+        "in_proj": fan_in_init(ks[0], (d, 2 * d_in + 2 * ns + nh), dtype),
+        "conv_w": normal_init(ks[1], (CONV_WIDTH, conv_ch), dtype, scale=0.1),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_proj": fan_in_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _split_proj(xz, cfg):
+    d_in, nh, _, ns = dims(cfg)
+    z, xin, b, c, dt = jnp.split(
+        xz, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1
+    )
+    return z, xin, b, c, dt
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, x: (B, L, C), w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(
+    x: Array, p: dict, cfg, *, return_state: bool = False
+) -> Array | tuple[Array, dict]:
+    """Full-sequence chunked SSD.  x: (B, L, D) -> (B, L, D).
+
+    ``return_state=True`` additionally returns the decode cache at the
+    end of the sequence (exact prefill in one linear pass — no
+    scan-of-decode-steps)."""
+    bsz, l, _ = x.shape
+    d_in, nh, hp, ns = dims(cfg)
+    q = min(cfg.ssm_chunk, l)
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+    g = l // q
+
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    z, xin, bmat, cmat, dt = _split_proj(xz, cfg)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xin, bmat, cmat = jnp.split(conv_out, [d_in, d_in + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                        # (H,)
+    log_decay = dt * a[None, None, :]                               # (B,L,H) <= 0
+
+    xh = xin.reshape(bsz, l, nh, hp).astype(jnp.float32)
+    xbar = xh * dt[..., None]                                       # (B,L,H,P)
+    bmat = bmat.astype(jnp.float32)                                 # (B,L,N)
+    cmat = cmat.astype(jnp.float32)
+
+    # Chunked views.
+    xb = xbar.reshape(bsz, g, q, nh, hp)
+    bv = bmat.reshape(bsz, g, q, ns)
+    cv = cmat.reshape(bsz, g, q, ns)
+    ld = log_decay.reshape(bsz, g, q, nh)
+    cum = jnp.cumsum(ld, axis=2)                                    # (B,G,Q,H)
+    total = cum[:, :, -1, :]                                        # (B,G,H)
+
+    # Intra-chunk: scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j), j <= i.
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]             # (B,G,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay_ij = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bgin,bgjn->bgij", cv, bv)                      # (B,G,Q,Q)
+    y_intra = jnp.einsum("bgij,bgijh,bgjhp->bgihp", cb, decay_ij, xb)
+
+    # Chunk-final contributions to the running state:
+    # S_g_in = sum_j exp(total - cum_j) B_j (x)_j   -> (B,G,H,N,P)
+    w_j = jnp.exp(total[:, :, None, :] - cum)                       # (B,G,Q,H)
+    s_chunk = jnp.einsum("bgjn,bgjh,bgjhp->bghnp", bv, w_j, xb)
+
+    # Inter-chunk scan: H_g = exp(total_g) * H_{g-1} + S_chunk_g.
+    def scan_fn(h_prev, inp):
+        s_c, tot = inp                                              # (B,H,N,P),(B,H)
+        h_new = h_prev * jnp.exp(tot)[:, :, None, None] + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, nh, ns, hp), jnp.float32)
+    if getattr(cfg, "unroll_scans", False):
+        h_cur, hp_list = h0, []
+        for gi in range(g):
+            hp_list.append(h_cur)
+            h_cur, _ = scan_fn(h_cur, (s_chunk[:, gi], total[:, gi]))
+        h_final = h_cur
+        h_prevs = jnp.stack(hp_list, axis=1)                        # (B,G,H,N,P)
+    else:
+        h_final, h_prevs = jax.lax.scan(
+            scan_fn,
+            h0,
+            (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)),
+        )
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)                       # (B,G,H,N,P)
+
+    # Inter-chunk output: y_i += C_i . H_{g-1} * exp(cum_i).
+    y_inter = jnp.einsum(
+        "bgin,bgih,bghnp->bgihp", cv, jnp.exp(cum), h_prevs
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, l, nh, hp)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    if not return_state:
+        return out
+    # Decode cache at position l: final SSM state + conv tail window.
+    tail = conv_in[:, l - (CONV_WIDTH - 1):, :]
+    return out, {"ssm": h_final, "conv": tail}
+
+
+def init_mamba2_cache(bsz: int, cfg, dtype) -> dict:
+    d_in, nh, hp, ns = dims(cfg)
+    conv_ch = d_in + 2 * ns
+    return {
+        "ssm": jnp.zeros((bsz, nh, ns, hp), jnp.float32),
+        "conv": jnp.zeros((bsz, CONV_WIDTH - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode(x: Array, p: dict, cfg, cache: dict) -> tuple[Array, dict]:
+    """One-token step.  x: (B, 1, D) -> ((B, 1, D), new cache)."""
+    bsz = x.shape[0]
+    d_in, nh, hp, ns = dims(cfg)
+
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])[:, 0]
+    z, xin, bmat, cmat, dt = _split_proj(xz, cfg)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)           # (B,C)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [d_in, d_in + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None, :])                                # (B,H)
+
+    xh = xin.reshape(bsz, nh, hp).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+
+    h = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bmat, xbar
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat, h) + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    return out, {"ssm": h, "conv": window[:, 1:, :]}

@@ -1,0 +1,40 @@
+"""Gated MLPs: SwiGLU (llama/qwen/phi family) and GeGLU (gemma)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.common import fan_in_init
+
+Array = jax.Array
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, dtype, kind: str = "swiglu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": fan_in_init(k2, (d_model, d_ff), dtype),
+        "w_down": fan_in_init(k3, (d_ff, d_model), dtype),
+    }
+    if kind != "gelu":  # gated variants
+        p["w_gate"] = fan_in_init(k1, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(x: Array, p: dict, kind: str) -> Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if kind == "gelu":  # plain 2-matrix MLP (whisper)
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        if kind == "swiglu":
+            act = jax.nn.silu(gate)
+        elif kind == "geglu":
+            act = jax.nn.gelu(gate, approximate=True)
+        else:
+            raise ValueError(f"unknown mlp kind {kind!r}")
+        h = act * up
+    h = sharding.shard(h, "batch", None, "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

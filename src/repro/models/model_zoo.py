@@ -1,0 +1,63 @@
+"""Unified model interface over all families.
+
+``build_model(cfg)`` returns a :class:`Model` with a consistent
+functional API used by the trainer, the serving engine, and the dry-run:
+
+  init(key) -> params
+  loss(params, batch) -> (scalar, metrics)        [train shapes]
+  forward(params, batch) -> (logits, aux)
+  prefill(params, batch) -> (last_logits, cache)  [prefill shapes]
+  decode_step(params, cache, tokens) -> (logits, cache)  [decode shapes]
+  init_cache(batch_size, max_seq) -> cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer as m
+    elif cfg.family == "hybrid":
+        from repro.models import hybrid as m
+    elif cfg.family == "ssm":
+        from repro.models import ssm_model as m
+    elif cfg.family == "audio":
+        from repro.models import encdec as m
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: m.init_params(key, cfg),
+        loss=lambda params, batch: m.loss_fn(params, cfg, batch),
+        forward=lambda params, batch: m.forward(params, cfg, batch),
+        prefill=lambda params, batch: m.prefill(params, cfg, batch),
+        decode_step=lambda params, cache, tokens: m.decode_step(
+            params, cfg, cache, tokens
+        ),
+        init_cache=lambda batch_size, max_seq: m.init_cache(
+            cfg, batch_size, max_seq
+        ),
+    )
+
+
+def abstract_params(model: Model, seed: int = 0):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(model.init, jax.random.key(seed))

@@ -1,0 +1,186 @@
+"""Mixture-of-Experts layer with shard-local sort-based dispatch.
+
+Used by olmoe-1b-7b (64e top-8) and llama4-maverick (128e top-1 +
+shared expert, alternating layers).
+
+The token->expert shuffle (argsort + gather + scatter) is pure index
+plumbing with no weights involved, but XLA's SPMD partitioner replicates
+batched scatters — measured 120 TB of per-layer all-gathers on the
+olmoe train cell (EXPERIMENTS.md §Perf).  We therefore run dispatch and
+combine inside ``shard_map`` *manual over the 'data' axis only*: every
+gather/scatter sees shard-local shapes and lowers to local ops, while
+the expert FFN einsums stay in auto mode so the expert dim shards over
+'model' (EP) — the (data x expert) resharding around them is the classic
+MoE all-to-all and is the only cross-device traffic this layer emits.
+
+Per-shard capacity = ceil(cf x tokens_local x k / E); drop behavior
+matches the global-capacity formulation in expectation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding
+from repro.models.common import fan_in_init, normal_init
+
+Array = jax.Array
+
+# Below this many tokens (decode steps), the dense path is cheaper than
+# a shard_map round-trip.
+_SMALL_T = 2048
+
+
+def init_moe_params(key, cfg, dtype) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal_init(ks[0], (d, e), dtype, scale=d ** -0.5),
+        "expert_gate": fan_in_init(ks[1], (e, d, ff), dtype),
+        "expert_up": fan_in_init(ks[2], (e, d, ff), dtype),
+        "expert_down": fan_in_init(ks[3], (e, ff, d), dtype),
+    }
+    if cfg.shared_expert:
+        from repro.models.mlp import init_mlp_params
+
+        p["shared"] = init_mlp_params(ks[4], d, ff, dtype, cfg.mlp_kind)
+    return p
+
+
+def _n_data_shards(t: int) -> int:
+    mesh = sharding.get_mesh()
+    if mesh is None:
+        return 1
+    axis = sharding.get_rule("batch")
+    if axis is None or axis not in mesh.shape:
+        return 1
+    n = int(mesh.shape[axis])
+    return n if (n > 1 and t % n == 0) else 1
+
+
+def _route(probs, cfg):
+    """(..., T, E) -> sorted slot metadata (local shapes)."""
+    k = cfg.top_k
+    e = cfg.n_experts
+    t = probs.shape[0]
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    flat_expert = expert_ids.reshape(t * k)
+    flat_gate = gate_vals.reshape(t * k)
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_expert)
+    se = flat_expert[order]
+    st = flat_token[order]
+    sg = flat_gate[order]
+    first = jnp.searchsorted(se, jnp.arange(e, dtype=jnp.int32))
+    pos = jnp.arange(t * k, dtype=jnp.int32) - first[se]
+    return se, st, sg, pos
+
+
+def _dispatch_local(xt, probs, cfg, capacity):
+    """One data shard: xt (T_loc, D), probs (T_loc, E)."""
+    e = cfg.n_experts
+    se, st, sg, pos = _route(probs, cfg)
+    dispatched = xt[st]
+    buf = jnp.zeros((e, capacity, xt.shape[-1]), dtype=xt.dtype)
+    buf = buf.at[se, pos].set(dispatched, mode="drop")
+    return buf, se, st, sg, pos
+
+
+def _combine_local(out_buf, se, st, sg, pos, t_loc, capacity, dtype):
+    """One data shard: out_buf (E, C, D) -> yt (T_loc, D)."""
+    kept = pos < capacity
+    gathered = out_buf[se, jnp.minimum(pos, capacity - 1)]
+    contrib = jnp.where(kept[:, None], gathered * sg[:, None].astype(dtype), 0)
+    yt = jnp.zeros((t_loc, out_buf.shape[-1]), dtype=dtype)
+    return yt.at[st].add(contrib)
+
+
+def moe(x: Array, p: dict, cfg) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, sl, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * sl
+    xt = x.reshape(t, d)
+    xt = sharding.shard(xt, "batch", None)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Load-balancing aux loss (Switch/OLMoE style).
+    top1 = jnp.argmax(probs, axis=-1)
+    dispatch_frac = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=0)
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(dispatch_frac * prob_frac)
+
+    shards = _n_data_shards(t) if t > _SMALL_T else 1
+    t_loc = t // shards
+    capacity = max(1, int(cfg.capacity_factor * t_loc * k / e))
+    capacity = max(8, (capacity + 7) // 8 * 8)
+    mesh = sharding.get_mesh()
+
+    if shards > 1:
+        data_axis = sharding.get_rule("batch")
+        manual = {data_axis}
+        if sharding.get_pod_vmap() and "pod" in mesh.shape:
+            manual.add("pod")
+
+        def disp(xt_l, probs_l):
+            buf, se, st, sg, pos = _dispatch_local(
+                xt_l, probs_l, cfg, capacity)
+            return buf[None], se[None], st[None], sg[None], pos[None]
+
+        buf, se, st, sg, pos = jax.shard_map(
+            disp, mesh=mesh,
+            in_specs=(P(data_axis, None), P(data_axis, None)),
+            out_specs=(P(data_axis, None, None, None), P(data_axis, None),
+                       P(data_axis, None), P(data_axis, None),
+                       P(data_axis, None)),
+            axis_names=manual, check_vma=False,
+        )(xt, probs)
+    else:
+        buf, se, st, sg, pos = _dispatch_local(xt, probs, cfg, capacity)
+        buf, se, st, sg, pos = (a[None] for a in (buf, se, st, sg, pos))
+
+    # (S, E, C, D): data-sharded on dim0, expert-parallel on dim1 — the
+    # constraint boundary where XLA inserts the MoE all-to-all.
+    buf = sharding.shard(buf, "batch", "experts", None, None)
+
+    gate_h = jnp.einsum("secd,edf->secf", buf, p["expert_gate"])
+    up_h = jnp.einsum("secd,edf->secf", buf, p["expert_up"])
+    act = jax.nn.silu(gate_h) * up_h
+    out_buf = jnp.einsum("secf,efd->secd", act, p["expert_down"])
+    out_buf = sharding.shard(out_buf, "batch", "experts", None, None)
+
+    if shards > 1:
+        def comb(ob_l, se_l, st_l, sg_l, pos_l):
+            yt = _combine_local(
+                ob_l[0], se_l[0], st_l[0], sg_l[0], pos_l[0],
+                t_loc, capacity, x.dtype)
+            return yt[None]
+
+        yt = jax.shard_map(
+            comb, mesh=mesh,
+            in_specs=(P(data_axis, None, None, None), P(data_axis, None),
+                      P(data_axis, None), P(data_axis, None),
+                      P(data_axis, None)),
+            out_specs=P(data_axis, None, None),
+            axis_names=manual, check_vma=False,
+        )(out_buf, se, st, sg, pos)
+        yt = yt.reshape(t, d)
+    else:
+        yt = _combine_local(
+            out_buf[0], se[0], st[0], sg[0], pos[0], t_loc, capacity, x.dtype)
+
+    yt = sharding.shard(yt, "batch", None)
+
+    if cfg.shared_expert:
+        from repro.models.mlp import mlp
+
+        yt = yt + mlp(xt[None], p["shared"], cfg.mlp_kind)[0]
+
+    return yt.reshape(b, sl, d), aux.astype(jnp.float32)

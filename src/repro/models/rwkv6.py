@@ -1,0 +1,224 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Chunked-parallel linear attention (GLA-style): within a chunk the
+per-channel decays are materialized relative to the chunk start and the
+interaction is a masked matmul; across chunks a single ``lax.scan``
+carries the (B, H, K, V) state.  Decode is O(1) per token — rwkv6-3b is
+one of the two archs that run the ``long_500k`` cell.
+
+The data-dependent decay (the Finch contribution) is the LoRA form:
+``w_t = exp(-exp(w0 + tanh(x_t A) B))`` per channel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fan_in_init, normal_init
+
+Array = jax.Array
+
+DECAY_LORA = 64
+
+
+def dims(cfg):
+    head_dim = cfg.head_dim if cfg.head_dim else 64
+    n_heads = cfg.d_model // head_dim
+    return n_heads, head_dim
+
+
+def init_rwkv6_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    nh, hk = dims(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        # time-mix
+        "mu_r": normal_init(ks[0], (d,), jnp.float32, 0.02) + 0.5,
+        "mu_k": normal_init(ks[1], (d,), jnp.float32, 0.02) + 0.5,
+        "mu_v": normal_init(ks[2], (d,), jnp.float32, 0.02) + 0.5,
+        "mu_w": normal_init(ks[3], (d,), jnp.float32, 0.02) + 0.5,
+        "w_r": fan_in_init(ks[4], (d, d), dtype),
+        "w_k": fan_in_init(ks[5], (d, d), dtype),
+        "w_v": fan_in_init(ks[6], (d, d), dtype),
+        "w_g": fan_in_init(ks[7], (d, d), dtype),
+        "w_o": fan_in_init(ks[8], (d, d), dtype),
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": normal_init(ks[9], (d, DECAY_LORA), jnp.float32, 0.01),
+        "decay_b": jnp.zeros((DECAY_LORA, d), jnp.float32),
+        "bonus_u": jnp.zeros((nh, hk), jnp.float32),
+        # channel-mix
+        "cm_mu_k": normal_init(ks[0], (d,), jnp.float32, 0.02) + 0.5,
+        "cm_mu_r": normal_init(ks[1], (d,), jnp.float32, 0.02) + 0.5,
+        "cm_k": fan_in_init(ks[2], (d, cfg.d_ff), dtype),
+        "cm_r": fan_in_init(ks[3], (d, d), dtype),
+        "cm_v": fan_in_init(ks[4], (cfg.d_ff, d), dtype),
+    }
+
+
+def _token_shift(x: Array, prev: Array | None = None) -> Array:
+    """x_{t-1} (zeros / `prev` for t=0).  x: (B, L, D)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :] if prev.ndim == 2 else prev
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    # mu is f32; keep the activation dtype (bf16) on the mixed stream.
+    return (x * mu + xs * (1.0 - mu)).astype(x.dtype)
+
+
+def _decay(xw: Array, p: dict) -> Array:
+    """Data-dependent per-channel log-decay (<= 0)."""
+    lora = jnp.einsum(
+        "bld,dr->blr", xw.astype(jnp.float32), p["decay_a"]
+    )
+    w = p["decay_w0"] + jnp.einsum("blr,rd->bld", jnp.tanh(lora), p["decay_b"])
+    return -jnp.exp(w)  # log w_t
+
+
+def rwkv6_time_mix(
+    x: Array, p: dict, cfg, *, chunk: int = 128, return_state: bool = False
+) -> Array | tuple[Array, Array]:
+    """Full-sequence chunked time-mix.  x: (B, L, D) -> (B, L, D).
+
+    ``return_state=True`` additionally returns the (B, H, K, V) state at
+    the end of the sequence (exact one-pass prefill)."""
+    bsz, l, d = x.shape
+    nh, hk = dims(cfg)
+    q = min(chunk, l)
+    assert l % q == 0
+    g = l // q
+
+    xs = _token_shift(x)
+    r = jnp.einsum("bld,de->ble", _mix(x, xs, p["mu_r"]), p["w_r"])
+    k = jnp.einsum("bld,de->ble", _mix(x, xs, p["mu_k"]), p["w_k"])
+    v = jnp.einsum("bld,de->ble", _mix(x, xs, p["mu_v"]), p["w_v"])
+    gate = jax.nn.silu(jnp.einsum("bld,de->ble", _mix(x, xs, p["mu_w"]), p["w_g"]))
+    logw = _decay(_mix(x, xs, p["mu_w"]), p)                        # (B,L,D)<=0
+
+    # Heads.
+    rh = r.reshape(bsz, g, q, nh, hk).astype(jnp.float32)
+    kh = k.reshape(bsz, g, q, nh, hk).astype(jnp.float32)
+    vh = v.reshape(bsz, g, q, nh, hk).astype(jnp.float32)
+    lw = logw.reshape(bsz, g, q, nh, hk)
+
+    cum = jnp.cumsum(lw, axis=2)                                    # (B,G,Q,H,K)
+    total = cum[:, :, -1]                                           # (B,G,H,K)
+
+    # Intra-chunk (strictly causal): score[i,j] = (r_i*exp(cum_{i-1}-cum_j)).k_j
+    # with the per-step bonus u on the diagonal.
+    cum_prev = cum - lw                                             # cum_{i-1}
+    ri = rh * jnp.exp(cum_prev)                                     # (B,G,Q,H,K)
+    kj = kh * jnp.exp(-cum)                                         # relative
+    scores = jnp.einsum("bgihk,bgjhk->bghij", ri, kj)
+    tri = jnp.tril(jnp.ones((q, q), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bghij,bgjhk->bgihk", scores, vh)
+    diag = jnp.einsum(
+        "bgihk,bgihk->bgih", rh, kh * p["bonus_u"][None, None, None]
+    )
+    y_intra = y_intra + diag[..., None] * vh
+
+    # Chunk-final state increments: S+= sum_j exp(total - cum_j) k_j (x) v_j.
+    wj = jnp.exp(total[:, :, None] - cum)                           # (B,G,Q,H,K)
+    s_chunk = jnp.einsum("bgjhk,bgjhv->bghkv", kh * wj, vh)
+
+    def scan_fn(s_prev, inp):
+        s_c, tot = inp
+        s_new = s_prev * jnp.exp(tot)[..., None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, nh, hk, hk), jnp.float32)
+    if getattr(cfg, "unroll_scans", False):
+        s_cur, sp_list = s0, []
+        for gi in range(g):
+            sp_list.append(s_cur)
+            s_cur, _ = scan_fn(s_cur, (s_chunk[:, gi], total[:, gi]))
+        s_final = s_cur
+        s_prevs = jnp.stack(sp_list, axis=1)                        # (B,G,H,K,V)
+    else:
+        s_final, s_prevs = jax.lax.scan(
+            scan_fn,
+            s0,
+            (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)),
+        )
+        s_prevs = jnp.moveaxis(s_prevs, 0, 1)                       # (B,G,H,K,V)
+
+    y_inter = jnp.einsum("bgihk,bghkv->bgihv", ri, s_prevs)
+    y = (y_intra + y_inter).reshape(bsz, l, d).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", y * gate, p["w_o"])
+    if not return_state:
+        return out
+    return out, s_final
+
+
+def rwkv6_channel_mix(x: Array, p: dict) -> Array:
+    xs = _token_shift(x)
+    k = jnp.einsum("bld,df->blf", _mix(x, xs, p["cm_mu_k"]), p["cm_k"])
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bld,de->ble", _mix(x, xs, p["cm_mu_r"]), p["cm_r"])
+    )
+    return r * jnp.einsum("blf,fd->bld", k, p["cm_v"])
+
+
+def init_rwkv6_cache(bsz: int, cfg, dtype) -> dict:
+    nh, hk = dims(cfg)
+    d = cfg.d_model
+    return {
+        "state": jnp.zeros((bsz, nh, hk, hk), jnp.float32),
+        "tm_shift": jnp.zeros((bsz, d), dtype),
+        "cm_shift": jnp.zeros((bsz, d), dtype),
+    }
+
+
+def rwkv6_decode(
+    x: Array, p: dict, cfg, cache: dict
+) -> tuple[Array, Array, dict]:
+    """One-token step for (time-mix out, channel-mix out, new cache).
+
+    The caller composes them with its residual/norm structure."""
+    bsz, _, d = x.shape
+    nh, hk = dims(cfg)
+    xt = x[:, 0]
+    xs = cache["tm_shift"].astype(xt.dtype)
+
+    def mix1(mu):
+        return (xt * mu + xs * (1.0 - mu)).astype(xt.dtype)
+
+    r = (mix1(p["mu_r"]) @ p["w_r"]).reshape(bsz, nh, hk).astype(jnp.float32)
+    k = (mix1(p["mu_k"]) @ p["w_k"]).reshape(bsz, nh, hk).astype(jnp.float32)
+    v = (mix1(p["mu_v"]) @ p["w_v"]).reshape(bsz, nh, hk).astype(jnp.float32)
+    gate = jax.nn.silu(mix1(p["mu_w"]) @ p["w_g"])
+    lora = jnp.tanh(mix1(p["mu_w"]).astype(jnp.float32) @ p["decay_a"])
+    logw = -jnp.exp(p["decay_w0"] + lora @ p["decay_b"])
+    w = jnp.exp(logw).reshape(bsz, nh, hk)
+
+    s = cache["state"]                                              # (B,H,K,V)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum(
+        "bhk,bhkv->bhv", r, s + p["bonus_u"][None, :, :, None] * kv
+    )
+    s_new = s * w[..., None] + kv
+    tm_out = jnp.einsum(
+        "be,ed->bd", (out.reshape(bsz, d) * gate).astype(x.dtype), p["w_o"]
+    )
+
+    # Channel-mix (needs its own shifted input — the caller passes the
+    # post-time-mix residual through `rwkv6_channel_mix_step`).
+    new_cache = dict(cache, state=s_new, tm_shift=xt)
+    return tm_out[:, None, :], None, new_cache
+
+
+def rwkv6_channel_mix_step(x: Array, p: dict, cache: dict) -> tuple[Array, dict]:
+    xt = x[:, 0]
+    xs = cache["cm_shift"].astype(xt.dtype)
+    mk = (xt * p["cm_mu_k"] + xs * (1 - p["cm_mu_k"])).astype(xt.dtype)
+    mr = (xt * p["cm_mu_r"] + xs * (1 - p["cm_mu_r"])).astype(xt.dtype)
+    k = jnp.square(jax.nn.relu(mk @ p["cm_k"]))
+    r = jax.nn.sigmoid(mr @ p["cm_r"])
+    out = (r * (k @ p["cm_v"])).astype(xt.dtype)
+    return out[:, None, :], dict(cache, cm_shift=xt)

@@ -1,0 +1,187 @@
+"""Logical-axis sharding helpers.
+
+The framework uses a (pod, data, model) mesh.  Model code never names
+mesh axes directly; it annotates activations/params with *logical* axes
+which these helpers map to mesh axes:
+
+  batch    -> ('data',)         (the pod dimension is an explicit leading
+                                 replica dim handled by vmap, see
+                                 repro.sync.engine — NOT a sharding axis
+                                 inside the model)
+  heads/ff/vocab/experts -> 'model'   (tensor/expert parallelism)
+  kv_seq (decode cache)  -> 'model'   (sequence-sharded flash-decode)
+  fsdp                   -> 'data'    (ZeRO-3 weight sharding)
+
+``set_mesh(None)`` turns every constraint into a no-op so the same model
+code runs in single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def set_pod_vmap(value: bool) -> None:
+    """Trace-time flag: the current step function is vmapped over the
+    pod-replica dimension with ``spmd_axis_name='pod'``.  Inner
+    shard_maps must then list 'pod' among their manual axes (the
+    batching rule inserts the pod spec; leaving it auto crashes the XLA
+    partitioner — see repro.models.moe)."""
+    _state.pod_vmap = bool(value)
+
+
+def get_pod_vmap() -> bool:
+    return getattr(_state, "pod_vmap", False)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+# Logical -> mesh axis map.  Overridable for hillclimb experiments.
+_DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    "batch": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "kv_seq": "model",
+    "embed": None,
+    "fsdp": "data",
+    "seq": None,
+    "residual": None,  # set to "model" for full sequence-parallel residuals
+}
+
+
+def set_rule(logical: str, mesh_axis: str | None) -> None:
+    _DEFAULT_RULES[logical] = mesh_axis
+
+
+def get_rule(logical: str | None):
+    if logical is None:
+        return None
+    return _DEFAULT_RULES.get(logical)
+
+
+def spec(*logical_axes: str | None) -> P:
+    """PartitionSpec from logical axis names (None = replicated dim)."""
+    return P(*[get_rule(a) for a in logical_axes])
+
+
+def shard(x, *logical_axes: str | None):
+    """Constrain ``x``'s sharding; no-op without an active mesh.
+
+    Axes that do not evenly divide their dimension are dropped (a 4-way
+    kv-head dim on a 16-way model axis would otherwise force padded /
+    replicated layouts — XLA's 'involuntary full rematerialization')."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, logical in zip(x.shape, logical_axes):
+        axis = get_rule(logical)
+        if axis is None:
+            resolved.append(None)
+            continue
+        size = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            size *= int(mesh.shape.get(a, 1))
+        resolved.append(axis if (size > 1 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )
+
+
+def named_sharding(*logical_axes: str | None):
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*logical_axes))
+
+
+def pspec_for_param(path: tuple[str, ...], shape: tuple[int, ...], cfg) -> P:
+    """Weight-sharding rule by parameter name/shape.
+
+    2-D weights get (fsdp?, model) style sharding; biases/norms are
+    replicated; expert weights shard the expert dim over 'model' and the
+    ff dim is left replicated (EP, not TP-within-expert); embeddings
+    shard the vocab dim.
+    """
+    name = "/".join(str(p) for p in path)
+    fsdp = get_rule("fsdp") if getattr(cfg, "fsdp_params", True) else None
+    model = get_rule("heads")
+
+    def dim_ok(d, axis):
+        if axis is None:
+            return False
+        mesh = get_mesh()
+        if mesh is None:
+            return True
+        size = mesh.shape[axis] if isinstance(axis, str) else 1
+        return size > 1 and d % size == 0
+
+    nd = len(shape)
+    if nd <= 1:
+        return P()
+    if "embed" in name or "lm_head" in name:
+        # (vocab, d) or (d, vocab): shard the big dim over 'model'.
+        big = 0 if shape[0] >= shape[-1] else nd - 1
+        out = [None] * nd
+        if dim_ok(shape[big], model):
+            out[big] = model
+        other = nd - 1 - big
+        if dim_ok(shape[other], fsdp):
+            out[other] = fsdp
+        return P(*out)
+    if "expert" in name and nd >= 3:
+        # (..., E, d_in, d_out): expert-parallel over 'model' (EP),
+        # FSDP over d_in; leading dims are layer stacking.
+        lead = nd - 3
+        e = model if dim_ok(shape[lead], model) else None
+        f = fsdp if dim_ok(shape[lead + 1], fsdp) else None
+        return P(*([None] * lead), e, f, None)
+    # Generic (..., in, out) with any leading layer-stack dims:
+    # FSDP on in, TP on out — except out-projections which are
+    # transposed: TP on in, FSDP on out.
+    transposed = any(
+        k in name for k in ("wo", "out_proj", "w2", "down", "w_o", "cm_v"))
+    a0 = model if transposed else fsdp
+    a1 = fsdp if transposed else model
+    a0 = a0 if dim_ok(shape[-2], a0) else None
+    a1 = a1 if dim_ok(shape[-1], a1) else None
+    if a0 == a1 and a0 is not None:
+        a1 = None
+    return P(*([None] * (nd - 2)), a0, a1)
+
+
+def params_shardings(params_shapes, cfg):
+    """Pytree of NamedShardings for a params pytree of ShapeDtypeStructs."""
+    mesh = get_mesh()
+
+    def one(path, leaf):
+        ps = pspec_for_param(tuple(str(getattr(k, "key", k)) for k in path),
+                             leaf.shape, cfg)
+        return NamedSharding(mesh, ps) if mesh is not None else None
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)

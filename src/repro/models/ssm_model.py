@@ -1,0 +1,182 @@
+"""RWKV6 ("Finch") language model assembly — the attention-free arch.
+
+Block = LayerNorm -> time-mix (+residual) -> LayerNorm -> channel-mix
+(+residual), with an extra LayerNorm after the embedding (RWKV
+convention).  Decode is O(1)/token with a (B, H, K, V) state per layer —
+this arch runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv6, sharding
+from repro.models.common import cross_entropy_loss, dtype_of, layer_norm, normal_init
+
+Array = jax.Array
+
+
+def _init_block(key, cfg, dtype):
+    d = cfg.d_model
+    return {
+        "ln1_w": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "ln2_w": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "rwkv": rwkv6.init_rwkv6_params(key, cfg, dtype),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    dtype = dtype_of(cfg)
+    k0, k1, k2 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "embed": normal_init(k0, (cfg.vocab_size, d), dtype),
+        "ln0_w": jnp.ones((d,), jnp.float32),
+        "ln0_b": jnp.zeros((d,), jnp.float32),
+        "final_ln_w": jnp.ones((d,), jnp.float32),
+        "final_ln_b": jnp.zeros((d,), jnp.float32),
+        "lm_head": normal_init(k1, (d, cfg.vocab_size), dtype),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg, dtype))(
+            jax.random.split(k2, cfg.n_layers)
+        ),
+    }
+
+
+def _block(x, blk, cfg):
+    h = layer_norm(x, blk["ln1_w"], blk["ln1_b"], cfg.norm_eps)
+    x = x + rwkv6.rwkv6_time_mix(h, blk["rwkv"], cfg)
+    h = layer_norm(x, blk["ln2_w"], blk["ln2_b"], cfg.norm_eps)
+    x = x + rwkv6.rwkv6_channel_mix(h, blk["rwkv"])
+    return sharding.shard(x, "batch", None, None)
+
+
+def forward(params, cfg, batch) -> tuple[Array, Array]:
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    x = layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+
+    if cfg.scan_layers:
+        def scan_fn(xx, blk):
+            return _block(xx, blk, cfg), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            x = _block(x, blk, cfg)
+
+    x = layer_norm(x, params["final_ln_w"], params["final_ln_b"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return sharding.shard(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, aux = forward(params, cfg, batch)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": aux}
+
+
+# ---- serving ----------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_seq: int) -> dict:
+    del max_seq  # O(1) state — the point of this family
+    dtype = dtype_of(cfg)
+    nh, hk = rwkv6.dims(cfg)
+    d = cfg.d_model
+    L = cfg.n_layers
+    return {
+        "state": jnp.zeros((L, batch_size, nh, hk, hk), jnp.float32),
+        "tm_shift": jnp.zeros((L, batch_size, d), dtype),
+        "cm_shift": jnp.zeros((L, batch_size, d), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, cache, tokens) -> tuple[Array, dict]:
+    x = params["embed"][tokens]
+    x = layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+
+    def layer_step(xx, inp):
+        blk, state, tm_s, cm_s = inp
+        h = layer_norm(xx, blk["ln1_w"], blk["ln1_b"], cfg.norm_eps)
+        tm_out, _, c1 = rwkv6.rwkv6_decode(
+            h, blk["rwkv"], cfg,
+            {"state": state, "tm_shift": tm_s, "cm_shift": cm_s},
+        )
+        xx = xx + tm_out
+        h = layer_norm(xx, blk["ln2_w"], blk["ln2_b"], cfg.norm_eps)
+        cm_out, c2 = rwkv6.rwkv6_channel_mix_step(h, blk["rwkv"], c1)
+        xx = xx + cm_out
+        return xx, (c2["state"], c2["tm_shift"], c2["cm_shift"])
+
+    if cfg.scan_layers:
+        x, (st, tm, cm) = jax.lax.scan(
+            layer_step, x,
+            (params["blocks"], cache["state"], cache["tm_shift"],
+             cache["cm_shift"]),
+        )
+    else:
+        sts, tms, cms = [], [], []
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, (s_, t_, c_) = layer_step(
+                x, (blk, cache["state"][i], cache["tm_shift"][i],
+                    cache["cm_shift"][i])
+            )
+            sts.append(s_)
+            tms.append(t_)
+            cms.append(c_)
+        st, tm, cm = jnp.stack(sts), jnp.stack(tms), jnp.stack(cms)
+
+    x = layer_norm(x, params["final_ln_w"], params["final_ln_b"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, {
+        "state": st, "tm_shift": tm, "cm_shift": cm, "pos": cache["pos"] + 1
+    }
+
+
+def prefill(params, cfg, batch) -> tuple[Array, dict]:
+    """Exact one-pass prefill: the chunked-parallel forward also yields
+    the end-of-sequence states (O(L) total, fully vectorized — no
+    scan-of-decode-steps)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+
+    def block_fn(xx, blk):
+        h = layer_norm(xx, blk["ln1_w"], blk["ln1_b"], cfg.norm_eps)
+        tm_out, s_final = rwkv6.rwkv6_time_mix(
+            h, blk["rwkv"], cfg, return_state=True
+        )
+        xx = xx + tm_out
+        h2 = layer_norm(xx, blk["ln2_w"], blk["ln2_b"], cfg.norm_eps)
+        xx = xx + rwkv6.rwkv6_channel_mix(h2, blk["rwkv"])
+        xx = sharding.shard(xx, "batch", None, None)
+        return xx, (s_final, h[:, -1], h2[:, -1])
+
+    if cfg.scan_layers:
+        x, (st, tm, cm) = jax.lax.scan(block_fn, x, params["blocks"])
+    else:
+        sts, tms, cms = [], [], []
+        for i in range(cfg.n_layers):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, (s_, t_, c_) = block_fn(x, blk)
+            sts.append(s_)
+            tms.append(t_)
+            cms.append(c_)
+        st, tm, cm = jnp.stack(sts), jnp.stack(tms), jnp.stack(cms)
+
+    x = layer_norm(x, params["final_ln_w"], params["final_ln_b"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"])
+    cache = {
+        "state": st,
+        "tm_shift": tm.astype(dtype_of(cfg)),
+        "cm_shift": cm.astype(dtype_of(cfg)),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    return logits[:, None, :], cache

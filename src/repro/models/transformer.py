@@ -1,0 +1,370 @@
+"""Decoder-only transformer LM (dense / MoE / VLM families).
+
+Layers run under ``lax.scan`` over stacked parameters (compile-time and
+HLO size stay flat in depth).  MoE architectures with
+``moe_interleave > 1`` scan over *super-layers* of
+``interleave`` layers ((interleave-1) dense + 1 MoE) so the stack stays
+homogeneous; ``interleave == 1`` is the all-MoE case (olmoe).
+
+The VLM family (internvl2) consumes a stubbed patch-embedding prefix:
+``batch["vis_embeds"]`` (B, n_vis, D) is projected and prepended to the
+token embeddings; labels for those positions are ignored (-100).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp, moe, sharding
+from repro.models.common import (
+    cross_entropy_loss,
+    dtype_of,
+    fan_in_init,
+    normal_init,
+    rms_norm,
+)
+
+Array = jax.Array
+
+
+# ---- parameter construction -------------------------------------------------
+
+
+def _init_dense_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attention.init_attention_params(k1, cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": mlp.init_mlp_params(k2, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_kind),
+    }
+
+
+def _init_moe_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attention.init_attention_params(k1, cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "moe": moe.init_moe_params(k2, cfg, dtype),
+    }
+
+
+def group_structure(cfg) -> tuple[int, int, bool]:
+    """(n_groups, dense_per_group, has_moe)."""
+    if cfg.n_experts == 0:
+        return cfg.n_layers, 1, False
+    g = cfg.moe_interleave
+    assert cfg.n_layers % g == 0, "layers must divide moe_interleave"
+    return cfg.n_layers // g, g - 1, True
+
+
+def init_params(key, cfg) -> dict:
+    dtype = dtype_of(cfg)
+    n_groups, dense_per, has_moe = group_structure(cfg)
+    keys = jax.random.split(key, 8)
+
+    params: dict[str, Any] = {
+        "embed": normal_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), dtype
+        )
+    if cfg.n_vis_tokens:
+        params["vis_proj"] = fan_in_init(
+            keys[2], (cfg.d_model, cfg.d_model), dtype
+        )
+
+    def stack_init(fn, n, key):
+        ks = jax.random.split(key, n)
+        return jax.vmap(lambda k: fn(k, cfg, dtype))(ks)
+
+    if dense_per > 0:
+        def dense_group(k):
+            ks = jax.random.split(k, max(dense_per, 1))
+            return jax.vmap(lambda kk: _init_dense_layer(kk, cfg, dtype))(ks)
+
+        params["dense_blocks"] = jax.vmap(dense_group)(
+            jax.random.split(keys[3], n_groups)
+        )  # leaves: (G, dense_per, ...)
+    if has_moe:
+        params["moe_blocks"] = stack_init(_init_moe_layer, n_groups, keys[4])
+    return params
+
+
+# ---- blocks -----------------------------------------------------------------
+
+
+def _dense_block(x, blk, cfg, positions):
+    h = rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+    x = x + attention.full_attention(h, blk["attn"], cfg, positions)
+    h = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+    x = x + mlp.mlp(h, blk["mlp"], cfg.mlp_kind)
+    return sharding.shard(x, "batch", "residual", None)
+
+
+def _moe_block(x, blk, cfg, positions):
+    h = rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+    x = x + attention.full_attention(h, blk["attn"], cfg, positions)
+    h = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+    y, aux = moe.moe(h, blk["moe"], cfg)
+    return sharding.shard(x + y, "batch", "residual", None), aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "selective":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def backbone(params, cfg, x, positions):
+    """Run all layers.  x: (B, S, D) -> (x, aux_loss)."""
+    n_groups, dense_per, has_moe = group_structure(cfg)
+
+    def super_layer(x, group):
+        aux = jnp.zeros((), jnp.float32)
+        if dense_per > 0:
+            dense_stack = group["dense"]
+            if cfg.scan_layers and dense_per > 1:
+                def inner(xx, blk):
+                    return _dense_block(xx, blk, cfg, positions), None
+
+                x, _ = jax.lax.scan(inner, x, dense_stack)
+            else:
+                for i in range(dense_per):
+                    blk = jax.tree.map(lambda a: a[i], dense_stack)
+                    x = _dense_block(x, blk, cfg, positions)
+        if has_moe:
+            x, aux = _moe_block(x, group["moe"], cfg, positions)
+        return x, aux
+
+    super_layer = _remat(super_layer, cfg)
+
+    groups = {}
+    if dense_per > 0:
+        groups["dense"] = params["dense_blocks"]
+    if has_moe:
+        groups["moe"] = params["moe_blocks"]
+
+    if cfg.scan_layers:
+        def scan_fn(xx, group):
+            xx, aux = super_layer(xx, group)
+            return xx, aux
+
+        x, auxs = jax.lax.scan(scan_fn, x, groups)
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n_groups):
+            group = jax.tree.map(lambda a: a[i], groups)
+            x, a = super_layer(x, group)
+            aux = aux + a
+    return x, aux
+
+
+# ---- embedding / head -------------------------------------------------------
+
+
+def embed_tokens(params, cfg, tokens, batch):
+    x = params["embed"][tokens]            # (B, S, D)
+    if cfg.n_vis_tokens and "vis_embeds" in batch:
+        vis = jnp.einsum(
+            "bnd,de->bne", batch["vis_embeds"].astype(x.dtype), params["vis_proj"]
+        )
+        x = jnp.concatenate([vis, x[:, : x.shape[1] - vis.shape[1]]], axis=1)
+    if cfg.family == "dense" and cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return sharding.shard(x, "batch", None, None)
+
+
+def lm_logits(params, cfg, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return sharding.shard(logits, "batch", None, "vocab")
+
+
+# ---- public entry points ----------------------------------------------------
+
+
+def forward(params, cfg, batch) -> tuple[Array, Array]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(params, cfg, tokens, batch)
+    x, aux = backbone(params, cfg, x, positions)
+    return lm_logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg, batch) -> tuple[Array, dict]:
+    logits, aux = forward(params, cfg, batch)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---- serving ----------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_seq: int) -> dict:
+    dtype = dtype_of(cfg)
+    shape = (cfg.n_layers, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def layers_per_group(cfg) -> int:
+    _, dense_per, has_moe = group_structure(cfg)
+    return dense_per + (1 if has_moe else 0)
+
+
+def _group_params(params, cfg):
+    groups = {}
+    if "dense_blocks" in params:
+        groups["dense"] = params["dense_blocks"]
+    if "moe_blocks" in params:
+        groups["moe"] = params["moe_blocks"]
+    return groups
+
+
+def _serve_group(x, group, k_grp, v_grp, cfg, *, mode, positions=None, pos=None):
+    """Run one super-layer in serve mode.
+
+    k_grp/v_grp: (Lg, B, S, Hkv, hd) cache slices for this group (decode
+    mode) or None (prefill mode).  Returns (x, new_k (Lg,...), new_v)."""
+    _, dense_per, has_moe = group_structure(cfg)
+    new_k, new_v = [], []
+    li = 0
+
+    def attn_sublayer(x, blk, li):
+        h = rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+        if mode == "prefill":
+            att, k, v = attention.prefill_attention_with_cache(
+                h, blk["attn"], cfg, positions
+            )
+        else:
+            att, k, v = attention.decode_attention(
+                h, blk["attn"], cfg, k_grp[li], v_grp[li], pos
+            )
+        return x + att, k, v
+
+    for di in range(dense_per):
+        blk = jax.tree.map(lambda a: a[di], group["dense"])
+        x, k, v = attn_sublayer(x, blk, li)
+        h = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+        x = x + mlp.mlp(h, blk["mlp"], cfg.mlp_kind)
+        new_k.append(k)
+        new_v.append(v)
+        li += 1
+    if has_moe:
+        blk = group["moe"]
+        x, k, v = attn_sublayer(x, blk, li)
+        h = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+        y, _ = moe.moe(h, blk["moe"], cfg)
+        x = x + y
+        new_k.append(k)
+        new_v.append(v)
+    x = sharding.shard(x, "batch", None, None)
+    return x, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill(params, cfg, batch) -> tuple[Array, dict]:
+    """Full-sequence prefill; returns (last-position logits, filled cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(params, cfg, tokens, batch)
+    groups = _group_params(params, cfg)
+    n_groups, _, _ = group_structure(cfg)
+    lg = layers_per_group(cfg)
+
+    def scan_fn(xx, group):
+        xx, k, v = _serve_group(
+            xx, group, None, None, cfg, mode="prefill", positions=positions
+        )
+        return xx, (k, v)
+
+    if cfg.scan_layers:
+        x, (k_stack, v_stack) = jax.lax.scan(scan_fn, x, groups)
+        # (G, Lg, B, S, Hkv, hd) -> (L, B, S, Hkv, hd)
+        k_stack = k_stack.reshape((n_groups * lg,) + k_stack.shape[2:])
+        v_stack = v_stack.reshape((n_groups * lg,) + v_stack.shape[2:])
+    else:
+        ks, vs = [], []
+        for gi in range(n_groups):
+            group = jax.tree.map(lambda a: a[gi], groups)
+            x, k, v = _serve_group(
+                x, group, None, None, cfg, mode="prefill", positions=positions
+            )
+            ks.append(k)
+            vs.append(v)
+        k_stack = jnp.concatenate(ks)
+        v_stack = jnp.concatenate(vs)
+
+    max_seq = batch.get("max_seq", s)
+    pad = max_seq - s
+    if pad > 0:
+        k_stack = jnp.pad(k_stack, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v_stack = jnp.pad(v_stack, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {
+        "k": sharding.shard(k_stack, None, "batch", "kv_seq", None, None),
+        "v": sharding.shard(v_stack, None, "batch", "kv_seq", None, None),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    logits = lm_logits(params, cfg, x[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens) -> tuple[Array, dict]:
+    """One token for every sequence.  tokens: (B, 1)."""
+    pos = cache["pos"]
+    x = params["embed"][tokens]
+    if cfg.family == "dense" and cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    groups = _group_params(params, cfg)
+    n_groups, _, _ = group_structure(cfg)
+    lg = layers_per_group(cfg)
+    kc = cache["k"].reshape((n_groups, lg) + cache["k"].shape[1:])
+    vc = cache["v"].reshape((n_groups, lg) + cache["v"].shape[1:])
+
+    if cfg.scan_layers:
+        def scan_fn(xx, inp):
+            group, k_grp, v_grp = inp
+            xx, nk, nv = _serve_group(
+                xx, group, k_grp, v_grp, cfg, mode="decode", pos=pos
+            )
+            return xx, (nk, nv)
+
+        x, (new_k, new_v) = jax.lax.scan(scan_fn, x, (groups, kc, vc))
+        new_k = new_k.reshape(cache["k"].shape)
+        new_v = new_v.reshape(cache["v"].shape)
+    else:
+        nks, nvs = [], []
+        for gi in range(n_groups):
+            group = jax.tree.map(lambda a: a[gi], groups)
+            x, nk, nv = _serve_group(
+                x, group, kc[gi], vc[gi], cfg, mode="decode", pos=pos
+            )
+            nks.append(nk)
+            nvs.append(nv)
+        new_k = jnp.concatenate(nks)
+        new_v = jnp.concatenate(nvs)
+
+    cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+    logits = lm_logits(params, cfg, x)
+    return logits, cache

@@ -1,0 +1,19 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    apply,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    schedule,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "apply",
+    "clip_by_global_norm",
+    "global_norm",
+    "init",
+    "schedule",
+]

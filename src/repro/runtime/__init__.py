@@ -1,0 +1,16 @@
+from repro.runtime.fault_tolerance import (
+    FailurePolicy,
+    NodeHealth,
+    RestartManager,
+    StragglerMonitor,
+)
+from repro.runtime.elastic import rescale_stacked, rescale_train_state
+
+__all__ = [
+    "FailurePolicy",
+    "NodeHealth",
+    "RestartManager",
+    "StragglerMonitor",
+    "rescale_stacked",
+    "rescale_train_state",
+]

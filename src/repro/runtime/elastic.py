@@ -1,0 +1,74 @@
+"""Elastic scaling: change the pod count without losing replica state.
+
+Because replicas are an explicit leading dimension, rescaling is a pure
+array operation on the train state:
+
+  * grow  (P -> P'): new pods bootstrap from the deterministic causal
+    merge of the survivors (they join with the merged snapshot and a
+    zeroed session — exactly a new client in the paper's protocol);
+  * shrink (P -> P'): departing pods' un-merged deltas are folded into
+    the survivors via one final merge (their writes are not lost — MW
+    holds across the membership change).
+
+The mesh itself is rebuilt by the launcher; this module only remaps the
+state pytrees.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sync.engine import SyncEngine, SyncState
+
+
+def _merge_all(stacked):
+    def m(x):
+        return jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
+
+    return jax.tree.map(m, stacked)
+
+
+def rescale_stacked(tree, new_pods: int):
+    """Resize the leading replica dim of a pod-stacked pytree."""
+
+    def r(x):
+        p = x.shape[0]
+        if new_pods == p:
+            return x
+        merged = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        if new_pods > p:
+            extra = jnp.broadcast_to(
+                merged, (new_pods - p,) + x.shape[1:]
+            ).astype(x.dtype)
+            return jnp.concatenate([x, extra], axis=0)
+        # shrink: fold departing deltas into the survivors.
+        survivors = x[:new_pods].astype(jnp.float32)
+        departing = x[new_pods:].astype(jnp.float32)
+        correction = (jnp.sum(departing, axis=0, keepdims=True)
+                      - (p - new_pods) * merged) / new_pods
+        return (survivors + correction).astype(x.dtype)
+
+    return jax.tree.map(r, tree)
+
+
+def rescale_train_state(state, engine: SyncEngine, new_pods: int):
+    """Remap a TrainState to a new pod count (fresh sync bookkeeping —
+    membership change resets sessions, as in the paper's model where a
+    new client starts with a zero clock)."""
+    from repro.train.train_step import TrainState
+
+    new_params = rescale_stacked(state.params, new_pods)
+    new_opt = state.opt._replace(
+        mu=rescale_stacked(state.opt.mu, new_pods),
+        nu=rescale_stacked(state.opt.nu, new_pods),
+    )
+    new_engine = SyncEngine(engine.policy, new_pods)
+    return TrainState(
+        params=new_params,
+        opt=new_opt,
+        sync=new_engine.init_state(new_params),
+        step=state.step,
+    ), new_engine

@@ -1,0 +1,134 @@
+"""Fault tolerance: failure detection, restart, straggler mitigation.
+
+CPU container = no real node failures, so the detector consumes an
+*injectable* health source (tests and examples inject failures), while
+the recovery path is the real one: restore from the replicated
+checkpoint store under session guarantees, rebuild the step functions,
+and replay the deterministic data pipeline from the restored step.
+
+Straggler mitigation is the timed bound Δ put to work: a pod that
+misses a merge deadline is simply excluded from that merge's quorum
+(its weight is redistributed) and catches up at the next one — the
+X-STCC guarantee caps how stale it can get (Δ·step_time), which is the
+paper's "timed" property doing straggler duty.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class NodeHealth:
+    """Injectable health source.  Production would wire this to the
+    coordination service heartbeats; tests flip bits."""
+
+    n_nodes: int
+    heartbeat_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        now = time.time()
+        self.last_heartbeat = [now] * self.n_nodes
+        self.forced_down: set[int] = set()
+
+    def beat(self, node: int, now: float | None = None) -> None:
+        self.last_heartbeat[node] = time.time() if now is None else now
+
+    def fail(self, node: int) -> None:
+        self.forced_down.add(node)
+
+    def recover(self, node: int) -> None:
+        self.forced_down.discard(node)
+        self.beat(node)
+
+    def alive(self, now: float | None = None) -> list[bool]:
+        now = time.time() if now is None else now
+        return [
+            (i not in self.forced_down)
+            and (now - self.last_heartbeat[i] < self.heartbeat_timeout_s)
+            for i in range(self.n_nodes)
+        ]
+
+
+@dataclasses.dataclass
+class FailurePolicy:
+    """What the trainer does when the detector fires."""
+
+    max_restarts: int = 8
+    straggler_deadline_factor: float = 3.0  # x median step time
+
+
+class StragglerMonitor:
+    """Tracks per-pod step durations; flags pods exceeding the deadline."""
+
+    def __init__(self, n_pods: int, factor: float = 3.0, window: int = 32):
+        self.n_pods = n_pods
+        self.factor = factor
+        self.window = window
+        self.durations: list[list[float]] = [[] for _ in range(n_pods)]
+
+    def record(self, pod: int, seconds: float) -> None:
+        d = self.durations[pod]
+        d.append(seconds)
+        if len(d) > self.window:
+            d.pop(0)
+
+    def median_all(self) -> float:
+        import statistics
+
+        flat = [x for d in self.durations for x in d]
+        return statistics.median(flat) if flat else 0.0
+
+    def stragglers(self) -> list[int]:
+        med = self.median_all()
+        if med <= 0:
+            return []
+        out = []
+        for pod, d in enumerate(self.durations):
+            if d and d[-1] > self.factor * med:
+                out.append(pod)
+        return out
+
+    def merge_weights(self) -> jnp.ndarray:
+        """Per-pod weights for the next merge: stragglers excluded, mass
+        redistributed (the Δ-skip).  Shape (n_pods,), sums to n_pods."""
+        lag = set(self.stragglers())
+        ok = [i for i in range(self.n_pods) if i not in lag]
+        w = jnp.zeros((self.n_pods,), jnp.float32)
+        if not ok:  # everyone slow: keep everyone
+            return jnp.ones((self.n_pods,), jnp.float32)
+        return w.at[jnp.array(ok)].set(self.n_pods / len(ok))
+
+
+class RestartManager:
+    """Coordinates restart-from-checkpoint after a failure."""
+
+    def __init__(self, store, policy: FailurePolicy):
+        self.store = store
+        self.policy = policy
+        self.restarts = 0
+
+    def recover(self, template, session) -> tuple[object, int]:
+        """Restore params and the step to resume from.
+
+        Session guarantees make this safe against replica lag: a worker
+        that already saw version v can never be handed v' < v (monotonic
+        read), and a worker restarting right after its own save is
+        guaranteed to see that save (read-your-write)."""
+        if self.restarts >= self.policy.max_restarts:
+            raise RuntimeError("restart budget exhausted")
+        self.restarts += 1
+        self.store.propagate()
+        params, version, rerouted = self.store.restore(template, session)
+        meta_step = None
+        for r in range(self.store.n_replicas):
+            meta = self.store._read_meta(r)
+            e = meta["entries"].get(str(version))
+            if e:
+                meta_step = e["step"]
+                break
+        return params, int(meta_step if meta_step is not None else 0)

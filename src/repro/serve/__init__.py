@@ -1,0 +1,3 @@
+from repro.serve.engine import ReplicaSnapshot, ServeSession, ServingEngine
+
+__all__ = ["ReplicaSnapshot", "ServeSession", "ServingEngine"]

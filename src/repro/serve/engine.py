@@ -1,0 +1,135 @@
+"""Batched serving engine with session-guarantee-aware replica routing.
+
+The paper's Fig. 2 scenario for model serving: several serving replicas
+(pods) each hold a parameter snapshot at some version; request *sessions*
+must see monotonically-fresh models (MR) and their own effects (RYW —
+e.g. a session that triggered an adapter/weights refresh must see it).
+The router implements exactly the X-STCC client-side check: a replica is
+admissible for a session iff its version >= the session floor; weaker
+levels skip the check and stale serving becomes observable.
+
+The compute path (prefill/decode) is the model substrate; this module
+owns the jit'd step functions and the routing/bookkeeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.consistency import ConsistencyLevel
+from repro.models.model_zoo import Model
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeSession:
+    session_id: int
+    read_floor: int = 0  # min model version this session may observe
+
+
+@dataclasses.dataclass
+class ReplicaSnapshot:
+    params: Any
+    version: int
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        model: Model,
+        level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+        jit: bool = True,
+    ):
+        self.model = model
+        self.level = level
+        self.replicas: list[ReplicaSnapshot] = []
+        self.stale_serves = 0
+        self.total_serves = 0
+        self.reroutes = 0
+        if jit:
+            self._prefill = jax.jit(model.prefill)
+            self._decode = jax.jit(model.decode_step)
+        else:
+            self._prefill = model.prefill
+            self._decode = model.decode_step
+
+    # -- replica management -----------------------------------------------------
+
+    def publish(self, params, version: int, replica: int | None = None):
+        """Install a parameter snapshot on one replica (or append new)."""
+        snap = ReplicaSnapshot(params=params, version=version)
+        if replica is None or replica >= len(self.replicas):
+            self.replicas.append(snap)
+        else:
+            self.replicas[replica] = snap
+
+    def publish_everywhere(self, params, version: int):
+        for r in range(len(self.replicas)):
+            self.replicas[r] = ReplicaSnapshot(params, version)
+
+    @property
+    def latest_version(self) -> int:
+        return max((r.version for r in self.replicas), default=0)
+
+    # -- routing ------------------------------------------------------------------
+
+    def route(self, session: ServeSession, preferred: int | None = None) -> int:
+        """Pick a replica for this session per the consistency level."""
+        n = len(self.replicas)
+        if n == 0:
+            raise RuntimeError("no replicas published")
+        idx = (session.session_id if preferred is None else preferred) % n
+        if self.level.is_session_guarded:
+            if self.replicas[idx].version < session.read_floor:
+                # Reroute to the freshest admissible replica (MR/RYW).
+                best = max(range(n), key=lambda r: self.replicas[r].version)
+                if self.replicas[best].version < session.read_floor:
+                    raise RuntimeError("no admissible replica for session")
+                self.reroutes += 1
+                idx = best
+        return idx
+
+    def _observe(self, session: ServeSession, replica: int):
+        v = self.replicas[replica].version
+        self.total_serves += 1
+        if v < self.latest_version:
+            self.stale_serves += 1
+        session.read_floor = max(session.read_floor, v)
+
+    # -- compute ---------------------------------------------------------------
+
+    def prefill(self, session: ServeSession, batch: dict,
+                preferred: int | None = None):
+        r = self.route(session, preferred)
+        self._observe(session, r)
+        logits, cache = self._prefill(self.replicas[r].params, batch)
+        return logits, cache, r
+
+    def decode(self, session: ServeSession, cache, tokens,
+               replica: int):
+        """Decode continues on the session's bound replica (KV cache
+        affinity); version floors were checked at prefill."""
+        self.total_serves += 1
+        return self._decode(self.replicas[replica].params, cache, tokens)
+
+    def generate(self, session: ServeSession, batch: dict, n_tokens: int,
+                 preferred: int | None = None):
+        """Greedy generation helper for examples/tests."""
+        logits, cache, r = self.prefill(session, batch, preferred)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for _ in range(n_tokens - 1):
+            logits, cache = self.decode(session, cache, tok, r)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1), r
+
+    # -- metrics -----------------------------------------------------------------
+
+    def staleness_rate(self) -> float:
+        return self.stale_serves / max(1, self.total_serves)

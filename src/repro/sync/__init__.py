@@ -1,0 +1,4 @@
+from repro.sync.engine import SyncEngine, SyncState
+from repro.sync import compression
+
+__all__ = ["SyncEngine", "SyncState", "compression"]

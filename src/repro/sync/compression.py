@@ -1,0 +1,90 @@
+"""Inter-pod gradient/delta compression (beyond-paper optimization).
+
+The paper's monetary-cost model bills inter-DC (= inter-pod) traffic at
+$0.01/GB while intra-DC is free (Table 2).  X-STCC already divides
+inter-pod traffic by Δ; compression multiplies the saving:
+
+  * ``int8``  — per-leaf symmetric quantization.  The pod-stacked int8
+    tensor is all-gathered (1 B/elem on the wire instead of a 2-4 B/elem
+    all-reduce) and dequantized + averaged locally.
+  * ``topk``  — magnitude top-k sparsification: (values, indices) pairs,
+    k = ``fraction`` x size; wire bytes ~ 5-6 B x k instead of 2-4 B x n.
+
+Both are *merge-compatible*: compress(delta_i) per pod, exchange, then
+average — the deterministic X-STCC merge order is preserved because the
+combine (mean) is commutative and the session version counter, not the
+payload, orders the merge.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def int8_quantize(x: Array) -> tuple[Array, Array]:
+    """Symmetric per-leaf int8.  Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def int8_compress_tree(tree) -> Any:
+    """Pytree -> {leaf path: (q, scale)} mirrored pytree."""
+    return jax.tree.map(lambda x: int8_quantize(x), tree,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def int8_decompress_tree(ctree, like) -> Any:
+    return jax.tree.map(
+        lambda qs, x: int8_dequantize(qs[0], qs[1], x.dtype),
+        ctree,
+        like,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+def topk_sparsify(x: Array, fraction: float) -> tuple[Array, Array, Array]:
+    """Keep the top-|fraction| entries by magnitude.
+
+    Returns (values (k,), indices (k,) int32, error_feedback residual)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(flat.shape[0] * fraction))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    residual = flat.at[idx].set(0.0).reshape(x.shape)
+    return kept, idx.astype(jnp.int32), residual.astype(x.dtype)
+
+
+def topk_densify(values: Array, indices: Array, shape, dtype) -> Array:
+    n = 1
+    for s in shape:
+        n *= s
+    out = jnp.zeros((n,), jnp.float32).at[indices].add(values)
+    return out.reshape(shape).astype(dtype)
+
+
+def wire_bytes(tree, method: str, fraction: float = 0.01) -> int:
+    """Analytic wire size of one pod's payload (for the cost model)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(leaf.size)
+        if method == "none":
+            total += n * leaf.dtype.itemsize
+        elif method == "int8":
+            total += n * 1 + 4
+        elif method == "topk":
+            k = max(1, int(n * fraction))
+            total += k * (4 + 4)
+        else:
+            raise ValueError(method)
+    return total

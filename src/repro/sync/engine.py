@@ -1,0 +1,317 @@
+"""Consistency-policy-driven parameter synchronization across pods.
+
+This is the paper's technique as a first-class training feature.  Pods
+are the replicas: parameters carry an explicit leading replica dimension
+``(n_pods, ...)`` sharded over the mesh's 'pod' axis, so replica
+divergence, merges, and their collective traffic are *explicit in the
+HLO* (inter-pod bytes = collectives whose replica groups span pods —
+billed as inter-DC traffic by the paper's cost model).
+
+Two compiled programs per policy (MaxText-style multi-program stepping):
+
+  * ``local``  — per-pod grad + optimizer update, zero inter-pod comm;
+  * ``sync``   — local step + the policy's merge:
+
+      ALL     mean over the pod axis every step (synchronous DP);
+      QUORUM  rotating majority-subgroup mean every step;
+      ONE     ring gossip with period Δ (no ordering — the violating
+              baseline);
+      CAUSAL  every-step vector-clock-ordered merge;
+      TCC     Δ-periodic timed-causal merge (no session floors);
+      X_STCC  Δ-periodic timed-causal merge + session guarantees +
+              optional inter-pod compression (int8 / top-k).
+
+The X-STCC bookkeeping reuses ``repro.core.xstcc`` with client i = pod
+i's training process and replica i = pod i's parameter copy; every merge
+registers one write per pod in the DUOT, advances vector clocks through
+``server_merge``, and (optionally) runs the audit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import duot as duot_lib
+from repro.core import vector_clock as vclock
+from repro.core import xstcc
+from repro.core.consistency import ConsistencyLevel, ConsistencyPolicy
+from repro.sync import compression
+
+Array = jax.Array
+
+
+class SyncState(NamedTuple):
+    cluster: xstcc.ClusterState   # P pods as both clients and replicas
+    duot: duot_lib.Duot           # op log for the audit layer
+    anchor: Any                   # last merged snapshot (compression) or None
+    residual: Any                 # top-k error feedback or None
+    merges: Array                 # () int32
+    inter_pod_gb: Array           # () float32 — analytic billed traffic
+    violations: Array             # () int32 — audit-detected violations
+    severity: Array               # () float32 — last audit severity
+
+
+class SyncEngine:
+    """Per-policy merge engine over pod-stacked parameter pytrees."""
+
+    def __init__(self, policy: ConsistencyPolicy, n_pods: int,
+                 params_template=None):
+        self.policy = policy
+        self.n_pods = max(1, n_pods)
+        self._wire_gb = None
+        if params_template is not None:
+            self._wire_gb = self.merge_wire_bytes(
+                self.payload_bytes(params_template)) / 1e9
+
+    # -- static accounting ---------------------------------------------------
+
+    def payload_bytes(self, params_template) -> float:
+        """One pod's merge payload in bytes (analytic, for the bill)."""
+        inner = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                             params_template)
+        method = (self.policy.compress_inter_pod
+                  if self.policy.level is ConsistencyLevel.X_STCC else "none")
+        return compression.wire_bytes(inner, method, self.policy.topk_fraction)
+
+    def merge_wire_bytes(self, payload: float) -> float:
+        """Total inter-pod wire bytes of ONE merge, by collective shape.
+
+        ALL/CAUSAL/TCC/X-STCC(mean): ring all-reduce  = 2(P-1) x payload
+        QUORUM: all-reduce within the quorum          = 2(q-1) x payload
+        ONE: neighbor gossip (one hop per pod)        =      P x payload
+        X-STCC compressed: quantized ring reduce      = 2(P-1) x payload'
+        (payload' already reflects the compression.)"""
+        p = self.n_pods
+        lv = self.policy.level
+        if p <= 1:
+            return 0.0
+        if lv is ConsistencyLevel.ONE:
+            return p * payload
+        if lv is ConsistencyLevel.QUORUM:
+            q = self.policy.quorum_size(p)
+            return 2 * max(q - 1, 1) * payload
+        return 2 * (p - 1) * payload
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self, params_stacked) -> SyncState:
+        p = self.n_pods
+        needs_anchor = (
+            self.policy.level is ConsistencyLevel.X_STCC
+            and self.policy.compress_inter_pod != "none"
+        )
+        anchor = (
+            jax.tree.map(lambda x: x[0], params_stacked) if needs_anchor else None
+        )
+        residual = (
+            jax.tree.map(jnp.zeros_like, params_stacked)
+            if self.policy.compress_inter_pod == "topk"
+            else None
+        )
+        return SyncState(
+            cluster=xstcc.make_cluster(p, p, 1, pending_cap=max(4 * p, 16)),
+            duot=duot_lib.make(self.policy.duot_capacity, p),
+            anchor=anchor,
+            residual=residual,
+            merges=jnp.zeros((), jnp.int32),
+            inter_pod_gb=jnp.zeros((), jnp.float32),
+            violations=jnp.zeros((), jnp.int32),
+            severity=jnp.zeros((), jnp.float32),
+        )
+
+    # -- merges --------------------------------------------------------------
+
+    def merge(self, params, sync: SyncState) -> tuple[Any, SyncState]:
+        """Apply the policy's inter-pod merge to pod-stacked ``params``."""
+        if self.n_pods == 1:
+            return params, sync._replace(merges=sync.merges + 1)
+        level = self.policy.level
+        if level in (ConsistencyLevel.ALL, ConsistencyLevel.TWO):
+            new = self._mean_merge(params)
+        elif level is ConsistencyLevel.QUORUM:
+            new = self._quorum_merge(params, sync.merges)
+        elif level is ConsistencyLevel.ONE:
+            new = self._gossip_merge(params)
+        elif level is ConsistencyLevel.CAUSAL:
+            new = self._mean_merge(params)
+        else:  # TCC / X_STCC
+            new, sync = self._xstcc_merge(params, sync)
+        sync = self._bookkeep(sync, level)
+        return new, sync
+
+    def _mean_merge(self, params):
+        def m(x):
+            mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+            return jnp.broadcast_to(mean, x.shape).astype(x.dtype)
+
+        return jax.tree.map(m, params)
+
+    def _quorum_merge(self, params, merges):
+        p = self.n_pods
+        q = self.policy.quorum_size(p)
+        start = jnp.mod(merges, p)
+        idx = jnp.arange(p, dtype=jnp.int32)
+        member = jnp.mod(idx - start, p) < q  # rotating quorum membership
+
+        def m(x):
+            mask = member.reshape((p,) + (1,) * (x.ndim - 1))
+            x32 = x.astype(jnp.float32)
+            msum = jnp.sum(jnp.where(mask, x32, 0.0), axis=0, keepdims=True)
+            merged = msum / q
+            return jnp.where(mask, merged, x32).astype(x.dtype)
+
+        return jax.tree.map(m, params)
+
+    def _gossip_merge(self, params):
+        def m(x):
+            neighbor = jnp.roll(x, 1, axis=0)
+            return ((x.astype(jnp.float32) + neighbor.astype(jnp.float32))
+                    * 0.5).astype(x.dtype)
+
+        return jax.tree.map(m, params)
+
+    def _xstcc_merge(self, params, sync: SyncState):
+        method = self.policy.compress_inter_pod
+        if method == "none":
+            return self._mean_merge(params), sync
+
+        anchor = sync.anchor
+        p = self.n_pods
+
+        if method == "int8":
+            def m(x, a):
+                delta = x.astype(jnp.float32) - a.astype(jnp.float32)[None]
+                red = tuple(range(1, x.ndim))
+                scale = jnp.maximum(
+                    jnp.max(jnp.abs(delta), axis=red), 1e-12) / 127.0
+                q = jnp.clip(
+                    jnp.round(delta / scale.reshape((p,) + (1,) * (x.ndim - 1))),
+                    -127, 127).astype(jnp.int8)
+                # int8 on the wire: the stacked int8 tensor is replicated
+                # (all-gather of s8) and combined locally.
+                deq = q.astype(jnp.float32) * scale.reshape(
+                    (p,) + (1,) * (x.ndim - 1))
+                mean_delta = jnp.mean(deq, axis=0)
+                merged = a.astype(jnp.float32) + mean_delta
+                return jnp.broadcast_to(merged[None], x.shape).astype(x.dtype), \
+                    merged.astype(a.dtype)
+
+            pairs = jax.tree.map(m, params, anchor)
+            new = jax.tree.map(lambda t: t[0], pairs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+            new_anchor = jax.tree.map(lambda t: t[1], pairs,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+            return new, sync._replace(anchor=new_anchor)
+
+        # top-k with error feedback
+        frac = self.policy.topk_fraction
+
+        def m(x, a, r):
+            delta = (x.astype(jnp.float32) - a.astype(jnp.float32)[None]
+                     + r.astype(jnp.float32))
+            flat = delta.reshape(p, -1)
+            k = max(1, int(flat.shape[1] * frac))
+            mag = jnp.abs(flat)
+            _, idx = jax.lax.top_k(mag, k)                      # (p, k)
+            vals = jnp.take_along_axis(flat, idx, axis=1)
+            sparse = jnp.zeros_like(flat).at[
+                jnp.arange(p)[:, None], idx].set(vals)
+            new_resid = (flat - sparse).reshape(x.shape).astype(x.dtype)
+            mean_delta = jnp.mean(sparse, axis=0).reshape(x.shape[1:])
+            merged = a.astype(jnp.float32) + mean_delta
+            return (jnp.broadcast_to(merged[None], x.shape).astype(x.dtype),
+                    merged.astype(a.dtype), new_resid)
+
+        triples = jax.tree.map(m, params, anchor, sync.residual)
+        is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+        new = jax.tree.map(lambda t: t[0], triples, is_leaf=is3)
+        new_anchor = jax.tree.map(lambda t: t[1], triples, is_leaf=is3)
+        new_resid = jax.tree.map(lambda t: t[2], triples, is_leaf=is3)
+        return new, sync._replace(anchor=new_anchor, residual=new_resid)
+
+    # -- protocol bookkeeping --------------------------------------------------
+
+    def _bookkeep(self, sync: SyncState, level: ConsistencyLevel) -> SyncState:
+        """Register this merge in the protocol state.
+
+        Data-plane mirror of the merge: each pod *writes* its update at
+        its home replica; each pod then *reads* at its neighbor replica
+        (the paper's Fig. 2 mobility scenario — Bob reconnecting to a
+        different server); finally the server-side propagation runs.
+
+        Synchronous levels (ALL/TWO/QUORUM) propagate before the reads
+        (write-acks span the replica set); causal-family levels
+        propagate after, bounded by Δ — so ONE and plain CAUSAL expose
+        session violations at the neighbor read, while X-STCC's
+        enforcement repairs them (and counts zero)."""
+        p = self.n_pods
+        cluster = sync.cluster
+        duot = sync.duot
+
+        def write_one(i, carry):
+            cluster, duot = carry
+            res = xstcc.client_write(cluster, client=i, replica=i, resource=0)
+            duot = duot_lib.append(
+                duot, client=i, kind=duot_lib.WRITE, resource=0,
+                version=res.version, replica=i, vc=res.vc,
+            )
+            return res.state, duot
+
+        cluster, duot = jax.lax.fori_loop(0, p, write_one, (cluster, duot))
+
+        sync_ack = level in (
+            ConsistencyLevel.ALL, ConsistencyLevel.TWO, ConsistencyLevel.QUORUM
+        )
+        if sync_ack:
+            # Write acks span the replica set before the write commits.
+            cluster, _ = xstcc.server_merge(cluster, delta=0, level=level)
+
+        # Read at the *neighbor* replica (client mobility).  X-STCC
+        # enforces the session floors; weaker levels serve raw replicas.
+        enforce = level is ConsistencyLevel.X_STCC
+
+        def read_one(i, carry):
+            cluster, duot, viol = carry
+            res = xstcc.client_read(
+                cluster, client=i, replica=jnp.mod(i + 1, p), resource=0,
+                enforce_sessions=enforce,
+            )
+            duot = duot_lib.append(
+                duot, client=i, kind=duot_lib.READ, resource=0,
+                version=res.version, replica=jnp.mod(i + 1, p),
+                vc=res.state.session_vc[i],
+            )
+            return res.state, duot, viol + res.violation.astype(jnp.int32)
+
+        cluster, duot, viol = jax.lax.fori_loop(
+            0, p, read_one, (cluster, duot, sync.violations)
+        )
+
+        if not sync_ack:
+            # Timed-causal propagation (bounded by Δ for TCC/X-STCC).
+            cluster, _ = xstcc.server_merge(
+                cluster, delta=self.policy.delta_steps, level=level
+            )
+
+        severity = sync.severity
+        if self.policy.audit_every and level.is_causal:
+            from repro.core import audit as audit_lib
+
+            res = audit_lib.audit(duot, delta=self.policy.delta_steps * p)
+            severity = res.severity
+            # GC entries covered at every replica.
+            duot = duot_lib.gc(duot, xstcc.stability_frontier(cluster))
+
+        gb = jnp.float32(0.0 if self._wire_gb is None else self._wire_gb)
+        return sync._replace(
+            cluster=cluster,
+            duot=duot,
+            merges=sync.merges + 1,
+            inter_pod_gb=sync.inter_pod_gb + gb,
+            violations=viol,
+            severity=severity,
+        )

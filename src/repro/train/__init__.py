@@ -1,0 +1,18 @@
+from repro.train.train_step import (
+    TrainFns,
+    TrainState,
+    make_train_fns,
+    split_batch_for_pods,
+    stack_for_pods,
+)
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "TrainFns",
+    "TrainState",
+    "Trainer",
+    "TrainerConfig",
+    "make_train_fns",
+    "split_batch_for_pods",
+    "stack_for_pods",
+]

@@ -1,0 +1,141 @@
+"""Training step construction: per-pod local steps + policy merges.
+
+``make_train_fns`` returns two step functions over pod-stacked state
+(leaves carry a leading ``(n_pods, ...)`` replica dim, sharded over the
+mesh's 'pod' axis):
+
+  * ``local_step``  — vmapped per-pod grad + AdamW; zero inter-pod comm.
+  * ``sync_step``   — local step followed by the consistency merge.
+
+The trainer alternates them according to the policy period (the compiled
+HLO of each is what the dry-run and the cost model account separately).
+
+Optimizer moments deliberately stay pod-local between merges (the
+DiLoCo-style choice): the paper's protocol replicates the *data* (here:
+parameters), not the optimizer's private scratch state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.consistency import ConsistencyPolicy
+from repro.models.model_zoo import Model
+from repro.optim import adamw
+from repro.sync.engine import SyncEngine, SyncState
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any       # pod-stacked pytree
+    opt: adamw.AdamWState
+    sync: SyncState
+    step: Array       # () int32
+
+
+class TrainFns(NamedTuple):
+    init: Any
+    local_step: Any
+    sync_step: Any
+    engine: SyncEngine
+
+
+def stack_for_pods(tree, n_pods: int):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape), tree
+    )
+
+
+def make_train_fns(
+    model: Model,
+    opt_cfg: adamw.AdamWConfig,
+    policy: ConsistencyPolicy,
+    n_pods: int,
+) -> TrainFns:
+    n_pods = max(1, n_pods)
+    params_template = jax.eval_shape(model.init, jax.random.key(0))
+    stacked_template = jax.eval_shape(
+        lambda: stack_for_pods(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_template),
+            n_pods,
+        )
+    )
+    engine = SyncEngine(policy, n_pods, params_template=stacked_template)
+
+    def init(key) -> TrainState:
+        params = model.init(key)
+        stacked = stack_for_pods(params, n_pods)
+        opt = adamw.init(stacked, opt_cfg)
+        return TrainState(
+            params=stacked,
+            opt=opt,
+            sync=engine.init_state(stacked),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def one_pod(params, mu, nu, count, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        opt_state = adamw.AdamWState(mu=mu, nu=nu, count=count)
+        new_params, new_opt, om = adamw.apply(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt.mu, new_opt.nu, new_opt.count, loss, om
+
+    # spmd_axis_name binds the replica dim to the mesh's 'pod' axis so
+    # inner shard_maps/constraints (MoE dispatch, ring attention) stay
+    # consistent under the vmap — without it the XLA partitioner crashes
+    # on mixed auto/manual specs (observed on the multi-pod MoE cells).
+    vpod = (jax.vmap(one_pod, spmd_axis_name="pod") if n_pods > 1
+            else jax.vmap(one_pod))
+
+    def local_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        from repro.models import sharding as shlib
+
+        shlib.set_pod_vmap(n_pods > 1)  # trace-time flag (see moe.py)
+        count = jnp.broadcast_to(state.opt.count, (n_pods,))
+        new_params, mu, nu, counts, loss, om = vpod(
+            state.params, state.opt.mu, state.opt.nu, count, batch
+        )
+        new_state = TrainState(
+            params=new_params,
+            opt=adamw.AdamWState(mu=mu, nu=nu, count=counts[0]),
+            sync=state.sync,
+            step=state.step + 1,
+        )
+        metrics = {
+            "loss": jnp.mean(loss),
+            "grad_norm": jnp.mean(om["grad_norm"]),
+            "lr": om["lr"][0],
+        }
+        return new_state, metrics
+
+    def sync_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        state, metrics = local_step(state, batch)
+        new_params, new_sync = engine.merge(state.params, state.sync)
+        state = state._replace(params=new_params, sync=new_sync)
+        metrics = dict(
+            metrics,
+            merges=new_sync.merges,
+            inter_pod_gb=new_sync.inter_pod_gb,
+            violations=new_sync.violations,
+            severity=new_sync.severity,
+        )
+        return state, metrics
+
+    return TrainFns(init=init, local_step=local_step, sync_step=sync_step,
+                    engine=engine)
+
+
+def split_batch_for_pods(batch: dict, n_pods: int) -> dict:
+    """(B, ...) -> (n_pods, B/n_pods, ...)."""
+    def sp(x):
+        b = x.shape[0]
+        assert b % n_pods == 0, f"batch {b} not divisible by {n_pods} pods"
+        return x.reshape((n_pods, b // n_pods) + x.shape[1:])
+
+    return {k: sp(v) if hasattr(v, "shape") and getattr(v, "ndim", 0) > 0 else v
+            for k, v in batch.items()}

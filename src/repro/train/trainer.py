@@ -1,0 +1,149 @@
+"""Training loop: policy-dispatched stepping, checkpointing, recovery.
+
+The trainer owns the two compiled programs (local / sync) and dispatches
+by the policy period; everything stateful (params, optimizer, protocol
+bookkeeping) lives in the :class:`TrainState` pytree, so failure
+recovery = restore state + replay the deterministic data stream from the
+restored step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.consistency import ConsistencyPolicy
+from repro.data import DataConfig, batch_at, extra_inputs
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train.train_step import (
+    TrainFns,
+    TrainState,
+    make_train_fns,
+    split_batch_for_pods,
+)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    n_steps: int = 100
+    n_pods: int = 1
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = no checkpointing
+    seed: int = 0
+    jit: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        data_cfg: DataConfig,
+        opt_cfg: AdamWConfig,
+        policy: ConsistencyPolicy,
+        tcfg: TrainerConfig,
+        ckpt_store=None,
+        ckpt_session=None,
+        health=None,
+    ):
+        self.model_cfg = model_cfg
+        self.data_cfg = data_cfg
+        self.opt_cfg = opt_cfg
+        self.policy = policy
+        self.tcfg = tcfg
+        self.model = build_model(model_cfg)
+        self.fns: TrainFns = make_train_fns(
+            self.model, opt_cfg, policy, tcfg.n_pods
+        )
+        self.ckpt_store = ckpt_store
+        self.ckpt_session = ckpt_session
+        self.health = health
+        if tcfg.jit:
+            self._local = jax.jit(self.fns.local_step, donate_argnums=(0,))
+            self._sync = jax.jit(self.fns.sync_step, donate_argnums=(0,))
+        else:
+            self._local = self.fns.local_step
+            self._sync = self.fns.sync_step
+        self.history: list[dict] = []
+
+    # -- data ------------------------------------------------------------------
+
+    def batch_for(self, step: int) -> dict:
+        batch = batch_at(self.data_cfg, step)
+        batch.update(
+            extra_inputs(self.model_cfg, self.data_cfg.global_batch, step)
+        )
+        return split_batch_for_pods(batch, self.tcfg.n_pods)
+
+    # -- loop ------------------------------------------------------------------
+
+    def init_state(self) -> TrainState:
+        return self.fns.init(jax.random.key(self.tcfg.seed))
+
+    def is_sync_step(self, step: int) -> bool:
+        return (step + 1) % self.fns.engine.policy.inter_pod_period() == 0
+
+    def run(self, state: TrainState | None = None, start_step: int = 0):
+        state = self.init_state() if state is None else state
+        period = self.policy.inter_pod_period()
+        for step in range(start_step, self.tcfg.n_steps):
+            batch = self.batch_for(step)
+            fn = self._sync if self.is_sync_step(step) else self._local
+            t0 = time.perf_counter()
+            state, metrics = fn(state, batch)
+            dt = time.perf_counter() - t0
+            if (step % max(1, self.tcfg.log_every)) == 0 or step == self.tcfg.n_steps - 1:
+                rec = {
+                    "step": step,
+                    "loss": float(metrics["loss"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "sec": dt,
+                    "synced": self.is_sync_step(step),
+                }
+                if "inter_pod_gb" in metrics:
+                    rec["inter_pod_gb"] = float(metrics["inter_pod_gb"])
+                    rec["violations"] = int(metrics["violations"])
+                    rec["severity"] = float(metrics["severity"])
+                self.history.append(rec)
+            if (
+                self.ckpt_store is not None
+                and self.tcfg.ckpt_every
+                and (step + 1) % self.tcfg.ckpt_every == 0
+            ):
+                self.save_checkpoint(state, step + 1)
+        return state
+
+    # -- checkpoint / recovery ---------------------------------------------------
+
+    def save_checkpoint(self, state: TrainState, step: int) -> int:
+        merged = jax.tree.map(lambda x: x[0], state.params)
+        return self.ckpt_store.save(merged, step, self.ckpt_session)
+
+    def restore_checkpoint(self) -> tuple[TrainState, int]:
+        from repro.train.train_step import stack_for_pods
+        from repro.optim import adamw
+
+        template = jax.eval_shape(self.model.init, jax.random.key(0))
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
+        params, version, _ = self.ckpt_store.restore(zeros, self.ckpt_session)
+        meta_step = 0
+        for r in range(self.ckpt_store.n_replicas):
+            e = self.ckpt_store._read_meta(r)["entries"].get(str(version))
+            if e:
+                meta_step = e["step"]
+                break
+        stacked = stack_for_pods(params, self.tcfg.n_pods)
+        opt = adamw.init(stacked, self.opt_cfg)
+        opt = opt._replace(count=jnp.asarray(meta_step, jnp.int32))
+        state = TrainState(
+            params=stacked,
+            opt=opt,
+            sync=self.fns.engine.init_state(stacked),
+            step=jnp.asarray(meta_step, jnp.int32),
+        )
+        return state, meta_step

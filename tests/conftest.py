@@ -1,0 +1,12 @@
+"""Test configuration.
+
+Keeps the default device count at 1 (smoke tests and benches must not
+see the dry-run's 512 virtual devices — that env var is set only inside
+repro.launch.dryrun).
+"""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,83 @@
+"""Compression round-trips + storage simulator invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PAPER_LEVELS
+from repro.core.consistency import ConsistencyLevel, ConsistencyPolicy
+from repro.storage import WORKLOAD_A, WORKLOAD_B, generate, run_protocol
+from repro.sync import compression
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_roundtrip_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (33, 17)), jnp.float32)
+    q, scale = compression.int8_quantize(x)
+    back = compression.int8_dequantize(q, scale, jnp.float32)
+    max_err = float(jnp.max(jnp.abs(back - x)))
+    assert max_err <= float(scale) * 0.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 0.5))
+def test_topk_roundtrip_preserves_big_entries(seed, frac):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)
+    vals, idx, residual = compression.topk_sparsify(x, frac)
+    dense = compression.topk_densify(vals, idx, x.shape, jnp.float32)
+    # sparse + residual == original (lossless decomposition)
+    np.testing.assert_allclose(np.asarray(dense + residual), np.asarray(x),
+                               atol=1e-5)
+    # kept entries are the largest-magnitude ones
+    k = vals.shape[0]
+    thresh = np.sort(np.abs(np.asarray(x)))[-k]
+    assert float(jnp.min(jnp.abs(vals))) >= thresh - 1e-6
+
+
+def test_wire_bytes_ordering():
+    tree = {"w": jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)}
+    none = compression.wire_bytes(tree, "none")
+    int8 = compression.wire_bytes(tree, "int8")
+    topk = compression.wire_bytes(tree, "topk", fraction=0.01)
+    assert topk < int8 < none
+    assert none == 1024 * 1024 * 2
+
+
+def test_ycsb_workloads():
+    a = generate(WORKLOAD_A, n_ops=10000, seed=0)
+    b = generate(WORKLOAD_B, n_ops=10000, seed=0)
+    assert abs((a["kind"] == 0).mean() - 0.50) < 0.03
+    assert abs((b["kind"] == 0).mean() - 0.05) < 0.02
+    # zipfian: head keys much hotter than tail
+    vals, counts = np.unique(a["key"], return_counts=True)
+    assert counts.max() > 20 * np.median(counts)
+
+
+@pytest.mark.slow
+def test_protocol_metrics_orderings():
+    out = {lv: run_protocol(lv, WORKLOAD_A, n_ops=1500)
+           for lv in (ConsistencyLevel.ONE, ConsistencyLevel.ALL,
+                      ConsistencyLevel.X_STCC)}
+    assert out[ConsistencyLevel.X_STCC]["violation_rate"] == 0.0
+    assert out[ConsistencyLevel.ALL]["staleness_rate"] == 0.0
+    assert (out[ConsistencyLevel.ONE]["staleness_rate"]
+            > out[ConsistencyLevel.X_STCC]["staleness_rate"])
+    assert out[ConsistencyLevel.ONE]["violation_rate"] > 0.0
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        ConsistencyPolicy(compress_inter_pod="zip")
+    with pytest.raises(ValueError):
+        ConsistencyPolicy(delta_steps=0)
+    p = ConsistencyPolicy(level=ConsistencyLevel.ALL)
+    assert p.inter_pod_period() == 1
+    px = ConsistencyPolicy(level=ConsistencyLevel.X_STCC, delta_steps=7)
+    assert px.inter_pod_period() == 7
+    assert ConsistencyLevel.QUORUM.write_acks(12) == 7
+    assert ConsistencyLevel.ALL.read_replicas(12) == 12

@@ -1,0 +1,78 @@
+"""Roofline parser/analysis unit tests (synthetic HLO lines)."""
+
+import pytest
+
+from repro.launch import roofline as rl
+
+HLO = """
+%all-reduce.1 = f32[8,128]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+%all-gather.2 = bf16[16,256]{1,0} all-gather(%p0), channel_id=2, replica_groups=[4,2]<=[2,4]T(1,0), dimensions={0}
+%all-reduce.3 = f32[4]{0} all-reduce(%x), channel_id=3, replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add
+%collective-permute.4 = f32[8,64]{1,0} collective-permute(%y), channel_id=4, source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+%copy = f32[8,128]{1,0} copy(%all-reduce.1)
+"""
+
+
+def test_parse_counts_and_kinds():
+    ops = rl.parse_collectives(HLO, pod_size=None)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-reduce",
+                     "collective-permute"]
+
+
+def test_iota_replica_groups():
+    ops = {o.kind + str(o.result_bytes): o
+           for o in rl.parse_collectives(HLO, pod_size=None)}
+    ar = ops["all-reduce" + str(8 * 128 * 4)]
+    assert ar.group_size == 4 and ar.n_groups == 2
+    # ring all-reduce: 2(gs-1) x bytes x ng
+    assert ar.wire_bytes == 2 * 3 * 8 * 128 * 4 * 2
+
+
+def test_explicit_group_list_and_pod_span():
+    ops = rl.parse_collectives(HLO, pod_size=4)
+    small = [o for o in ops if o.kind == "all-reduce" and o.result_bytes == 16]
+    assert small[0].group_size == 2 and small[0].n_groups == 4
+    # groups {0,4} etc. cross the pod boundary at pod_size=4
+    assert small[0].spans_pods
+
+
+def test_permute_pairs():
+    ops = [o for o in rl.parse_collectives(HLO, pod_size=2)
+           if o.kind == "collective-permute"]
+    assert len(ops) == 1
+    assert ops[0].n_groups == 4           # four source->target pairs
+    assert ops[0].wire_bytes == 8 * 64 * 4 * 4
+    assert ops[0].spans_pods              # pair (1,2) crosses pods of 2
+
+
+def test_roofline_terms_and_dominant():
+    r = rl.Roofline(
+        flops_per_device=197e12,      # exactly one second of compute
+        bytes_per_device=819e9 / 2,   # half a second of HBM
+        collective_bytes_total=0.0,
+        inter_pod_bytes=0.0,
+        intra_pod_bytes=0.0,
+        n_chips=256,
+        model_flops=197e12 * 256 * 0.5,
+    )
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.dominant == "compute"
+    assert r.step_time_s == pytest.approx(1.0)
+    assert r.mfu == pytest.approx(0.5)
+    assert r.useful_flops_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_for_shapes():
+    from repro.configs import DECODE_32K, TRAIN_4K, get_config
+
+    cfg = get_config("gemma-2b")
+    n = cfg.active_param_count()
+    assert rl.model_flops_for(cfg, TRAIN_4K) == pytest.approx(
+        6.0 * n * 4096 * 256)
+    assert rl.model_flops_for(cfg, DECODE_32K) == pytest.approx(
+        2.0 * n * 128)
+    # MoE: active < total
+    moe = get_config("olmoe-1b-7b")
+    assert moe.active_param_count() < moe.param_count()

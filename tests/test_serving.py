@@ -1,0 +1,72 @@
+"""Serving engine: session routing, staleness accounting, generation."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import PREFILL_32K, get_config, make_batch, reduced
+from repro.core import ConsistencyLevel
+from repro.models import build_model
+from repro.serve import ServeSession, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = reduced(get_config("gemma-2b"), n_layers=2)
+    model = build_model(cfg)
+    p_v1 = model.init(jax.random.key(1))
+    p_v2 = model.init(jax.random.key(2))
+    return cfg, model, p_v1, p_v2
+
+
+def _batch(cfg):
+    shape = dataclasses.replace(PREFILL_32K, seq_len=8, global_batch=1)
+    b = make_batch(cfg, shape)
+    b["max_seq"] = 16
+    return b
+
+
+def test_generate(engine_setup):
+    cfg, model, p1, _ = engine_setup
+    eng = ServingEngine(model, ConsistencyLevel.X_STCC, jit=False)
+    eng.publish(p1, version=1)
+    toks, replica = eng.generate(ServeSession(0), _batch(cfg), n_tokens=4)
+    assert toks.shape == (1, 4)
+    assert bool(jnp.all(toks >= 0))
+
+
+def test_session_reroutes_to_fresh_replica(engine_setup):
+    cfg, model, p1, p2 = engine_setup
+    eng = ServingEngine(model, ConsistencyLevel.X_STCC, jit=False)
+    eng.publish(p1, version=1)   # replica 0
+    eng.publish(p2, version=2)   # replica 1
+    s = ServeSession(0)
+    # Session observes v2 at replica 1 first:
+    eng.prefill(s, _batch(cfg), preferred=1)
+    assert s.read_floor == 2
+    # Preferred replica 0 is now inadmissible -> rerouted to replica 1.
+    _, _, r = eng.prefill(s, _batch(cfg), preferred=0)
+    assert r == 1
+    assert eng.reroutes == 1
+
+
+def test_weak_serving_goes_stale(engine_setup):
+    cfg, model, p1, p2 = engine_setup
+    eng = ServingEngine(model, ConsistencyLevel.ONE, jit=False)
+    eng.publish(p1, version=1)
+    eng.publish(p2, version=2)
+    s = ServeSession(0)
+    eng.prefill(s, _batch(cfg), preferred=1)   # saw v2
+    eng.prefill(s, _batch(cfg), preferred=0)   # ONE: serves stale v1
+    assert eng.staleness_rate() > 0
+
+
+def test_no_admissible_replica_raises(engine_setup):
+    cfg, model, p1, _ = engine_setup
+    eng = ServingEngine(model, ConsistencyLevel.X_STCC, jit=False)
+    eng.publish(p1, version=1)
+    s = ServeSession(0, read_floor=99)
+    with pytest.raises(RuntimeError):
+        eng.route(s)

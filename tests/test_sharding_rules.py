@@ -1,0 +1,96 @@
+"""Sharding-rule unit tests (the dry-run's correctness backbone)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.models import sharding
+
+
+@pytest.fixture()
+def mesh44():
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    # A virtual 1x1 mesh still exercises rule resolution paths.
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_rules_without_mesh_are_noop():
+    sharding.set_mesh(None)
+    x = jnp.ones((4, 4))
+    assert sharding.shard(x, "batch", None) is x
+
+
+def test_pspec_generic_2d(mesh44):
+    with sharding.use_mesh(mesh44):
+        cfg = reduced(get_config("qwen2-7b"))
+        ps = sharding.pspec_for_param(("blocks", "attn", "wq"), (64, 128), cfg)
+        assert isinstance(ps, P)
+
+
+class FakeMesh:
+    """Minimal mesh stand-in with a .shape mapping."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_pspec_divisibility_guard():
+    cfg = reduced(get_config("qwen2-7b"))
+    fake = FakeMesh({"data": 16, "model": 16})
+    sharding.set_mesh(fake)
+    try:
+        # 28 not divisible by 16 -> that dim must be unsharded.
+        ps = sharding.pspec_for_param(("x", "wq"), (3584, 28), cfg)
+        assert ps[1] is None
+        # stacked 4-D dense weight gets last-two-dims rule
+        ps4 = sharding.pspec_for_param(
+            ("dense_blocks", "mlp", "w_up"), (24, 1, 3584, 18944), cfg)
+        assert ps4[0] is None and ps4[1] is None
+        assert ps4[2] == "data" and ps4[3] == "model"
+        # transposed projection flips axes
+        psT = sharding.pspec_for_param(
+            ("dense_blocks", "mlp", "w_down"), (24, 1, 18944, 3584), cfg)
+        assert psT[2] == "model" and psT[3] == "data"
+        # expert weights: EP over model
+        pse = sharding.pspec_for_param(
+            ("moe_blocks", "moe", "expert_gate"), (16, 64, 2048, 1024), cfg)
+        assert pse[1] == "model" and pse[2] == "data"
+        # embeddings shard the vocab dim over model
+        pe = sharding.pspec_for_param(("embed",), (152064, 3584), cfg)
+        assert pe[0] == "model"
+        # norms replicated
+        pn = sharding.pspec_for_param(("final_norm",), (3584,), cfg)
+        assert pn == P()
+    finally:
+        sharding.set_mesh(None)
+
+
+def test_activation_shard_divisibility_guard():
+    fake = FakeMesh({"data": 16, "model": 16})
+
+    class FakeArray:
+        shape = (4, 28)  # neither dim divisible by 16
+
+    # Should not raise — axes get dropped; but we can't run
+    # with_sharding_constraint on a fake mesh, so only exercise spec():
+    assert sharding.spec("batch", None) == P("data", None)
+    assert sharding.get_rule("experts") == "model"
+
+
+def test_attn_parallel_mode():
+    from repro.models.attention import attn_parallel_mode
+
+    cfg16 = reduced(get_config("olmoe-1b-7b"), n_heads=16, n_kv_heads=16)
+    cfg28 = reduced(get_config("qwen2-7b"), n_heads=28, n_kv_heads=4)
+    fake = FakeMesh({"data": 16, "model": 16})
+    sharding.set_mesh(fake)
+    try:
+        assert attn_parallel_mode(cfg16) == "tp"   # 16 % 16 == 0
+        assert attn_parallel_mode(cfg28) == "dp"   # 28 % 16 != 0
+    finally:
+        sharding.set_mesh(None)
+    assert attn_parallel_mode(cfg28) == "tp"       # no mesh -> trivial

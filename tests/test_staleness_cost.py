@@ -1,0 +1,85 @@
+"""Appendix A (staleness) and Appendix B (monetary cost) models."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model
+from repro.core.consistency import ConsistencyLevel
+from repro.core.staleness import (
+    StalenessParams,
+    simulate_stale_reads,
+    stale_read_rate,
+    stale_read_rate_paper_literal,
+    staleness_vs_level,
+)
+
+
+def test_analytic_matches_simulation():
+    p = StalenessParams(lambda_r=100, lambda_w=10, t_p=0.05,
+                        n_replicas=12, x_r=1)
+    analytic = stale_read_rate(p)
+    sim, n = simulate_stale_reads(p, horizon=200, seed=3)
+    assert n > 1000
+    assert abs(analytic - sim) < 0.04, (analytic, sim)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1.0, 200.0), st.floats(0.5, 50.0), st.floats(0.001, 0.5),
+       st.integers(2, 16))
+def test_stale_rate_bounds_and_monotonicity(lr, lw, tp, n):
+    p = StalenessParams(lr, lw, tp, n, x_r=1)
+    r = stale_read_rate(p)
+    assert 0.0 <= r <= 1.0
+    # More replicas consulted -> never more stale.
+    r_all = stale_read_rate(StalenessParams(lr, lw, tp, n, x_r=n))
+    assert r_all <= r + 1e-12
+    # Longer propagation -> never fresher.
+    r_slow = stale_read_rate(StalenessParams(lr, lw, 2 * tp, n, x_r=1))
+    assert r_slow >= r - 1e-12
+
+
+def test_paper_literal_formula_is_inconsistent():
+    """Documents the Appendix-A typo: the literal eq. (.4) leaves [0,1]
+    for small rate products (DESIGN.md §9)."""
+    p = StalenessParams(lambda_r=0.5, lambda_w=0.5, t_p=1.0, n_replicas=3)
+    assert stale_read_rate_paper_literal(p) > 1.0
+    assert 0.0 <= stale_read_rate(p) <= 1.0
+
+
+def test_staleness_vs_level_ordering():
+    levels = [ConsistencyLevel.ONE, ConsistencyLevel.QUORUM,
+              ConsistencyLevel.ALL, ConsistencyLevel.CAUSAL,
+              ConsistencyLevel.X_STCC]
+    out = staleness_vs_level(lambda_r=100, lambda_w=20, t_p=0.05,
+                             n_replicas=12, levels=levels,
+                             delta_seconds=0.01)
+    assert out["ONE"] >= out["CAUSAL"] >= out["X_STCC"]
+    assert out["ALL"] <= out["QUORUM"] <= out["ONE"]
+
+
+def test_cost_model_table2():
+    """Eq. .5-.8 with the paper's Table 2 prices."""
+    bill = cost_model.cost_all(
+        nb_instances=24, runtime_hours=2.0, hosted_gb=18.65, months=0.1,
+        io_requests=8e6 * 12, inter_dc_gb=100.0, intra_dc_gb=500.0,
+    )
+    assert bill.instances == pytest.approx(24 * 0.0464 * 2.0)
+    # hosting 18.65 GB x $0.10/GB-mo x 0.1 mo + 96e6 req x $0.10/1e6
+    assert bill.storage == pytest.approx(18.65 * 0.10 * 0.1 + 96 * 0.10)
+    assert bill.network == pytest.approx(100.0 * 0.01)  # intra free
+    assert bill.total == pytest.approx(
+        bill.instances + bill.storage + bill.network)
+
+
+def test_training_run_cost_scales_with_interpod_bytes():
+    a = cost_model.training_run_cost(
+        n_chips=512, step_time_s=0.5, n_steps=100,
+        inter_pod_bytes_per_step=1e9, intra_pod_bytes_per_step=1e12,
+        ckpt_bytes=1e10, ckpt_every=50)
+    b = cost_model.training_run_cost(
+        n_chips=512, step_time_s=0.5, n_steps=100,
+        inter_pod_bytes_per_step=8e9, intra_pod_bytes_per_step=1e12,
+        ckpt_bytes=1e10, ckpt_every=50)
+    assert b.network == pytest.approx(8 * a.network)
+    assert b.instances == pytest.approx(a.instances)

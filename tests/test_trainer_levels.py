@@ -1,0 +1,87 @@
+"""Integration: multi-pod training under every consistency level.
+
+Checks the paper's training-side claims end to end: losses decrease,
+ALL keeps replicas identical, X-STCC moves ~Delta x less inter-pod data
+with zero session violations while ONE/CAUSAL violate, compression
+compounds the saving, and ALL/X-STCC converge to similar losses.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import policy_for
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def make_trainer(level, n_pods=2, n_steps=16, **pol_kw):
+    cfg = reduced(get_config("qwen2-7b"), n_layers=2)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=4, total_steps=32)
+    pol = policy_for(level, delta_steps=4, **pol_kw)
+    return Trainer(cfg, dcfg, ocfg, pol,
+                   TrainerConfig(n_steps=n_steps, n_pods=n_pods,
+                                 log_every=4))
+
+
+@pytest.fixture(scope="module")
+def runs():
+    out = {}
+    for level in ("ALL", "ONE", "CAUSAL", "X_STCC"):
+        tr = make_trainer(level)
+        state = tr.run()
+        out[level] = (tr, state)
+    return out
+
+
+def test_losses_decrease(runs):
+    for level, (tr, _) in runs.items():
+        first, last = tr.history[0]["loss"], tr.history[-1]["loss"]
+        assert last < first, f"{level}: {first} -> {last}"
+
+
+def test_all_keeps_replicas_identical(runs):
+    _, state = runs["ALL"]
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(leaf[0] == leaf[1]))
+
+
+def test_xstcc_traffic_reduction(runs):
+    gb = {lv: tr.history[-1].get("inter_pod_gb", 0.0)
+          for lv, (tr, _) in runs.items()}
+    assert gb["X_STCC"] < gb["ALL"] / 2          # ~Delta x saving
+    assert gb["CAUSAL"] == pytest.approx(gb["ALL"], rel=0.01)
+
+
+def test_session_guarantees(runs):
+    viol = {lv: tr.history[-1].get("violations", 0)
+            for lv, (tr, _) in runs.items()}
+    assert viol["X_STCC"] == 0
+    assert viol["ALL"] == 0
+    assert viol["ONE"] > 0 or viol["CAUSAL"] > 0
+
+
+def test_xstcc_converges_like_all(runs):
+    la = runs["ALL"][0].history[-1]["loss"]
+    lx = runs["X_STCC"][0].history[-1]["loss"]
+    assert abs(la - lx) / la < 0.05
+
+
+def test_compression_reduces_traffic():
+    tr = make_trainer("X_STCC", compress_inter_pod="int8")
+    tr.run()
+    gb_int8 = tr.history[-1]["inter_pod_gb"]
+    tr2 = make_trainer("X_STCC")
+    tr2.run()
+    gb_plain = tr2.history[-1]["inter_pod_gb"]
+    assert gb_int8 < gb_plain / 2
+    assert tr.history[-1]["loss"] < tr.history[0]["loss"]
+
+
+def test_four_pods_quorum():
+    tr = make_trainer("QUORUM", n_pods=4, n_steps=8)
+    state = tr.run()
+    assert tr.history[-1]["loss"] < tr.history[0]["loss"]

@@ -1,0 +1,77 @@
+"""Property tests: vector-clock algebra (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vector_clock as vc
+
+clock = st.lists(st.integers(0, 50), min_size=1, max_size=8)
+
+
+def pair(n=6):
+    return st.tuples(
+        st.lists(st.integers(0, 50), min_size=n, max_size=n),
+        st.lists(st.integers(0, 50), min_size=n, max_size=n),
+    )
+
+
+@settings(max_examples=200, deadline=None)
+@given(pair())
+def test_partial_order_antisymmetry(ab):
+    a, b = (jnp.asarray(x, jnp.int32) for x in ab)
+    assert not (bool(vc.dominates(a, b)) and bool(vc.dominates(b, a)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(pair())
+def test_merge_is_lub(ab):
+    a, b = (jnp.asarray(x, jnp.int32) for x in ab)
+    m = vc.merge(a, b)
+    assert bool(vc.leq(a, m)) and bool(vc.leq(b, m))
+    # least: any other upper bound dominates or equals m
+    assert bool(vc.leq(m, jnp.maximum(m, a + b)))
+
+
+@settings(max_examples=100, deadline=None)
+@given(pair(), st.integers(0, 5))
+def test_tick_advances(ab, i):
+    a, _ = (jnp.asarray(x, jnp.int32) for x in ab)
+    i = i % a.shape[0]
+    t = vc.tick(a, i)
+    assert bool(vc.dominates(a, t))
+
+
+@settings(max_examples=100, deadline=None)
+@given(pair())
+def test_merge_commutative_associative_idempotent(ab):
+    a, b = (jnp.asarray(x, jnp.int32) for x in ab)
+    assert bool(jnp.all(vc.merge(a, b) == vc.merge(b, a)))
+    assert bool(jnp.all(vc.merge(a, vc.merge(a, b)) == vc.merge(a, b)))
+    assert bool(jnp.all(vc.merge(a, a) == a))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 30), min_size=4, max_size=4),
+                min_size=2, max_size=12))
+def test_hb_matrix_matches_pairwise(rows):
+    m = jnp.asarray(np.array(rows, np.int32))
+    hb = vc.happens_before_matrix(m)
+    for i in range(m.shape[0]):
+        for j in range(m.shape[0]):
+            assert bool(hb[i, j]) == bool(vc.dominates(m[i], m[j]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 30), min_size=3, max_size=3),
+                min_size=2, max_size=10))
+def test_total_order_extends_causal(rows):
+    """The LWW linear extension respects happens-before."""
+    m = jnp.asarray(np.array(rows, np.int32))
+    clients = jnp.arange(m.shape[0], dtype=jnp.int32) % 3
+    keys = vc.total_order_key(m, clients)
+    hb = vc.happens_before_matrix(m)
+    for i in range(m.shape[0]):
+        for j in range(m.shape[0]):
+            if bool(hb[i, j]):
+                assert int(keys[i]) < int(keys[j])

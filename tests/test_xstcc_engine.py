@@ -1,0 +1,112 @@
+"""Protocol-engine properties: session guarantees under X-STCC."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import xstcc
+from repro.core.consistency import ConsistencyLevel
+
+
+def random_schedule(seed, n_ops=40, n_clients=3, n_replicas=3, n_res=2,
+                    enforce=True, merge_every=5, delta=10):
+    """Run a random op schedule; return (violations, stales, reads)."""
+    rng = np.random.default_rng(seed)
+    state = xstcc.make_cluster(n_replicas, n_clients, n_res)
+    violations = stales = reads = 0
+    for i in range(n_ops):
+        c = int(rng.integers(0, n_clients))
+        p = int(rng.integers(0, n_replicas))   # mobility: any replica
+        r = int(rng.integers(0, n_res))
+        if rng.random() < 0.5:
+            state = xstcc.client_write(
+                state, client=c, replica=p, resource=r).state
+        else:
+            out = xstcc.client_read(
+                state, client=c, replica=p, resource=r,
+                enforce_sessions=enforce)
+            state = out.state
+            violations += int(out.violation)
+            stales += int(out.stale)
+            reads += 1
+        if i % merge_every == merge_every - 1:
+            state, _ = xstcc.server_merge(state, delta=delta)
+    return violations, stales, reads
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_xstcc_never_violates_sessions(seed):
+    violations, _, _ = random_schedule(seed, enforce=True)
+    assert violations == 0
+
+
+def test_weak_reads_do_violate_somewhere():
+    """Without session enforcement, mobility exposes violations."""
+    total = 0
+    for seed in range(8):
+        v, _, _ = random_schedule(seed, enforce=False, merge_every=9,
+                                  delta=50)
+        total += v
+    assert total > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_merge_converges_replicas(seed):
+    """After a full merge with delta=0, every replica holds the latest
+    version of every resource (convergence — the paper's CAC angle)."""
+    rng = np.random.default_rng(seed)
+    state = xstcc.make_cluster(3, 3, 2)
+    for _ in range(20):
+        state = xstcc.client_write(
+            state,
+            client=int(rng.integers(0, 3)),
+            replica=int(rng.integers(0, 3)),
+            resource=int(rng.integers(0, 2)),
+        ).state
+    state, _ = xstcc.server_merge(state, delta=0)
+    rv = np.asarray(state.replica_version)
+    gv = np.asarray(state.global_version)
+    assert (rv == gv[None, :]).all()
+
+
+def test_monotonic_read_across_replicas():
+    """The paper's Fig. 2: Bob writes at S0, moves to S1 — X-STCC must
+    serve him his own write (RYW) and never a lower version later (MR)."""
+    state = xstcc.make_cluster(3, 2, 1)
+    w = xstcc.client_write(state, client=0, replica=0, resource=0)
+    state = w.state
+    seen = []
+    for replica in (1, 2, 0, 1):
+        out = xstcc.client_read(state, client=0, replica=replica,
+                                resource=0, enforce_sessions=True)
+        state = out.state
+        seen.append(int(out.version))
+    assert seen[0] >= int(w.version)           # RYW at the remote replica
+    assert all(b >= a for a, b in zip(seen, seen[1:]))  # MR monotone
+
+
+def test_timed_bound_forces_visibility():
+    """Writes older than delta are applied at every replica by the
+    merge even when causal gating alone would not require it."""
+    state = xstcc.make_cluster(3, 2, 1)
+    state = xstcc.client_write(state, client=0, replica=0, resource=0).state
+    # Let the clock advance past delta with unrelated ops.
+    for _ in range(5):
+        out = xstcc.client_read(state, client=1, replica=1, resource=0,
+                                enforce_sessions=False)
+        state = out.state
+    state, n = xstcc.server_merge(state, delta=3)
+    rv = np.asarray(state.replica_version)
+    assert (rv[:, 0] >= 1).all()
+
+
+def test_stability_frontier_monotone():
+    state = xstcc.make_cluster(2, 2, 1)
+    f0 = np.asarray(xstcc.stability_frontier(state))
+    state = xstcc.client_write(state, client=0, replica=0, resource=0).state
+    state, _ = xstcc.server_merge(state, delta=0)
+    f1 = np.asarray(xstcc.stability_frontier(state))
+    assert (f1 >= f0).all()
