@@ -2,6 +2,8 @@
 
   storage   — Figs 8-15 (throughput/staleness/violations/monetary) on
               the 24-node 3-DC cluster simulation.
+  protocol  — batched vs scalar X-STCC engine throughput (ops/s) and
+              metric agreement at the evaluation's n_ops=6000.
   sync_cost — the technique applied to multi-pod training (traffic +
               violations + bill per consistency level).
   kernels   — Pallas kernel agreement + oracle timing.
@@ -17,11 +19,18 @@ import sys
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import bench_kernels, bench_roofline, bench_storage, bench_sync_cost
+    from benchmarks import (
+        bench_kernels,
+        bench_protocol,
+        bench_roofline,
+        bench_storage,
+        bench_sync_cost,
+    )
 
     failures = []
     for name, mod in [
         ("storage", bench_storage),
+        ("protocol", bench_protocol),
         ("sync_cost", bench_sync_cost),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),

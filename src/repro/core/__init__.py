@@ -6,27 +6,44 @@ Modules:
   audit        — eq. 1a–1d pair classification + violation detection.
   odg          — Operations Dependency Graph (Timed/Causal/Data edges).
   consistency  — ConsistencyLevel / ConsistencyPolicy.
-  xstcc        — the protocol engine (sessions + timed-causal merge).
+  xstcc        — the protocol engine (sessions + timed-causal merge),
+                 scalar and batched (vectorized op ingestion).
+  replicated_store — the ReplicatedStore facade consumed by the
+                 storage / sync / serve layers (state + batch ops +
+                 merge cadence + DUOT hook).
   staleness    — Appendix A stale-read model (analytic + Monte-Carlo).
   cost_model   — Appendix B monetary cost model (Table 2 pricing).
 """
 
-from repro.core import audit, cost_model, duot, odg, staleness, vector_clock, xstcc
+from repro.core import (
+    audit,
+    cost_model,
+    duot,
+    odg,
+    replicated_store,
+    staleness,
+    vector_clock,
+    xstcc,
+)
 from repro.core.consistency import (
     PAPER_LEVELS,
     ConsistencyLevel,
     ConsistencyPolicy,
     policy_for,
 )
+from repro.core.replicated_store import ReplicatedStore, StoreState
 
 __all__ = [
     "audit",
     "cost_model",
     "duot",
     "odg",
+    "replicated_store",
     "staleness",
     "vector_clock",
     "xstcc",
+    "ReplicatedStore",
+    "StoreState",
     "ConsistencyLevel",
     "ConsistencyPolicy",
     "PAPER_LEVELS",

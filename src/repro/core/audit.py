@@ -82,15 +82,19 @@ class AuditResult(NamedTuple):
     severity: Array     # () float32 — weighted severity in [0, 1]
 
 
-def classify_pairs(table: Duot) -> Array:
-    """Phase classification matrix (paper Fig. 4), no violation check."""
+def classify_pairs(table: Duot, hb: Array | None = None) -> Array:
+    """Phase classification matrix (paper Fig. 4), no violation check.
+
+    ``hb`` lets callers reuse a precomputed happens-before matrix — the
+    O(m²·n) term — instead of recomputing it."""
     m = table.capacity
     valid = table.valid
     pair_valid = valid[:, None] & valid[None, :]
     same_res = table.resource[:, None] == table.resource[None, :]
     ordered = table.seq[:, None] < table.seq[None, :]
     same_client = table.client[:, None] == table.client[None, :]
-    hb = vclock.happens_before_matrix(table.vc)
+    if hb is None:
+        hb = vclock.happens_before_matrix(table.vc)
 
     base = pair_valid & same_res & ordered
     ki = table.kind[:, None]
@@ -115,7 +119,8 @@ def audit(table: Duot, *, delta: int | Array = 0) -> AuditResult:
       delta: timed bound Δ in ``seq`` (timestamp) units; 0 disables the
         timed check (pure causal audit).
     """
-    phase = classify_pairs(table)
+    hb = vclock.happens_before_matrix(table.vc)
+    phase = classify_pairs(table, hb)
     vi = table.version[:, None]
     vj = table.version[None, :]
     ki = table.kind[:, None]
@@ -162,7 +167,6 @@ def audit(table: Duot, *, delta: int | Array = 0) -> AuditResult:
     # all audited edges.  Data edges: pairs where a read returned a write's
     # value (vi == vj across W->R); Causal edges: happens-before pairs;
     # Timed edges: adjacent-in-time pairs (all ordered same-resource).
-    hb = vclock.happens_before_matrix(table.vc)
     data_edge = base & (ki == WRITE) & (kj == READ)
     causal_edge = base & hb
     timed_edge = base

@@ -116,18 +116,17 @@ def record(table: Duot, ops: dict[str, Array]) -> Duot:
     Entries are placed at slots ``[size, size+b)``; overflow is clamped.
     """
     b = ops["client"].shape[0]
+    cap = table.capacity
     idx = table.size + jnp.arange(b, dtype=jnp.int32)
-    ok = idx < table.capacity
-    idx = jnp.minimum(idx, table.capacity - 1)
+    # Overflow rows get an out-of-range index and are dropped by the
+    # scatter — clamping them to cap-1 would make them collide with (and
+    # clobber) a real entry when a batch straddles capacity.
+    idx = jnp.where(idx < cap, idx, jnp.int32(cap))
 
     def put(arr, val):
-        val = jnp.asarray(val, arr.dtype)
-        cur = arr[idx]
-        return arr.at[idx].set(jnp.where(ok, val, cur))
+        return arr.at[idx].set(jnp.asarray(val, arr.dtype), mode="drop")
 
     seqs = table.next_seq + jnp.arange(b, dtype=jnp.int32)
-    vc_cur = table.vc[idx]
-    okc = ok[:, None]
     return Duot(
         client=put(table.client, ops["client"]),
         kind=put(table.kind, ops["kind"]),
@@ -135,11 +134,11 @@ def record(table: Duot, ops: dict[str, Array]) -> Duot:
         version=put(table.version, ops["version"]),
         replica=put(table.replica, ops["replica"]),
         seq=put(table.seq, seqs),
-        vc=table.vc.at[idx].set(jnp.where(okc, ops["vc"].astype(jnp.int32), vc_cur)),
-        valid=table.valid.at[idx].set(jnp.where(ok, True, table.valid[idx])),
-        size=jnp.minimum(
-            table.size + jnp.int32(b), jnp.int32(table.capacity)
+        vc=table.vc.at[idx].set(
+            ops["vc"].astype(jnp.int32), mode="drop"
         ),
+        valid=table.valid.at[idx].set(True, mode="drop"),
+        size=jnp.minimum(table.size + jnp.int32(b), jnp.int32(cap)),
         next_seq=table.next_seq + jnp.int32(b),
     )
 

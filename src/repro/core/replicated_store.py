@@ -1,0 +1,428 @@
+"""ReplicatedStore — the one replicated-state facade of the framework.
+
+Every consumer of the X-STCC protocol (``repro.storage.simulator``,
+``repro.sync.engine``, ``repro.serve.engine``) used to hand-roll the same
+bookkeeping: build a :class:`~repro.core.xstcc.ClusterState`, derive the
+level's merge cadence, thread session floors, append to the DUOT, run
+``server_merge`` at the right moments.  This module centralizes all of it
+behind a single object so that session-floor and clock logic lives only
+in ``repro.core``:
+
+  * **state**     — :class:`StoreState` bundles the protocol cluster and
+    the DUOT op log; it is a pytree, safe inside jit/scan.
+  * **batch ops** — :meth:`ReplicatedStore.write_batch` /
+    :meth:`~ReplicatedStore.read_batch` / :meth:`~ReplicatedStore.apply_batch`
+    ingest ``(B,)`` op arrays through the vectorized engine
+    (:func:`repro.core.xstcc.apply_op_batch`) and register them in the
+    DUOT in one bulk append.
+  * **merge cadence** — :func:`merge_cadence` maps a consistency level to
+    its (sync period, Δ) pair; :meth:`ReplicatedStore.merge` runs the
+    timed-causal propagation step.
+  * **DUOT hook**  — :meth:`ReplicatedStore.audit` /
+    :meth:`~ReplicatedStore.gc` expose the auditing layer.
+
+Sessions = clients, replicas = DCs/pods/snapshot servers, resources =
+key buckets / the parameter vector / model snapshots — exactly the three
+instantiations listed in the ``xstcc`` module docstring.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import audit as audit_lib
+from repro.core import duot as duot_lib
+from repro.core import xstcc
+from repro.core.consistency import ConsistencyLevel
+
+Array = jax.Array
+
+
+def merge_cadence(
+    level: ConsistencyLevel, merge_every: int, delta: int
+) -> tuple[int, int]:
+    """(sync_every, effective Δ) for a level.
+
+    Synchronous levels (ALL/TWO/QUORUM) propagate on every op with no
+    timed slack; ONE gossips on a slow cadence with an unbounded (large)
+    Δ; CAUSAL merges on the normal cadence but is not timed; the timed
+    levels (TCC/X-STCC) are forced prompt by the Δ bound.
+    """
+    if level in (
+        ConsistencyLevel.ALL,
+        ConsistencyLevel.TWO,
+        ConsistencyLevel.QUORUM,
+    ):
+        return 1, 0
+    if level is ConsistencyLevel.ONE:
+        return 2 * merge_every, 4 * delta
+    if level is ConsistencyLevel.CAUSAL:
+        return merge_every, 4 * delta
+    return merge_every, max(1, delta // 3)
+
+
+_BIG = 2 ** 30  # "never" sentinel for the cadence emulator
+
+
+def _timed_index(op_step: Array, s: int, d: int) -> Array:
+    """Op index at which a write issued at ``op_step`` is Δ-overdue.
+
+    Replays the sequential schedule in op-index space: merges run after
+    ops ``k*s - 1``, the logical clock at op ``g`` is ``g + g//s`` (one
+    tick per op, one per merge), and the timed bound unconditionally
+    applies a write at the first merge whose clock exceeds the write's
+    commit clock by Δ."""
+    cs = op_step + op_step // s
+    k_timed = (d + cs + 1 + s) // (s + 1)     # ceil((d+cs+1)/(s+1))
+    k_after = (op_step + s) // s              # ceil((g+1)/s)
+    return jnp.maximum(k_timed, k_after) * s
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_scheduler(sync_every: int, delta: int, n_clients: int,
+                      n_replicas: int):
+    """Jitted apply-point scheduler for one cadence configuration."""
+
+    @jax.jit
+    def sched(client: Array, replica: Array, kind: Array) -> Array:
+        n = client.shape[0]
+        g = jnp.arange(n, dtype=jnp.int32)
+        base = (g // sync_every + 1) * sync_every
+        timed = _timed_index(g, sync_every, delta)
+        is_w = kind == xstcc.WRITE
+
+        def step(carry, op):
+            last_a, rep_a = carry
+            ci, pi, wi, ti, bi = op
+            a_w = jnp.minimum(
+                ti, jnp.maximum(bi, jnp.maximum(last_a[ci], rep_a[pi]))
+            )
+            last_a = last_a.at[ci].set(jnp.where(wi, a_w, jnp.int32(_BIG)))
+            rep_a = jnp.where(wi, rep_a.at[pi].max(a_w), rep_a)
+            return (last_a, rep_a), jnp.where(wi, a_w, jnp.int32(_BIG))
+
+        carry = (jnp.zeros((n_clients,), jnp.int32),
+                 jnp.zeros((n_replicas,), jnp.int32))
+        _, a = jax.lax.scan(step, carry, (client, replica, is_w, timed, base))
+        return a
+
+    return sched
+
+
+class StoreState(NamedTuple):
+    """Protocol state + op log, as one pytree.
+
+    ``pend_apply`` shadows the pending ring with each in-flight write's
+    emulated sequential apply op-index (see
+    ``ReplicatedStore.apply_batch``), carrying the merge-cadence
+    emulation across batch boundaries."""
+
+    cluster: xstcc.ClusterState
+    duot: duot_lib.Duot
+    pend_apply: Array     # (Q,) int32
+
+
+class ReplicatedStore:
+    """Facade over the batched X-STCC engine for one replicated store.
+
+    Static configuration (sizes, level, cadence) lives on the object;
+    all dynamic state lives in the :class:`StoreState` pytree that every
+    method threads functionally, so methods can be called from inside
+    jit/scan.
+    """
+
+    def __init__(
+        self,
+        n_replicas: int,
+        n_clients: int,
+        n_resources: int,
+        *,
+        level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+        merge_every: int = 8,
+        delta: int = 24,
+        pending_cap: int = 128,
+        duot_cap: int = 1024,
+    ):
+        self.n_replicas = n_replicas
+        self.n_clients = n_clients
+        self.n_resources = n_resources
+        self.level = level
+        self.pending_cap = pending_cap
+        self.duot_cap = duot_cap
+        self.sync_every, self.delta = merge_cadence(level, merge_every, delta)
+        self.enforce_sessions = level.is_session_guarded
+
+    # -- state ----------------------------------------------------------------
+
+    def init(self) -> StoreState:
+        return self.wrap(
+            xstcc.make_cluster(
+                self.n_replicas, self.n_clients, self.n_resources,
+                pending_cap=self.pending_cap,
+            ),
+            duot_lib.make(self.duot_cap, self.n_clients),
+        )
+
+    def wrap(
+        self, cluster: xstcc.ClusterState, duot: duot_lib.Duot
+    ) -> StoreState:
+        """Adopt an existing (cluster, duot) pair as store state."""
+        q = cluster.pend_live.shape[0]
+        return StoreState(
+            cluster=cluster, duot=duot,
+            pend_apply=jnp.zeros((q,), jnp.int32),
+        )
+
+    # -- merge-cadence emulation -------------------------------------------------
+
+    def schedule_stream(
+        self, client: Array, replica: Array, kind: Array
+    ) -> Array:
+        """Emulated sequential apply op-index for each write of a stream.
+
+        The sequential merge applies a write at the first merge point
+        where its causal dependencies are applied everywhere, and at its
+        Δ-overdue point unconditionally.  In op-index space that is
+
+          ``A(w) = min(timed(w), max(boundary_after(w), A(prev same-client
+          write), max A over earlier same-coordinator writes))``
+
+        with the causal fast path broken (pure timed) when the session's
+        previous op was a *read*: the read ticks a clock component no
+        replica ever learns, so the write's dependency vector can only be
+        satisfied by its own application.  Reads get a "never" sentinel.
+        The schedule depends only on the op sequence and the cadence, so
+        callers precompute it for a whole run and slice it per batch.
+        """
+        sched = _stream_scheduler(
+            self.sync_every, self.delta, self.n_clients, self.n_replicas
+        )
+        return sched(
+            jnp.asarray(client, jnp.int32), jnp.asarray(replica, jnp.int32),
+            jnp.asarray(kind, jnp.int32),
+        )
+
+    # -- batch ops --------------------------------------------------------------
+
+    def apply_batch(
+        self,
+        state: StoreState,
+        *,
+        client: Array,
+        replica: Array,
+        resource: Array,
+        kind: Array,
+        op_step0: Array | int | None = None,
+        apply_index: Array | None = None,
+        extra_visible: Array | None = None,
+        record: bool = True,
+    ) -> tuple[StoreState, xstcc.BatchResult]:
+        """Ingest a mixed read/write batch and register it in the DUOT.
+
+        With ``op_step0`` (the global op index of the batch's first op)
+        the level's merge cadence is emulated *inside* the batch, so the
+        caller only needs a real :meth:`merge` on batch boundaries:
+
+          * synchronous levels (``sync_every == 1``): every write is
+            visible to every later op at any replica — exactly what a
+            merge-after-every-op (Δ=0) schedule serves;
+          * causal-family levels: each write carries an emulated
+            sequential apply point in ``apply_index`` (the batch's slice
+            of :meth:`schedule_stream`) and becomes visible at remote
+            replicas from that op index on — both for writes inside the
+            batch and for writes still pending from earlier batches.
+
+        Without ``op_step0`` the batch has plain scalar-loop semantics
+        (writes visible at their coordinator only) — the bit-exact mode
+        the equivalence tests check.
+        """
+        c = jnp.asarray(client, jnp.int32)
+        p = jnp.asarray(replica, jnp.int32)
+        r = jnp.asarray(resource, jnp.int32)
+        k = jnp.asarray(kind, jnp.int32)
+        b = c.shape[0]
+        pend_visible = None
+        new_pend_apply = None
+        if op_step0 is not None:
+            g = jnp.asarray(op_step0, jnp.int32) + jnp.arange(b, dtype=jnp.int32)
+            if self.sync_every == 1:
+                if extra_visible is None:
+                    extra_visible = jnp.ones((b, b), bool)
+                pend_visible = jnp.ones((b, state.pend_apply.shape[0]), bool)
+                new_pend_apply = jnp.zeros((b,), jnp.int32)
+            else:
+                if apply_index is None:
+                    apply_index = self.schedule_stream(c, p, k) + jnp.asarray(
+                        op_step0, jnp.int32
+                    )
+                if extra_visible is None:
+                    extra_visible = g[:, None] >= apply_index[None, :]
+                pend_visible = g[:, None] >= state.pend_apply[None, :]
+                new_pend_apply = apply_index
+        elif extra_visible is None and self.sync_every == 1:
+            extra_visible = jnp.ones((b, b), bool)
+        res = xstcc.apply_op_batch(
+            state.cluster, client=c, replica=p, resource=r, kind=k,
+            enforce_sessions=self.enforce_sessions,
+            extra_visible=extra_visible, pend_visible=pend_visible,
+        )
+        pend_apply = state.pend_apply
+        if new_pend_apply is not None:
+            pend_apply = pend_apply.at[res.slot].set(
+                new_pend_apply, mode="drop"
+            )
+        duot = state.duot
+        if record:
+            duot = duot_lib.record(
+                duot,
+                {
+                    "client": c,
+                    "kind": k,
+                    "resource": r,
+                    "version": res.version,
+                    "replica": p,
+                    "vc": res.vc,
+                },
+            )
+        return (
+            StoreState(cluster=res.state, duot=duot, pend_apply=pend_apply),
+            res,
+        )
+
+    def write_batch(
+        self,
+        state: StoreState,
+        *,
+        client: Array,
+        replica: Array,
+        resource: Array,
+        record: bool = True,
+    ) -> tuple[StoreState, xstcc.BatchResult]:
+        c = jnp.asarray(client, jnp.int32)
+        return self.apply_batch(
+            state, client=c, replica=replica, resource=resource,
+            kind=jnp.full(c.shape, xstcc.WRITE, jnp.int32), record=record,
+        )
+
+    def read_batch(
+        self,
+        state: StoreState,
+        *,
+        client: Array,
+        replica: Array,
+        resource: Array,
+        record: bool = True,
+    ) -> tuple[StoreState, xstcc.BatchResult]:
+        c = jnp.asarray(client, jnp.int32)
+        return self.apply_batch(
+            state, client=c, replica=replica, resource=resource,
+            kind=jnp.full(c.shape, xstcc.READ, jnp.int32), record=record,
+        )
+
+    # -- server side ------------------------------------------------------------
+
+    def merge(
+        self, state: StoreState, *, delta: Array | int | None = None
+    ) -> tuple[StoreState, Array]:
+        """Timed-causal propagation (Δ defaults to the level's cadence)."""
+        d = self.delta if delta is None else delta
+        cluster, n = xstcc.server_merge(
+            state.cluster, delta=d, level=self.level
+        )
+        return state._replace(cluster=cluster), n
+
+    def install(
+        self,
+        state: StoreState,
+        *,
+        replica: Array | int,
+        resource: Array | int,
+        version: Array | int,
+    ) -> StoreState:
+        """Server-side snapshot install (the serving layer's ``publish``).
+
+        Unlike a client write, an install carries an externally-assigned
+        version (e.g. a checkpoint step) and no session: it just raises
+        the replica's applied version and the global frontier.
+        """
+        p = jnp.asarray(replica, jnp.int32)
+        r = jnp.asarray(resource, jnp.int32)
+        v = jnp.asarray(version, jnp.int32)
+        cluster = state.cluster._replace(
+            replica_version=state.cluster.replica_version.at[p, r].max(v),
+            global_version=state.cluster.global_version.at[r].max(v),
+        )
+        return state._replace(cluster=cluster)
+
+    # -- session floors -----------------------------------------------------------
+
+    def session_floor(
+        self, state: StoreState, client: Array | int, resource: Array | int
+    ) -> Array:
+        """The MR/RYW floor: min version admissible for this session."""
+        c = jnp.asarray(client, jnp.int32)
+        r = jnp.asarray(resource, jnp.int32)
+        return jnp.maximum(
+            state.cluster.read_floor[c, r], state.cluster.write_floor[c, r]
+        )
+
+    def admit_batch(
+        self,
+        state: StoreState,
+        *,
+        client: Array,
+        replica: Array,
+        resource: Array,
+        use_kernel: bool = False,
+    ) -> tuple[StoreState, Array, Array]:
+        """Batched admission check + floor update (the serving hot loop).
+
+        Checks ``replica_version[p, r] >= max(read_floor, write_floor)``
+        for each op against the *pre-batch* floors (router semantics: the
+        batch was admitted concurrently), serves
+        ``max(replica_version, floor)`` under session enforcement, and
+        raises the read floors.  With ``use_kernel=True`` the check runs
+        through the Pallas kernel (``repro.kernels.session_floor``).
+
+        Returns ``(state, served, admissible)``.
+        """
+        c = jnp.asarray(client, jnp.int32)
+        p = jnp.asarray(replica, jnp.int32)
+        r = jnp.asarray(resource, jnp.int32)
+        cl = state.cluster
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+
+            served, adm, _, new_rf = kernel_ops.session_admit(
+                cl.replica_version, cl.read_floor, cl.write_floor,
+                c, p, r, enforce=self.enforce_sessions,
+            )
+        else:
+            from repro.kernels import ref as kernel_ref
+
+            served, adm, _, new_rf = kernel_ref.session_admit_ref(
+                cl.replica_version, cl.read_floor, cl.write_floor,
+                c, p, r, enforce=self.enforce_sessions,
+            )
+        cluster = cl._replace(read_floor=new_rf)
+        return state._replace(cluster=cluster), served, adm
+
+    # -- audit / GC ---------------------------------------------------------------
+
+    def audit(
+        self, state: StoreState, *, delta: Array | int | None = None
+    ) -> audit_lib.AuditResult:
+        d = self.delta if delta is None else delta
+        return audit_lib.audit(state.duot, delta=d)
+
+    def gc(self, state: StoreState) -> StoreState:
+        """Drop DUOT entries covered by the global stability frontier."""
+        frontier = xstcc.stability_frontier(state.cluster)
+        return state._replace(duot=duot_lib.gc(state.duot, frontier))
+
+    def stability_frontier(self, state: StoreState) -> Array:
+        return xstcc.stability_frontier(state.cluster)

@@ -18,10 +18,15 @@ The same engine backs three layers of the framework:
 ``repro.storage.simulator`` (keys = user table rows — the paper's own
 evaluation), ``repro.sync.engine`` (single resource = the parameter
 vector; replicas = pods), and ``repro.serve.engine`` (resources = model
-snapshots; sessions = request streams).
+snapshots; sessions = request streams) — all three consume it through
+the ``repro.core.replicated_store.ReplicatedStore`` facade.
 
-Everything is fixed-shape jnp so it can run under jit/vmap in property
-tests and inside the training step.
+Ops come in two equivalent granularities: scalar (``client_write`` /
+``client_read``, one op at a time) and batched (``apply_op_batch`` and
+the ``client_*_batch`` wrappers), which ingest ``(B,)`` op arrays via
+segment/scatter ops with bit-identical results — the serving-scale hot
+path.  Everything is fixed-shape jnp so it can run under jit/vmap in
+property tests and inside the training step.
 """
 
 from __future__ import annotations
@@ -35,6 +40,9 @@ from repro.core import vector_clock as vclock
 from repro.core.consistency import ConsistencyLevel
 
 Array = jax.Array
+
+WRITE = 1
+READ = 0
 
 
 class ClusterState(NamedTuple):
@@ -58,6 +66,7 @@ class ClusterState(NamedTuple):
     pend_time: Array         # (Q,) int32  — commit step
     pend_live: Array         # (Q,) bool
     pend_applied: Array      # (Q, P) bool — applied at replica p?
+    pend_dropped: Array      # () int32 — writes that found no free slot
     clock: Array             # () int32 — logical step counter
 
 
@@ -80,8 +89,15 @@ def make_cluster(
         pend_time=jnp.zeros((Q,), jnp.int32),
         pend_live=jnp.zeros((Q,), bool),
         pend_applied=jnp.zeros((Q, P), bool),
+        pend_dropped=jnp.zeros((), jnp.int32),
         clock=jnp.zeros((), jnp.int32),
     )
+
+
+def _saturating_add(counter: Array, n: Array) -> Array:
+    """int32 add that clamps at INT32_MAX instead of wrapping."""
+    headroom = jnp.iinfo(jnp.int32).max - counter
+    return counter + jnp.minimum(n.astype(jnp.int32), headroom)
 
 
 class WriteResult(NamedTuple):
@@ -116,11 +132,16 @@ def client_write(
         vclock.merge(state.replica_vc[p], svc)
     )
 
-    # Enqueue for propagation: next free pending slot (LRU overwrite of
-    # fully-applied slots; capacity pressure surfaces in tests).
+    # Enqueue for propagation in the first free pending slot.  When the
+    # ring is full the write still commits at its coordinator but the
+    # propagation record is DROPPED — observably: ``pend_dropped`` counts
+    # every lost record (the old behaviour silently recycled slot 0,
+    # clobbering a live unapplied write).
+    Q = state.pend_live.shape[0]
     free = jnp.logical_not(state.pend_live)
-    slot = jnp.argmax(free)  # first free; if none, slot 0 is recycled
-    q = slot.astype(jnp.int32)
+    has_free = jnp.any(free)
+    slot = jnp.argmax(free).astype(jnp.int32)  # first free slot
+    q = jnp.where(has_free, slot, jnp.int32(Q))  # Q = out of bounds -> drop
     applied0 = jnp.zeros((state.pend_applied.shape[1],), bool).at[p].set(True)
 
     new = state._replace(
@@ -130,14 +151,17 @@ def client_write(
         write_floor=state.write_floor.at[c, r].max(ver),
         read_floor=state.read_floor.at[c, r].max(ver),
         global_version=state.global_version.at[r].set(ver),
-        pend_client=state.pend_client.at[q].set(c),
-        pend_resource=state.pend_resource.at[q].set(r),
-        pend_version=state.pend_version.at[q].set(ver),
-        pend_vc=state.pend_vc.at[q].set(svc),
-        pend_coord=state.pend_coord.at[q].set(p),
-        pend_time=state.pend_time.at[q].set(state.clock),
-        pend_live=state.pend_live.at[q].set(True),
-        pend_applied=state.pend_applied.at[q].set(applied0),
+        pend_client=state.pend_client.at[q].set(c, mode="drop"),
+        pend_resource=state.pend_resource.at[q].set(r, mode="drop"),
+        pend_version=state.pend_version.at[q].set(ver, mode="drop"),
+        pend_vc=state.pend_vc.at[q].set(svc, mode="drop"),
+        pend_coord=state.pend_coord.at[q].set(p, mode="drop"),
+        pend_time=state.pend_time.at[q].set(state.clock, mode="drop"),
+        pend_live=state.pend_live.at[q].set(True, mode="drop"),
+        pend_applied=state.pend_applied.at[q].set(applied0, mode="drop"),
+        pend_dropped=_saturating_add(
+            state.pend_dropped, 1 - has_free.astype(jnp.int32)
+        ),
         clock=state.clock + 1,
     )
     return WriteResult(state=new, version=ver, vc=svc)
@@ -193,6 +217,217 @@ def client_read(
     )
 
 
+class BatchResult(NamedTuple):
+    """Per-op outputs of :func:`apply_op_batch` (B = batch size).
+
+    ``version`` is the version created (writes) or served (reads); fields
+    below it are meaningful for reads only (writes report ``admissible``
+    True, ``stale``/``violation`` False).  ``dropped`` marks writes whose
+    propagation record found no free pending slot; ``slot`` is the pending
+    slot used (Q — out of range — when none)."""
+
+    state: ClusterState
+    version: Array      # (B,) int32
+    vc: Array           # (B, C) int32 — op clock (receive rule)
+    admissible: Array   # (B,) bool
+    stale: Array        # (B,) bool
+    violation: Array    # (B,) bool
+    dropped: Array      # (B,) bool
+    slot: Array         # (B,) int32
+
+
+def apply_op_batch(
+    state: ClusterState,
+    *,
+    client: Array,
+    replica: Array,
+    resource: Array,
+    kind: Array,
+    enforce_sessions: bool | Array = True,
+    extra_visible: Array | None = None,
+    pend_visible: Array | None = None,
+) -> BatchResult:
+    """Ingest a batch of ``B`` ops — bit-identical to the scalar loop.
+
+    Applies ``B`` operations (``kind``: READ=0 / WRITE=1) with *exactly*
+    the semantics of calling :func:`client_write` / :func:`client_read`
+    one op at a time, but vectorized:
+
+      * versions: a per-resource prefix count over the batch assigns each
+        write the version the sequential loop would (``global + rank``);
+      * floors / served versions: per-(client, resource) prefix maxima
+        reproduce the sequential RYW/MR floor evolution, including
+        intra-batch same-(client, resource) trains;
+      * replica visibility: a write is visible within the batch at its
+        coordinator only (per-(replica, resource) prefix max), exactly as
+        in the sequential loop between merges;
+      * vector clocks: the session/replica clock chaining is inherently
+        sequential (each op's clock merges state its predecessors wrote),
+        so it runs as a length-B scan over two small rows — every other
+        state component is a closed-form segment/scatter op.
+
+    ``extra_visible`` (optional ``(B, B)`` bool, row = observer op, col =
+    writer op) injects extra cross-replica visibility: used by the store
+    layer to emulate a merge cadence finer than the batch (e.g. the
+    synchronous levels' merge-every-op).  Only the strict lower triangle
+    is honoured, so causality within the batch is preserved.
+    ``pend_visible`` (optional ``(B, Q)`` bool) does the same for writes
+    still in the pending ring from *earlier* batches: where True (and the
+    slot is live and on the op's resource) the pending version counts as
+    applied at the op's replica.
+
+    The pending ring matches the sequential loop too: the k-th write of
+    the batch takes the k-th free slot (ascending), and writes beyond the
+    free capacity are dropped and counted in ``pend_dropped``.
+    """
+    c = jnp.asarray(client, jnp.int32)
+    p = jnp.asarray(replica, jnp.int32)
+    r = jnp.asarray(resource, jnp.int32)
+    k = jnp.asarray(kind, jnp.int32)
+    B = c.shape[0]
+    Q, P = state.pend_applied.shape
+
+    is_w = k == WRITE
+    idx = jnp.arange(B, dtype=jnp.int32)
+    lower = idx[:, None] > idx[None, :]          # [i, j] : j precedes i
+    same_r = r[:, None] == r[None, :]
+    prior_w_same_r = lower & same_r & is_w[None, :]
+
+    # -- versions (per-resource prefix count) --------------------------------
+    occ = jnp.sum(prior_w_same_r, axis=1, dtype=jnp.int32)
+    gcur = state.global_version[r] + occ         # global version seen by op i
+    ver_w = gcur + 1                             # version created IF a write
+    verw_masked = jnp.where(is_w, ver_w, 0)
+
+    # -- replica-visible version (coordinator prefix + emulated merges) ------
+    vis = prior_w_same_r & (p[:, None] == p[None, :])
+    if extra_visible is not None:
+        vis = vis | (prior_w_same_r & extra_visible)
+    raw = jnp.maximum(
+        state.replica_version[p, r],
+        jnp.max(jnp.where(vis, verw_masked[None, :], 0), axis=1),
+    )
+    if pend_visible is not None:
+        pvis = (
+            pend_visible
+            & state.pend_live[None, :]
+            & (r[:, None] == state.pend_resource[None, :])
+        )
+        raw = jnp.maximum(
+            raw,
+            jnp.max(jnp.where(pvis, state.pend_version[None, :], 0), axis=1),
+        )
+
+    # -- session floors (per-(client, resource) prefix max) ------------------
+    # Along one session's ops on one resource, the floor evolves as the
+    # running max of {initial floor, write versions, raw read versions}:
+    # served = max(raw, floor) folds the floor chain into the prefix max.
+    same_cr = (c[:, None] == c[None, :]) & same_r
+    floor0 = jnp.maximum(state.read_floor[c, r], state.write_floor[c, r])
+    contrib = jnp.where(is_w, ver_w, raw)
+    floor = jnp.maximum(
+        floor0,
+        jnp.max(jnp.where(lower & same_cr, contrib[None, :], 0), axis=1),
+    )
+
+    enforce = jnp.asarray(enforce_sessions, bool)
+    adm = raw >= floor
+    served = jnp.where(enforce, jnp.maximum(raw, floor), raw)
+    violation = (~is_w) & (~enforce) & (~adm)
+    stale = (~is_w) & (served < gcur)
+    version_out = jnp.where(is_w, ver_w, served)
+    admissible = jnp.where(is_w, True, adm)
+
+    # -- vector clocks (exact sequential chaining, small scan) ---------------
+    def clock_step(carry, op):
+        svcs, rvcs = carry
+        ci, pi, wi = op
+        svc = jnp.maximum(svcs[ci], rvcs[pi]).at[ci].add(1)
+        svcs = svcs.at[ci].set(svc)
+        rvcs = jnp.where(wi, rvcs.at[pi].max(svc), rvcs)
+        return (svcs, rvcs), svc
+
+    (session_vc, replica_vc), vcs = jax.lax.scan(
+        clock_step, (state.session_vc, state.replica_vc), (c, p, is_w)
+    )
+
+    # -- pending ring: k-th batch write -> k-th free slot --------------------
+    free = jnp.logical_not(state.pend_live)
+    n_free = jnp.sum(free.astype(jnp.int32))
+    wrank = jnp.cumsum(is_w.astype(jnp.int32)) - 1
+    slot_order = jnp.argsort(
+        jnp.logical_not(free), stable=True
+    ).astype(jnp.int32)
+    enq = is_w & (wrank < n_free)
+    slot = jnp.where(
+        enq, slot_order[jnp.clip(wrank, 0, Q - 1)], jnp.int32(Q)
+    )
+    dropped = is_w & jnp.logical_not(enq)
+    applied0 = jnp.arange(P, dtype=jnp.int32)[None, :] == p[:, None]
+    pend_time = state.clock + idx
+
+    new = state._replace(
+        replica_version=state.replica_version.at[p, r].max(verw_masked),
+        replica_vc=replica_vc,
+        session_vc=session_vc,
+        read_floor=state.read_floor.at[c, r].max(
+            jnp.where(is_w, ver_w, served)
+        ),
+        write_floor=state.write_floor.at[c, r].max(verw_masked),
+        global_version=state.global_version.at[r].max(verw_masked),
+        pend_client=state.pend_client.at[slot].set(c, mode="drop"),
+        pend_resource=state.pend_resource.at[slot].set(r, mode="drop"),
+        pend_version=state.pend_version.at[slot].set(ver_w, mode="drop"),
+        pend_vc=state.pend_vc.at[slot].set(vcs, mode="drop"),
+        pend_coord=state.pend_coord.at[slot].set(p, mode="drop"),
+        pend_time=state.pend_time.at[slot].set(pend_time, mode="drop"),
+        pend_live=state.pend_live.at[slot].set(True, mode="drop"),
+        pend_applied=state.pend_applied.at[slot].set(applied0, mode="drop"),
+        pend_dropped=_saturating_add(
+            state.pend_dropped, jnp.sum(dropped.astype(jnp.int32))
+        ),
+        clock=state.clock + B,
+    )
+    return BatchResult(
+        state=new, version=version_out, vc=vcs, admissible=admissible,
+        stale=stale, violation=violation, dropped=dropped, slot=slot,
+    )
+
+
+def client_write_batch(
+    state: ClusterState,
+    *,
+    client: Array,
+    replica: Array,
+    resource: Array,
+) -> BatchResult:
+    """Commit a batch of writes — sequential-equivalent (see
+    :func:`apply_op_batch`)."""
+    c = jnp.asarray(client, jnp.int32)
+    return apply_op_batch(
+        state, client=c, replica=replica, resource=resource,
+        kind=jnp.full(c.shape, WRITE, jnp.int32),
+    )
+
+
+def client_read_batch(
+    state: ClusterState,
+    *,
+    client: Array,
+    replica: Array,
+    resource: Array,
+    enforce_sessions: bool | Array = True,
+) -> BatchResult:
+    """Serve a batch of reads — sequential-equivalent (see
+    :func:`apply_op_batch`)."""
+    c = jnp.asarray(client, jnp.int32)
+    return apply_op_batch(
+        state, client=c, replica=replica, resource=resource,
+        kind=jnp.full(c.shape, READ, jnp.int32),
+        enforce_sessions=enforce_sessions,
+    )
+
+
 def server_merge(
     state: ClusterState,
     *,
@@ -202,15 +437,94 @@ def server_merge(
     """Timed-causal propagation step (server side).
 
     Applies, at every replica, all pending writes that (a) are older than
-    Δ, or (b) whose causal predecessors are already applied — in the
-    deterministic linear extension (clock-sum, client) order.  Because
+    Δ, or (b) whose causal predecessors are already applied.  Because
     application is in causal order at every replica, all servers share
     one view (paper: "all servers have the same view of the causality
     relations").
 
+    Implemented as a vectorized fixpoint: every round applies, over all
+    Q slots at once, the writes whose gate (overdue OR deps applied) is
+    open, then re-evaluates the gates with the updated replica clocks —
+    chain-depth rounds instead of Q sequential steps.  The fixpoint is
+    the closure of the gate relation; it matches
+    :func:`server_merge_sequential` except that a write whose
+    dependencies are satisfied by another slot applied in the *same*
+    pass always lands in this merge (the one-at-a-time scan picks it up
+    this merge only when the enabler sorts first, else next merge).
+
     Returns (state, n_applied).
     """
     del level  # the order is identical; levels differ in *when* merge runs
+    d = jnp.asarray(delta, jnp.int32)
+    Q, P = state.pend_applied.shape
+    C = state.replica_vc.shape[1]
+    R = state.global_version.shape[0]
+
+    live = state.pend_live
+    overdue = jnp.logical_and(live, (state.clock - state.pend_time) >= d)
+    # A write is applicable at all replicas once its causal deps are
+    # stable: its vc (minus its own tick) ≤ every replica's vc.
+    own = jnp.arange(C, dtype=jnp.int32)[None, :] == state.pend_client[:, None]
+    dep_vc = state.pend_vc - own.astype(jnp.int32)
+    res_safe = jnp.where(live, state.pend_resource, jnp.int32(R))
+
+    def cond_fn(carry):
+        return carry[4]
+
+    def body_fn(carry):
+        rv, rvc, applied, n, _ = carry
+        deps_ok = jnp.all(
+            jnp.all(dep_vc[:, None, :] <= rvc[None, :, :], axis=-1), axis=-1
+        )
+        done = jnp.all(applied, axis=1)
+        elig = live & ~done & (overdue | deps_ok)
+        upd = (
+            jnp.zeros((R,), jnp.int32)
+            .at[res_safe]
+            .max(jnp.where(elig, state.pend_version, 0), mode="drop")
+        )
+        rv = jnp.maximum(rv, upd[None, :])
+        vc_new = jnp.max(
+            jnp.where(elig[:, None], state.pend_vc, 0), axis=0
+        )
+        rvc = jnp.maximum(rvc, vc_new[None, :])
+        applied = applied | elig[:, None]
+        n = n + jnp.sum(elig.astype(jnp.int32))
+        return (rv, rvc, applied, n, jnp.any(elig))
+
+    rv, rvc, applied, n_applied, _ = jax.lax.while_loop(
+        cond_fn,
+        body_fn,
+        (state.replica_version, state.replica_vc, state.pend_applied,
+         jnp.zeros((), jnp.int32), jnp.any(live)),
+    )
+    fully = jnp.all(applied, axis=1)
+    new = state._replace(
+        replica_version=rv,
+        replica_vc=rvc,
+        pend_applied=applied,
+        pend_live=jnp.logical_and(state.pend_live, jnp.logical_not(fully)),
+        clock=state.clock + 1,
+    )
+    return new, n_applied
+
+
+def server_merge_sequential(
+    state: ClusterState,
+    *,
+    delta: Array | int,
+    level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+) -> tuple[ClusterState, Array]:
+    """Pre-batching merge: one pending slot per ``lax.scan`` step.
+
+    The original engine's propagation pass, kept as the benchmark /
+    differential baseline for :func:`server_merge`.  Applies slots one
+    at a time in the deterministic causal-extension order, so a write
+    whose dependencies are satisfied *by a later-sorted slot in the same
+    pass* (the cross-client carrier case) waits one extra merge compared
+    to the fixpoint — otherwise the two are identical.
+    """
+    del level
     d = jnp.asarray(delta, jnp.int32)
     Q, P = state.pend_applied.shape
 
@@ -220,7 +534,6 @@ def server_merge(
     overdue = jnp.logical_and(
         state.pend_live, (state.clock - state.pend_time) >= d
     )
-    # Apply in the deterministic causal extension: sort by LWW key.
     key = vclock.total_order_key(state.pend_vc, state.pend_client)
     key = jnp.where(due, key, jnp.iinfo(jnp.int32).max)
     order = jnp.argsort(key)
@@ -229,8 +542,6 @@ def server_merge(
         rv, rvc, applied, n = carry
         live = state.pend_live[qi]
         must = overdue[qi]
-        # A write is applicable at all replicas once its causal deps are
-        # stable: its vc (minus its own tick) ≤ the replica's vc.
         dep_vc = state.pend_vc[qi].at[state.pend_client[qi]].add(-1)
         deps_ok = jnp.all(dep_vc[None, :] <= rvc, axis=1)  # (P,)
         do = jnp.logical_and(live, jnp.logical_or(must, jnp.all(deps_ok)))

@@ -2,6 +2,8 @@
 
   flash_attention — prefill/train attention (MXU-tiled online softmax).
   vclock_audit    — DUOT pairwise causality audit (paper §3.3).
+  session_floor   — batched X-STCC session-floor admission check (the
+                    serving-path per-op hot loop).
 """
 
 from repro.kernels import ops, ref

@@ -1,0 +1,16 @@
+"""Version compatibility for the Pallas TPU API surface."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases;
+# support both so the kernels run on either side of the rename.
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # pragma: no cover - depends on jax version
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version"
+    )

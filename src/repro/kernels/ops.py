@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import session_floor as _sf
 from repro.kernels import vclock_audit as _va
 
 
@@ -80,6 +81,49 @@ def audit_duot(duot, *, delta: int = 0, block: int = 128,
         block=block,
         interpret=interpret,
     )[: m, : m]
+
+
+def session_admit(
+    replica_version: jax.Array,  # (P, R) int32
+    read_floor: jax.Array,       # (C, R) int32
+    write_floor: jax.Array,      # (C, R) int32
+    client: jax.Array,           # (B,) int32
+    replica: jax.Array,          # (B,) int32
+    resource: jax.Array,         # (B,) int32
+    *,
+    enforce: bool = True,
+    block: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched session-floor admission via the Pallas kernel.
+
+    Same contract as ``repro.kernels.ref.session_admit_ref``: returns
+    ``(served, admissible, floor, new_read_floor)``.  The batch is
+    padded to a block multiple with invalid rows."""
+    interpret = _on_cpu() if interpret is None else interpret
+    b = client.shape[0]
+    block = max(1, min(block, b))
+    pad = (-b) % block
+
+    def p1(x, fill=0):
+        return jnp.pad(x, (0, pad), constant_values=fill) if pad else x
+
+    meta = jnp.zeros((b + pad, _sf.META_COLS), jnp.int32)
+    meta = meta.at[:, _sf.CLIENT].set(p1(client.astype(jnp.int32)))
+    meta = meta.at[:, _sf.REPLICA].set(p1(replica.astype(jnp.int32)))
+    meta = meta.at[:, _sf.RESOURCE].set(p1(resource.astype(jnp.int32)))
+    meta = meta.at[:, _sf.VALID].set(p1(jnp.ones((b,), jnp.int32)))
+
+    out, new_rf = _sf.session_floor(
+        replica_version, read_floor, write_floor, meta,
+        enforce=enforce, block=block, interpret=interpret,
+    )
+    return (
+        out[:b, _sf.SERVED],
+        out[:b, _sf.ADMISSIBLE].astype(bool),
+        out[:b, _sf.FLOOR],
+        new_rf,
+    )
 
 
 def audit_summary(codes: jax.Array) -> dict[str, jax.Array]:

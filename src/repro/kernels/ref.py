@@ -51,6 +51,42 @@ def flash_attention_ref(
     return out.reshape(b, h, s, hd).astype(q.dtype)
 
 
+def session_admit_ref(
+    replica_version: Array,  # (P, R) int32
+    read_floor: Array,       # (C, R) int32
+    write_floor: Array,      # (C, R) int32
+    client: Array,           # (B,) int32
+    replica: Array,          # (B,) int32
+    resource: Array,         # (B,) int32
+    *,
+    enforce: bool = True,
+    valid: Array | None = None,  # (B,) bool
+) -> tuple[Array, Array, Array, Array]:
+    """Reference batched X-STCC admission check + floor update.
+
+    The serving-path hot loop: for each op, ``replica_version[p, r] >=
+    max(read_floor[c, r], write_floor[c, r])`` decides admissibility;
+    under session enforcement the served version is lifted to the floor
+    (the admissible-replica reroute); the read floors then absorb the
+    served versions.  The batch is checked against the *pre-batch*
+    floors (concurrent admission — router semantics).
+
+    Returns ``(served, admissible, floor, new_read_floor)``.
+    """
+    c = jnp.asarray(client, jnp.int32)
+    p = jnp.asarray(replica, jnp.int32)
+    r = jnp.asarray(resource, jnp.int32)
+    ok = jnp.ones(c.shape, bool) if valid is None else jnp.asarray(valid, bool)
+
+    raw = replica_version[p, r]
+    floor = jnp.maximum(read_floor[c, r], write_floor[c, r])
+    admissible = jnp.logical_and(ok, raw >= floor)
+    served = jnp.maximum(raw, floor) if enforce else raw
+    served = jnp.where(ok, served, 0)
+    new_rf = read_floor.at[c, r].max(served)
+    return served, admissible, jnp.where(ok, floor, 0), new_rf
+
+
 def vclock_audit_ref(
     vc: Array,        # (M, N) int32 vector clocks
     client: Array,    # (M,) int32

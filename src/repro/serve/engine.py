@@ -8,6 +8,13 @@ The router implements exactly the X-STCC client-side check: a replica is
 admissible for a session iff its version >= the session floor; weaker
 levels skip the check and stale serving becomes observable.
 
+All floor/version bookkeeping lives in a
+:class:`repro.core.replicated_store.ReplicatedStore` (replicas = snapshot
+servers, clients = sessions, the single resource = the model): publishes
+are server-side ``install``\\ s, serves are batched session reads, and the
+batched router (:meth:`ServingEngine.route_batch`) runs the admission
+check through the Pallas session-floor kernel at serving scale.
+
 The compute path (prefill/decode) is the model substrate; this module
 owns the jit'd step functions and the routing/bookkeeping.
 """
@@ -21,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.consistency import ConsistencyLevel
+from repro.core.replicated_store import ReplicatedStore
 from repro.models.model_zoo import Model
 
 Array = jax.Array
@@ -44,13 +52,22 @@ class ServingEngine:
         model: Model,
         level: ConsistencyLevel = ConsistencyLevel.X_STCC,
         jit: bool = True,
+        max_replicas: int = 8,
+        max_sessions: int = 64,
     ):
         self.model = model
         self.level = level
         self.replicas: list[ReplicaSnapshot] = []
+        self.max_replicas = max_replicas
+        self.max_sessions = max_sessions
         self.stale_serves = 0
         self.total_serves = 0
         self.reroutes = 0
+        self._store = ReplicatedStore(
+            max_replicas, max_sessions, 1, level=level,
+            pending_cap=max_sessions,
+        )
+        self._st = self._store.init()
         if jit:
             self._prefill = jax.jit(model.prefill)
             self._decode = jax.jit(model.decode_step)
@@ -58,25 +75,51 @@ class ServingEngine:
             self._prefill = model.prefill
             self._decode = model.decode_step
 
+    def _sid(self, session: ServeSession) -> int:
+        if session.session_id >= self.max_sessions:
+            # Silent modular aliasing would make colliding sessions
+            # share one floor, breaking per-session MR/RYW.
+            raise RuntimeError(
+                f"session_id {session.session_id} >= max_sessions "
+                f"{self.max_sessions}; raise max_sessions"
+            )
+        return session.session_id
+
     # -- replica management -----------------------------------------------------
 
     def publish(self, params, version: int, replica: int | None = None):
         """Install a parameter snapshot on one replica (or append new)."""
         snap = ReplicaSnapshot(params=params, version=version)
         if replica is None or replica >= len(self.replicas):
+            if len(self.replicas) >= self.max_replicas:
+                raise RuntimeError(
+                    f"more than max_replicas={self.max_replicas} replicas"
+                )
             self.replicas.append(snap)
+            replica = len(self.replicas) - 1
         else:
             self.replicas[replica] = snap
+        self._st = self._store.install(
+            self._st, replica=replica, resource=0, version=version
+        )
 
     def publish_everywhere(self, params, version: int):
         for r in range(len(self.replicas)):
             self.replicas[r] = ReplicaSnapshot(params, version)
+            self._st = self._store.install(
+                self._st, replica=r, resource=0, version=version
+            )
 
     @property
     def latest_version(self) -> int:
         return max((r.version for r in self.replicas), default=0)
 
     # -- routing ------------------------------------------------------------------
+
+    def session_floor(self, session: ServeSession) -> int:
+        """MR/RYW floor: store-tracked, joined with any external floor."""
+        floor = int(self._store.session_floor(self._st, self._sid(session), 0))
+        return max(floor, session.read_floor)
 
     def route(self, session: ServeSession, preferred: int | None = None) -> int:
         """Pick a replica for this session per the consistency level."""
@@ -85,20 +128,92 @@ class ServingEngine:
             raise RuntimeError("no replicas published")
         idx = (session.session_id if preferred is None else preferred) % n
         if self.level.is_session_guarded:
-            if self.replicas[idx].version < session.read_floor:
+            floor = self.session_floor(session)
+            if self.replicas[idx].version < floor:
                 # Reroute to the freshest admissible replica (MR/RYW).
-                best = max(range(n), key=lambda r: self.replicas[r].version)
-                if self.replicas[best].version < session.read_floor:
+                best = _freshest_replica(self.replicas)
+                if self.replicas[best].version < floor:
                     raise RuntimeError("no admissible replica for session")
                 self.reroutes += 1
                 idx = best
         return idx
+
+    def route_batch(
+        self, sessions: list[ServeSession], preferred: Array | None = None,
+        use_kernel: bool = True,
+    ) -> tuple[Array, Array]:
+        """Vectorized admission check for a batch of sessions.
+
+        Routes every session to its preferred replica, runs the batched
+        session-floor admission check (the Pallas kernel when
+        ``use_kernel``), reroutes inadmissible sessions to the freshest
+        replica, and registers the serves in the store.  Returns
+        ``(replica_indices, served_versions)``.
+        """
+        n = len(self.replicas)
+        if n == 0:
+            raise RuntimeError("no replicas published")
+        sid = jnp.asarray([self._sid(s) for s in sessions], jnp.int32)
+        if preferred is None:
+            preferred = jnp.asarray(
+                [s.session_id % n for s in sessions], jnp.int32
+            )
+        preferred = jnp.asarray(preferred, jnp.int32) % n
+        if self.level.is_session_guarded:
+            # Admission against the store-tracked floors (the Pallas
+            # kernel path); the returned state is discarded on purpose —
+            # floors are only committed by the observe step below, after
+            # rerouting decides where each session actually reads.
+            _, _, adm = self._store.admit_batch(
+                self._st, client=sid, replica=preferred,
+                resource=jnp.zeros(sid.shape, jnp.int32),
+                use_kernel=use_kernel,
+            )
+            # Join with any externally-set session floor (route() parity).
+            ext = jnp.asarray(
+                [s.read_floor for s in sessions], jnp.int32
+            )
+            versions = jnp.asarray(
+                [r.version for r in self.replicas], jnp.int32
+            )
+            adm = jnp.logical_and(adm, versions[preferred] >= ext)
+            best = _freshest_replica(self.replicas)
+            floor = jnp.maximum(
+                self._store.session_floor(self._st, sid, 0), ext
+            )
+            if bool(jnp.any(~adm & (versions[best] < floor))):
+                raise RuntimeError("no admissible replica for session")
+            replica = jnp.where(adm, preferred, best)
+            self.reroutes += int(jnp.sum(~adm))
+        else:
+            replica = preferred
+        served = self._observe_batch(sessions, replica)
+        return replica, served
+
+    def _observe_batch(self, sessions: list[ServeSession], replica: Array):
+        sid = jnp.asarray([self._sid(s) for s in sessions], jnp.int32)
+        self._st, res = self._store.read_batch(
+            self._st, client=sid, replica=jnp.asarray(replica, jnp.int32),
+            resource=jnp.zeros(sid.shape, jnp.int32), record=False,
+        )
+        self.total_serves += len(sessions)
+        self.stale_serves += int(jnp.sum(res.stale))
+        for s, v in zip(sessions, list(res.version)):
+            s.read_floor = max(s.read_floor, int(v))
+        return res.version
 
     def _observe(self, session: ServeSession, replica: int):
         v = self.replicas[replica].version
         self.total_serves += 1
         if v < self.latest_version:
             self.stale_serves += 1
+        self._st, _ = self._store.read_batch(
+            self._st,
+            client=jnp.asarray([self._sid(session)], jnp.int32),
+            replica=jnp.asarray([replica], jnp.int32),
+            resource=jnp.zeros((1,), jnp.int32),
+            record=False,
+        )
         session.read_floor = max(session.read_floor, v)
 
     # -- compute ---------------------------------------------------------------
@@ -133,3 +248,7 @@ class ServingEngine:
 
     def staleness_rate(self) -> float:
         return self.stale_serves / max(1, self.total_serves)
+
+
+def _freshest_replica(replicas: list[ReplicaSnapshot]) -> int:
+    return max(range(len(replicas)), key=lambda r: replicas[r].version)

@@ -24,6 +24,7 @@ Three coupled models produce every figure of the paper:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -34,6 +35,7 @@ from repro.core import cost_model, xstcc
 from repro.core import duot as duot_lib
 from repro.core import audit as audit_lib
 from repro.core.consistency import ConsistencyLevel
+from repro.core.replicated_store import ReplicatedStore, merge_cadence
 from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
 from repro.storage.ycsb import Workload, generate
 
@@ -131,6 +133,88 @@ def throughput_model(
 # ---------------------------------------------------------------------------
 
 
+def _op_stream(
+    w: Workload, n_ops: int, n_clients: int, n_resources: int, seed: int
+) -> dict[str, np.ndarray]:
+    """The YCSB op stream shared by the batched and scalar engines.
+
+    Replicas = the 3 DCs; a client's home replica is its DC; reads go to
+    the *nearest* replica (home DC).  Client mobility (paper Fig. 2: Bob
+    reconnects to another server): 30% of ops hit a different DC than
+    the session's home."""
+    ops = generate(w, n_ops=n_ops, n_keys=n_resources, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    client = rng.integers(0, n_clients, n_ops).astype(np.int32)
+    move = rng.random(n_ops) < 0.30
+    offset = rng.integers(1, 3, n_ops)
+    home = ((client % 3 + np.where(move, offset, 0)) % 3).astype(np.int32)
+    return {
+        "client": client,
+        "kind": ops["kind"].astype(np.int32),
+        "resource": (ops["key"] % n_resources).astype(np.int32),
+        "home": home,
+    }
+
+
+_OP_COLS = ("client", "kind", "resource", "home")
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_runner(
+    level: ConsistencyLevel,
+    n_clients: int,
+    n_resources: int,
+    merge_every: int,
+    delta: int,
+    duot_cap: int,
+    sub: int,
+    rem: int,
+    emulate: bool,
+) -> tuple[ReplicatedStore, Any]:
+    """(store, jitted engine) for one batched-protocol configuration.
+
+    Cached so repeat runs (benchmarks, figure sweeps over workloads and
+    thread counts) pay tracing/compilation once per configuration.  The
+    pending ring scales with the batch: up to a full batch of writes can
+    be in flight before the batch-boundary merge."""
+    store = ReplicatedStore(
+        3, n_clients, n_resources, level=level, merge_every=merge_every,
+        delta=delta, pending_cap=max(128, 2 * sub), duot_cap=duot_cap,
+    )
+
+    def round_step(carry, ops, step0):
+        st, n_stale, n_viol, n_reads = carry
+        st, res = store.apply_batch(
+            st, client=ops["client"], replica=ops["home"],
+            resource=ops["resource"], kind=ops["kind"],
+            op_step0=step0 if emulate else None,
+            apply_index=ops.get("apply_idx"),
+        )
+        st, _ = store.merge(st)
+        is_read = ops["kind"] == duot_lib.READ
+        return (
+            st,
+            n_stale + jnp.sum(res.stale.astype(jnp.int32)),
+            n_viol + jnp.sum(res.violation.astype(jnp.int32)),
+            n_reads + jnp.sum(is_read.astype(jnp.int32)),
+        )
+
+    @jax.jit
+    def run(batched, tail):
+        carry = (store.init(), jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        n_rounds = batched["client"].shape[0]
+
+        def step(carry, ops):
+            return round_step(carry, ops, ops["step0"]), None
+
+        carry, _ = jax.lax.scan(step, carry, batched)
+        if rem:
+            carry = round_step(carry, tail, jnp.int32(n_rounds * sub))
+        return carry
+
+    return store, run
+
+
 def run_protocol(
     level: ConsistencyLevel,
     w: Workload,
@@ -142,89 +226,187 @@ def run_protocol(
     delta: int = 24,
     duot_cap: int = 2048,
     seed: int = 0,
+    batch_size: int = 128,
+    audit: bool = True,
 ) -> dict[str, float]:
-    """Run a scaled YCSB stream through the X-STCC engine.
+    """Run a scaled YCSB stream through the *batched* X-STCC engine.
 
-    Replicas = the 3 DCs; a client's home replica is its DC; reads go to
-    the *nearest* replica (home DC), writes commit at home and propagate
-    per the level's cadence (`merge_every` ops ~ Tp; synchronous levels
-    merge every op)."""
-    ops = generate(w, n_ops=n_ops, n_keys=n_resources, seed=seed)
-    kind = jnp.asarray(ops["kind"])
-    res = jnp.asarray(ops["key"] % n_resources, jnp.int32)
-    rng = np.random.default_rng(seed + 1)
-    client = jnp.asarray(rng.integers(0, n_clients, n_ops), jnp.int32)
-    # Client mobility (paper Fig. 2: Bob reconnects to another server):
-    # 30% of ops hit a different DC than the session's home.
-    move = rng.random(n_ops) < 0.30
-    offset = rng.integers(1, 3, n_ops)
-    home = (np.asarray(client) % 3 + np.where(move, offset, 0)) % 3
-    home = jnp.asarray(home, jnp.int32)
+    The op stream is ingested by ``lax.scan`` over op batches through
+    :class:`repro.core.replicated_store.ReplicatedStore`, with real
+    server merges on batch boundaries only.  Batch granularity per
+    level:
 
-    if level in (ConsistencyLevel.ALL, ConsistencyLevel.TWO,
-                 ConsistencyLevel.QUORUM):
-        sync_every, d = 1, 0
-    elif level is ConsistencyLevel.ONE:
-        # Unbounded background propagation: slow cadence, no timed bound.
-        sync_every, d = 2 * merge_every, 4 * delta
-    elif level is ConsistencyLevel.CAUSAL:
-        sync_every, d = merge_every, 4 * delta
-    else:  # TCC / X_STCC: the timed bound forces prompt application
-        sync_every, d = merge_every, max(1, delta // 3)
-    enforce = level is ConsistencyLevel.X_STCC
+      * synchronous levels and the timed levels (TCC / X-STCC):
+        ``batch_size``-op batches; the finer merge cadence is *emulated
+        inside* each batch in op-index space (see
+        ``ReplicatedStore.apply_batch``) — with a tight Δ the timed
+        bound pins every apply point, so staleness/violation metrics
+        track the sequential engine exactly;
+      * untimed causal levels (CAUSAL / ONE): ``sync_every``-op batches
+        with a real merge per batch — the sequential merge schedule
+        itself, because with an effectively unbounded Δ the apply points
+        hinge on cross-client dependency chains no closed form predicts.
 
-    state0 = xstcc.make_cluster(3, n_clients, n_resources, pending_cap=256)
-    duot0 = duot_lib.make(duot_cap, n_clients)
+    ``audit=False`` skips the end-of-run DUOT audit (severity reported
+    as 0) — used by throughput benchmarks to time the engine alone.
+    """
+    stream = _op_stream(w, n_ops, n_clients, n_resources, seed)
+    sync_every, _ = merge_cadence(level, merge_every, delta)
+    emulate = sync_every == 1 or level.is_timed
+    sub = batch_size if emulate else sync_every
+    sub = max(1, min(sub, n_ops))
+    n_rounds = n_ops // sub
+    rem = n_ops - n_rounds * sub
 
-    def step(carry, op):
-        state, duot, n_stale, n_viol, n_reads = carry
-        c, k, r, h, i = op
+    store, run = _batched_runner(
+        level, n_clients, n_resources, merge_every, delta, duot_cap,
+        sub, rem, emulate,
+    )
+    batched = {
+        k: jnp.asarray(stream[k][: n_rounds * sub].reshape(n_rounds, sub))
+        for k in _OP_COLS
+    }
+    batched["step0"] = jnp.arange(n_rounds, dtype=jnp.int32) * sub
+    tail = {
+        k: jnp.asarray(stream[k][-max(rem, 1):]) for k in _OP_COLS
+    }
+    if emulate and store.sync_every > 1:
+        # The emulated apply schedule depends only on the op sequence and
+        # the cadence: compute it once for the stream, slice per batch.
+        apply_idx = store.schedule_stream(
+            stream["client"], stream["home"], stream["kind"]
+        )
+        batched["apply_idx"] = apply_idx[: n_rounds * sub].reshape(
+            n_rounds, sub
+        )
+        tail["apply_idx"] = apply_idx[-max(rem, 1):]
+    st, n_stale, n_viol, n_reads = run(batched, tail)
 
-        def do_write(sd):
-            state, duot = sd
-            out = xstcc.client_write(state, client=c, replica=h, resource=r)
-            duot = duot_lib.append(
-                duot, client=c, kind=duot_lib.WRITE, resource=r,
-                version=out.version, replica=h, vc=out.vc)
-            return out.state, duot, jnp.int32(0), jnp.int32(0), jnp.int32(0)
-
-        def do_read(sd):
-            state, duot = sd
-            out = xstcc.client_read(
-                state, client=c, replica=h, resource=r,
-                enforce_sessions=enforce)
-            duot = duot_lib.append(
-                duot, client=c, kind=duot_lib.READ, resource=r,
-                version=out.version, replica=h,
-                vc=out.state.session_vc[c])
-            return (out.state, duot, out.stale.astype(jnp.int32),
-                    out.violation.astype(jnp.int32), jnp.int32(1))
-
-        state, duot, st, vi, rd = jax.lax.cond(
-            k == duot_lib.WRITE, do_write, do_read, (state, duot))
-
-        def merge(s):
-            s2, _ = xstcc.server_merge(s, delta=d, level=level)
-            return s2
-
-        state = jax.lax.cond(
-            jnp.mod(i, sync_every) == sync_every - 1, merge, lambda s: s,
-            state)
-        return (state, duot, n_stale + st, n_viol + vi, n_reads + rd), None
-
-    idx = jnp.arange(n_ops, dtype=jnp.int32)
-    (state, duot, n_stale, n_viol, n_reads), _ = jax.lax.scan(
-        step, (state0, duot0, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
-        (client, kind, res, home, idx))
-
-    res_audit = audit_lib.audit(duot, delta=d if d else 0)
+    severity = 0.0
+    if audit:
+        res_audit = store.audit(st, delta=store.delta if store.delta else 0)
+        severity = float(res_audit.severity)
     n_reads_f = max(1, int(n_reads))
     return {
         "staleness_rate": float(n_stale) / n_reads_f,
         "violation_rate": float(n_viol) / n_reads_f,
-        "severity": float(res_audit.severity),
+        "severity": severity,
+        "n_reads": int(n_reads),
+        "dropped_writes": int(st.cluster.pend_dropped),
+    }
+
+
+def run_protocol_scalar(
+    level: ConsistencyLevel,
+    w: Workload,
+    *,
+    n_ops: int = 6000,
+    n_clients: int = 16,
+    n_resources: int = 24,
+    merge_every: int = 8,
+    delta: int = 24,
+    duot_cap: int = 2048,
+    seed: int = 0,
+    audit: bool = True,
+) -> dict[str, float]:
+    """Reference scalar engine: one ``lax.cond`` per op (pre-batching).
+
+    The seed engine, byte-for-byte: scalar op ingestion and the
+    one-slot-at-a-time ``server_merge_sequential`` propagation pass.
+    Kept as the semantic and performance baseline the batched engine is
+    validated and benchmarked against (``benchmarks/bench_protocol.py``).
+    """
+    stream = _op_stream(w, n_ops, n_clients, n_resources, seed)
+    sync_every, d = merge_cadence(level, merge_every, delta)
+    run = _scalar_runner(
+        level, n_clients, n_resources, merge_every, delta, duot_cap,
+    )
+    state, duot, n_stale, n_viol, n_reads = run(
+        jnp.asarray(stream["client"]), jnp.asarray(stream["kind"]),
+        jnp.asarray(stream["resource"]), jnp.asarray(stream["home"]),
+    )
+
+    severity = 0.0
+    if audit:
+        res_audit = audit_lib.audit(duot, delta=d if d else 0)
+        severity = float(res_audit.severity)
+    n_reads_f = max(1, int(n_reads))
+    return {
+        "staleness_rate": float(n_stale) / n_reads_f,
+        "violation_rate": float(n_viol) / n_reads_f,
+        "severity": severity,
         "n_reads": int(n_reads),
     }
+
+
+@functools.lru_cache(maxsize=None)
+def _scalar_runner(
+    level: ConsistencyLevel,
+    n_clients: int,
+    n_resources: int,
+    merge_every: int,
+    delta: int,
+    duot_cap: int,
+) -> Any:
+    """Jitted seed engine (one op per scan step), cached per config."""
+    sync_every, d = merge_cadence(level, merge_every, delta)
+    enforce = level is ConsistencyLevel.X_STCC
+
+    @jax.jit
+    def run(client, kind, res, home):
+        n_ops = client.shape[0]
+        state0 = xstcc.make_cluster(3, n_clients, n_resources,
+                                    pending_cap=256)
+        duot0 = duot_lib.make(duot_cap, n_clients)
+
+        def step(carry, op):
+            state, duot, n_stale, n_viol, n_reads = carry
+            c, k, r, h, i = op
+
+            def do_write(sd):
+                state, duot = sd
+                out = xstcc.client_write(
+                    state, client=c, replica=h, resource=r)
+                duot = duot_lib.append(
+                    duot, client=c, kind=duot_lib.WRITE, resource=r,
+                    version=out.version, replica=h, vc=out.vc)
+                return (out.state, duot, jnp.int32(0), jnp.int32(0),
+                        jnp.int32(0))
+
+            def do_read(sd):
+                state, duot = sd
+                out = xstcc.client_read(
+                    state, client=c, replica=h, resource=r,
+                    enforce_sessions=enforce)
+                duot = duot_lib.append(
+                    duot, client=c, kind=duot_lib.READ, resource=r,
+                    version=out.version, replica=h,
+                    vc=out.state.session_vc[c])
+                return (out.state, duot, out.stale.astype(jnp.int32),
+                        out.violation.astype(jnp.int32), jnp.int32(1))
+
+            state, duot, st, vi, rd = jax.lax.cond(
+                k == duot_lib.WRITE, do_write, do_read, (state, duot))
+
+            def merge(s):
+                s2, _ = xstcc.server_merge_sequential(
+                    s, delta=d, level=level)
+                return s2
+
+            state = jax.lax.cond(
+                jnp.mod(i, sync_every) == sync_every - 1, merge,
+                lambda s: s, state)
+            return (state, duot, n_stale + st, n_viol + vi,
+                    n_reads + rd), None
+
+        idx = jnp.arange(n_ops, dtype=jnp.int32)
+        carry, _ = jax.lax.scan(
+            step,
+            (state0, duot0, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+            (client, kind, res, home, idx))
+        return carry
+
+    return run
 
 
 # ---------------------------------------------------------------------------

@@ -21,10 +21,12 @@ Two compiled programs per policy (MaxText-style multi-program stepping):
       X_STCC  Δ-periodic timed-causal merge + session guarantees +
               optional inter-pod compression (int8 / top-k).
 
-The X-STCC bookkeeping reuses ``repro.core.xstcc`` with client i = pod
-i's training process and replica i = pod i's parameter copy; every merge
-registers one write per pod in the DUOT, advances vector clocks through
-``server_merge``, and (optionally) runs the audit.
+The X-STCC bookkeeping goes through
+``repro.core.replicated_store.ReplicatedStore`` with client i = pod i's
+training process and replica i = pod i's parameter copy; every merge
+registers one batched write per pod in the DUOT, advances vector clocks
+through the store's batch ops and ``merge``, and (optionally) runs the
+audit.
 """
 
 from __future__ import annotations
@@ -36,9 +38,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import duot as duot_lib
-from repro.core import vector_clock as vclock
 from repro.core import xstcc
 from repro.core.consistency import ConsistencyLevel, ConsistencyPolicy
+from repro.core.replicated_store import ReplicatedStore
 from repro.sync import compression
 
 Array = jax.Array
@@ -62,6 +64,15 @@ class SyncEngine:
                  params_template=None):
         self.policy = policy
         self.n_pods = max(1, n_pods)
+        p = self.n_pods
+        # All session-floor / clock bookkeeping goes through the store
+        # facade: pods are both the clients and the replicas, and the
+        # single resource is the parameter vector.
+        self._store = ReplicatedStore(
+            p, p, 1, level=policy.level, merge_every=policy.delta_steps,
+            delta=policy.delta_steps, pending_cap=max(4 * p, 16),
+            duot_cap=policy.duot_capacity,
+        )
         self._wire_gb = None
         if params_template is not None:
             self._wire_gb = self.merge_wire_bytes(
@@ -112,9 +123,10 @@ class SyncEngine:
             if self.policy.compress_inter_pod == "topk"
             else None
         )
+        store0 = self._store.init()
         return SyncState(
-            cluster=xstcc.make_cluster(p, p, 1, pending_cap=max(4 * p, 16)),
-            duot=duot_lib.make(self.policy.duot_capacity, p),
+            cluster=store0.cluster,
+            duot=store0.duot,
             anchor=anchor,
             residual=residual,
             merges=jnp.zeros((), jnp.int32),
@@ -249,67 +261,44 @@ class SyncEngine:
         session violations at the neighbor read, while X-STCC's
         enforcement repairs them (and counts zero)."""
         p = self.n_pods
-        cluster = sync.cluster
-        duot = sync.duot
+        store = self._store
+        st = store.wrap(sync.cluster, sync.duot)
+        idx = jnp.arange(p, dtype=jnp.int32)
+        res0 = jnp.zeros((p,), jnp.int32)
 
-        def write_one(i, carry):
-            cluster, duot = carry
-            res = xstcc.client_write(cluster, client=i, replica=i, resource=0)
-            duot = duot_lib.append(
-                duot, client=i, kind=duot_lib.WRITE, resource=0,
-                version=res.version, replica=i, vc=res.vc,
-            )
-            return res.state, duot
-
-        cluster, duot = jax.lax.fori_loop(0, p, write_one, (cluster, duot))
+        # One batched write per pod at its home replica.
+        st, _ = store.write_batch(st, client=idx, replica=idx, resource=res0)
 
         sync_ack = level in (
             ConsistencyLevel.ALL, ConsistencyLevel.TWO, ConsistencyLevel.QUORUM
         )
         if sync_ack:
             # Write acks span the replica set before the write commits.
-            cluster, _ = xstcc.server_merge(cluster, delta=0, level=level)
+            st, _ = store.merge(st, delta=0)
 
-        # Read at the *neighbor* replica (client mobility).  X-STCC
-        # enforces the session floors; weaker levels serve raw replicas.
-        enforce = level is ConsistencyLevel.X_STCC
-
-        def read_one(i, carry):
-            cluster, duot, viol = carry
-            res = xstcc.client_read(
-                cluster, client=i, replica=jnp.mod(i + 1, p), resource=0,
-                enforce_sessions=enforce,
-            )
-            duot = duot_lib.append(
-                duot, client=i, kind=duot_lib.READ, resource=0,
-                version=res.version, replica=jnp.mod(i + 1, p),
-                vc=res.state.session_vc[i],
-            )
-            return res.state, duot, viol + res.violation.astype(jnp.int32)
-
-        cluster, duot, viol = jax.lax.fori_loop(
-            0, p, read_one, (cluster, duot, sync.violations)
+        # Batched read at the *neighbor* replica (client mobility).
+        # X-STCC enforces the session floors (store.enforce_sessions);
+        # weaker levels serve raw replicas.
+        st, reads = store.read_batch(
+            st, client=idx, replica=jnp.mod(idx + 1, p), resource=res0
         )
+        viol = sync.violations + jnp.sum(reads.violation.astype(jnp.int32))
 
         if not sync_ack:
             # Timed-causal propagation (bounded by Δ for TCC/X-STCC).
-            cluster, _ = xstcc.server_merge(
-                cluster, delta=self.policy.delta_steps, level=level
-            )
+            st, _ = store.merge(st, delta=self.policy.delta_steps)
 
         severity = sync.severity
         if self.policy.audit_every and level.is_causal:
-            from repro.core import audit as audit_lib
-
-            res = audit_lib.audit(duot, delta=self.policy.delta_steps * p)
+            res = store.audit(st, delta=self.policy.delta_steps * p)
             severity = res.severity
             # GC entries covered at every replica.
-            duot = duot_lib.gc(duot, xstcc.stability_frontier(cluster))
+            st = store.gc(st)
 
         gb = jnp.float32(0.0 if self._wire_gb is None else self._wire_gb)
         return sync._replace(
-            cluster=cluster,
-            duot=duot,
+            cluster=st.cluster,
+            duot=st.duot,
             merges=sync.merges + 1,
             inter_pod_gb=sync.inter_pod_gb + gb,
             violations=viol,

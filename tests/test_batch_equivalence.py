@@ -1,0 +1,218 @@
+"""Batched engine == scalar engine, bit for bit.
+
+The contract of ``xstcc.apply_op_batch`` (and the ``client_*_batch``
+wrappers) is *sequential equivalence*: ingesting a batch produces the
+same ``ClusterState`` and the same per-op results as the scalar
+``client_write`` / ``client_read`` loop — including intra-batch
+same-(client, resource) trains and pending-ring overflow.  These tests
+check it exhaustively on random streams without hypothesis (property
+tests over seeds), so they run everywhere.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import xstcc
+from repro.core.consistency import ConsistencyLevel
+
+
+def random_ops(seed, n_ops, n_clients, n_replicas, n_resources,
+               conflict_free=False):
+    """A random op stream; optionally without intra-batch same-(client,
+    resource) pairs (the conflict-free regime the tentpole documents)."""
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, n_clients, n_ops)
+    p = rng.integers(0, n_replicas, n_ops)
+    r = rng.integers(0, n_resources, n_ops)
+    k = rng.integers(0, 2, n_ops)
+    if conflict_free:
+        seen = set()
+        keep_c, keep_p, keep_r, keep_k = [], [], [], []
+        for i in range(n_ops):
+            if (c[i], r[i]) not in seen:
+                seen.add((c[i], r[i]))
+                keep_c.append(c[i]); keep_p.append(p[i])
+                keep_r.append(r[i]); keep_k.append(k[i])
+        c, p, r, k = map(np.asarray, (keep_c, keep_p, keep_r, keep_k))
+    return c, p, r, k
+
+
+def scalar_apply(state, c, p, r, k, enforce):
+    """Reference: the op stream through the scalar engine, one op at a
+    time.  Returns the final state and per-op outputs."""
+    vers, adm, stale, viol, vcs = [], [], [], [], []
+    for i in range(len(c)):
+        if k[i] == xstcc.WRITE:
+            out = xstcc.client_write(
+                state, client=int(c[i]), replica=int(p[i]),
+                resource=int(r[i]))
+            state = out.state
+            vers.append(int(out.version)); adm.append(True)
+            stale.append(False); viol.append(False)
+            vcs.append(np.asarray(out.vc))
+        else:
+            out = xstcc.client_read(
+                state, client=int(c[i]), replica=int(p[i]),
+                resource=int(r[i]), enforce_sessions=enforce)
+            state = out.state
+            vers.append(int(out.version)); adm.append(bool(out.admissible))
+            stale.append(bool(out.stale)); viol.append(bool(out.violation))
+            vcs.append(np.asarray(state.session_vc[int(c[i])]))
+    return state, vers, adm, stale, viol, vcs
+
+
+def assert_states_equal(a, b, context=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{context}: ClusterState.{f} diverged",
+        )
+
+
+@pytest.mark.parametrize("level", list(ConsistencyLevel))
+@pytest.mark.parametrize("seed", range(4))
+def test_apply_op_batch_matches_scalar_conflict_free(level, seed):
+    """The satellite contract: conflict-free batches are bit-identical
+    for every consistency level (enforcement per level)."""
+    enforce = level.is_session_guarded
+    c, p, r, k = random_ops(seed, 64, 6, 3, 4, conflict_free=True)
+    state0 = xstcc.make_cluster(3, 6, 4, pending_cap=64)
+    want_state, vers, adm, stale, viol, vcs = scalar_apply(
+        state0, c, p, r, k, enforce)
+    got = xstcc.apply_op_batch(
+        state0,
+        client=jnp.asarray(c, jnp.int32), replica=jnp.asarray(p, jnp.int32),
+        resource=jnp.asarray(r, jnp.int32), kind=jnp.asarray(k, jnp.int32),
+        enforce_sessions=enforce)
+    assert_states_equal(want_state, got.state, f"{level} seed={seed}")
+    np.testing.assert_array_equal(np.asarray(got.version), vers)
+    np.testing.assert_array_equal(np.asarray(got.admissible), adm)
+    np.testing.assert_array_equal(np.asarray(got.stale), stale)
+    np.testing.assert_array_equal(np.asarray(got.violation), viol)
+    np.testing.assert_array_equal(np.asarray(got.vc), np.stack(vcs))
+
+
+@pytest.mark.parametrize("enforce", [True, False])
+@pytest.mark.parametrize("seed", range(6))
+def test_apply_op_batch_matches_scalar_with_conflicts(enforce, seed):
+    """Stronger than the documented contract: equivalence holds even
+    with intra-batch same-(client, resource) trains and pending-ring
+    overflow (pending_cap=12 < expected writes)."""
+    c, p, r, k = random_ops(seed, 48, 4, 3, 3)
+    state0 = xstcc.make_cluster(3, 4, 3, pending_cap=12)
+    want_state, vers, *_ = scalar_apply(state0, c, p, r, k, enforce)
+    got = xstcc.apply_op_batch(
+        state0,
+        client=jnp.asarray(c, jnp.int32), replica=jnp.asarray(p, jnp.int32),
+        resource=jnp.asarray(r, jnp.int32), kind=jnp.asarray(k, jnp.int32),
+        enforce_sessions=enforce)
+    assert_states_equal(want_state, got.state, f"seed={seed}")
+    np.testing.assert_array_equal(np.asarray(got.version), vers)
+
+
+def test_write_and_read_batch_wrappers():
+    state0 = xstcc.make_cluster(3, 4, 2)
+    c = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    p = jnp.asarray([0, 1, 2, 1], jnp.int32)
+    r = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    w = xstcc.client_write_batch(state0, client=c, replica=p, resource=r)
+    assert np.asarray(w.version).tolist() == [1, 2, 1, 2]
+    rd = xstcc.client_read_batch(
+        w.state, client=c, replica=p, resource=r, enforce_sessions=True)
+    # RYW: every session reads at least its own write back.
+    assert (np.asarray(rd.version) >= np.asarray(w.version)).all()
+    assert not np.asarray(rd.violation).any()
+
+
+# ---------------------------------------------------------------------------
+# Pending-ring overflow (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_pending_ring_overflow_is_observable_scalar():
+    """When all Q slots are live the write still commits but the
+    propagation record is dropped and counted — no live slot is
+    clobbered (the old behaviour silently recycled slot 0)."""
+    state = xstcc.make_cluster(2, 2, 4, pending_cap=2)
+    for i in range(4):
+        state = xstcc.client_write(
+            state, client=0, replica=0, resource=i % 4).state
+    assert int(state.pend_dropped) == 2
+    # The two enqueued records are the FIRST two writes, untouched:
+    assert np.asarray(state.pend_version).tolist() == [1, 1]
+    assert np.asarray(state.pend_resource).tolist() == [0, 1]
+    assert np.asarray(state.pend_live).all()
+    # All four writes committed at the coordinator regardless:
+    assert np.asarray(state.global_version).tolist() == [1, 1, 1, 1]
+
+
+def test_pending_ring_overflow_is_observable_batched():
+    state0 = xstcc.make_cluster(2, 2, 4, pending_cap=2)
+    res = xstcc.client_write_batch(
+        state0,
+        client=jnp.zeros(4, jnp.int32),
+        replica=jnp.zeros(4, jnp.int32),
+        resource=jnp.arange(4, dtype=jnp.int32))
+    assert int(res.state.pend_dropped) == 2
+    assert np.asarray(res.dropped).tolist() == [False, False, True, True]
+    assert np.asarray(res.state.pend_resource).tolist() == [0, 1]
+    # Dropped writes are lost to propagation: a merge applies only the
+    # two enqueued ones at the remote replica.
+    merged, n = xstcc.server_merge(res.state, delta=0)
+    assert int(n) == 2
+    assert np.asarray(merged.replica_version)[1].tolist() == [1, 1, 0, 0]
+
+
+def test_pending_ring_drop_counter_saturates():
+    state = xstcc.make_cluster(2, 2, 1, pending_cap=1)
+    state = state._replace(
+        pend_dropped=jnp.asarray(np.iinfo(np.int32).max - 1, jnp.int32))
+    for _ in range(3):
+        state = xstcc.client_write(
+            state, client=0, replica=0, resource=0).state
+    assert int(state.pend_dropped) == np.iinfo(np.int32).max  # no wrap
+
+
+# ---------------------------------------------------------------------------
+# server_merge: vectorized fixpoint vs sequential reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_server_merge_fixpoint_matches_sequential(seed):
+    """On random schedules the fixpoint merge applies the same set as
+    the one-slot-at-a-time reference pass (modulo the carrier case,
+    which these small schedules do not produce — equality is exact)."""
+    rng = np.random.default_rng(seed)
+    st = xstcc.make_cluster(3, 4, 3, pending_cap=32)
+    for step in range(50):
+        op = rng.random()
+        if op < 0.45:
+            st = xstcc.client_write(
+                st, client=int(rng.integers(4)), replica=int(rng.integers(3)),
+                resource=int(rng.integers(3))).state
+        elif op < 0.8:
+            st = xstcc.client_read(
+                st, client=int(rng.integers(4)), replica=int(rng.integers(3)),
+                resource=int(rng.integers(3)),
+                enforce_sessions=bool(rng.integers(2))).state
+        else:
+            d = int(rng.integers(0, 30))
+            new_fix, n_fix = xstcc.server_merge(st, delta=d)
+            new_seq, n_seq = xstcc.server_merge_sequential(st, delta=d)
+            assert int(n_fix) == int(n_seq), (seed, step)
+            assert_states_equal(new_seq, new_fix, f"seed={seed} step={step}")
+            st = new_fix
+
+
+def test_server_merge_applies_causal_chain_in_one_merge():
+    """A same-session chain of writes across replicas is applied in one
+    merge via the dependency gate, without waiting for the timed bound."""
+    st = xstcc.make_cluster(3, 2, 2, pending_cap=8)
+    st = xstcc.client_write(st, client=0, replica=0, resource=0).state
+    st = xstcc.client_write(st, client=0, replica=1, resource=1).state
+    st, n = xstcc.server_merge(st, delta=1000)  # deps only, no overdue
+    assert int(n) == 2
+    rv = np.asarray(st.replica_version)
+    assert (rv == np.asarray(st.global_version)[None, :]).all()

@@ -1,0 +1,272 @@
+"""ReplicatedStore facade + session-floor kernel + batched simulator."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import xstcc
+from repro.core.consistency import ConsistencyLevel
+from repro.core.replicated_store import ReplicatedStore, merge_cadence
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+
+
+# ---------------------------------------------------------------------------
+# Facade basics
+# ---------------------------------------------------------------------------
+
+
+def test_merge_cadence_levels():
+    assert merge_cadence(ConsistencyLevel.ALL, 8, 24) == (1, 0)
+    assert merge_cadence(ConsistencyLevel.QUORUM, 8, 24) == (1, 0)
+    assert merge_cadence(ConsistencyLevel.ONE, 8, 24) == (16, 96)
+    assert merge_cadence(ConsistencyLevel.CAUSAL, 8, 24) == (8, 96)
+    assert merge_cadence(ConsistencyLevel.TCC, 8, 24) == (8, 8)
+    assert merge_cadence(ConsistencyLevel.X_STCC, 8, 24) == (8, 8)
+
+
+def test_store_write_read_merge_roundtrip():
+    store = ReplicatedStore(3, 4, 2, level=ConsistencyLevel.X_STCC)
+    st = store.init()
+    idx = jnp.arange(3, dtype=jnp.int32)
+    st, w = store.write_batch(
+        st, client=idx, replica=idx, resource=jnp.zeros(3, jnp.int32))
+    assert np.asarray(w.version).tolist() == [1, 2, 3]
+    st, n = store.merge(st, delta=0)
+    assert int(n) == 3
+    # After a full merge every replica serves the latest version.
+    st, r = store.read_batch(
+        st, client=idx, replica=jnp.mod(idx + 1, 3),
+        resource=jnp.zeros(3, jnp.int32))
+    assert not np.asarray(r.stale).any()
+    assert not np.asarray(r.violation).any()
+    # DUOT recorded all six ops.
+    assert int(st.duot.size) == 6
+
+
+def test_store_session_floor_and_install():
+    store = ReplicatedStore(2, 2, 1, level=ConsistencyLevel.X_STCC)
+    st = store.init()
+    st = store.install(st, replica=0, resource=0, version=7)
+    assert int(st.cluster.replica_version[0, 0]) == 7
+    assert int(st.cluster.global_version[0]) == 7
+    # A session that read v7 may not go below it.
+    st, r = store.read_batch(
+        st, client=jnp.asarray([0], jnp.int32),
+        replica=jnp.asarray([0], jnp.int32),
+        resource=jnp.asarray([0], jnp.int32))
+    assert int(r.version[0]) == 7
+    assert int(store.session_floor(st, 0, 0)) == 7
+    # At the stale replica, enforcement serves the floor (repair).
+    st, r2 = store.read_batch(
+        st, client=jnp.asarray([0], jnp.int32),
+        replica=jnp.asarray([1], jnp.int32),
+        resource=jnp.asarray([0], jnp.int32))
+    assert int(r2.version[0]) == 7
+    assert not bool(r2.violation[0])
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_store_admit_batch_matches_read_floor_semantics(use_kernel):
+    store = ReplicatedStore(2, 3, 1, level=ConsistencyLevel.X_STCC)
+    st = store.init()
+    st = store.install(st, replica=0, resource=0, version=5)
+    st = store.install(st, replica=1, resource=0, version=2)
+    # Session 0 observed v5; replica 1 (v2) is inadmissible for it.
+    st, _ = store.read_batch(
+        st, client=jnp.asarray([0], jnp.int32),
+        replica=jnp.asarray([0], jnp.int32),
+        resource=jnp.asarray([0], jnp.int32))
+    st2, served, adm = store.admit_batch(
+        st, client=jnp.asarray([0, 1], jnp.int32),
+        replica=jnp.asarray([1, 1], jnp.int32),
+        resource=jnp.zeros(2, jnp.int32), use_kernel=use_kernel)
+    assert np.asarray(adm).tolist() == [False, True]
+    # Enforcement lifts session 0's serve to its floor.
+    assert np.asarray(served).tolist() == [5, 2]
+    # Floor update: session 1's floor rose to 2.
+    assert int(store.session_floor(st2, 1, 0)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Pallas session-floor kernel vs reference oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("enforce", [True, False])
+@pytest.mark.parametrize("shape", [(2, 3, 4, 10), (4, 16, 8, 100),
+                                   (8, 64, 1, 256)])
+def test_session_admit_kernel_matches_ref(enforce, shape):
+    P, C, R, B = shape
+    rng = np.random.default_rng(hash(shape) % 2 ** 31)
+    rv = jnp.asarray(rng.integers(0, 40, (P, R)), jnp.int32)
+    rf = jnp.asarray(rng.integers(0, 40, (C, R)), jnp.int32)
+    wf = jnp.asarray(rng.integers(0, 40, (C, R)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, C, B), jnp.int32)
+    p = jnp.asarray(rng.integers(0, P, B), jnp.int32)
+    r = jnp.asarray(rng.integers(0, R, B), jnp.int32)
+    got = kernel_ops.session_admit(
+        rv, rf, wf, c, p, r, enforce=enforce, interpret=True)
+    want = kernel_ref.session_admit_ref(rv, rf, wf, c, p, r, enforce=enforce)
+    for g, w, name in zip(got, want, ("served", "adm", "floor", "new_rf")):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w), err_msg=name)
+
+
+def test_session_admit_kernel_block_sweep():
+    rng = np.random.default_rng(0)
+    P, C, R, B = 3, 8, 4, 96
+    rv = jnp.asarray(rng.integers(0, 30, (P, R)), jnp.int32)
+    rf = jnp.asarray(rng.integers(0, 30, (C, R)), jnp.int32)
+    wf = jnp.asarray(rng.integers(0, 30, (C, R)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, C, B), jnp.int32)
+    p = jnp.asarray(rng.integers(0, P, B), jnp.int32)
+    r = jnp.asarray(rng.integers(0, R, B), jnp.int32)
+    ref_out = kernel_ops.session_admit(rv, rf, wf, c, p, r, block=96,
+                                       interpret=True)
+    for block in (16, 32, 33, 128):
+        out = kernel_ops.session_admit(rv, rf, wf, c, p, r, block=block,
+                                       interpret=True)
+        for g, w in zip(out, ref_out):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# Batched simulator vs scalar simulator (metrics consistency)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "level",
+    [ConsistencyLevel.X_STCC, ConsistencyLevel.CAUSAL, ConsistencyLevel.ONE,
+     ConsistencyLevel.ALL],
+)
+def test_run_protocol_batched_tracks_scalar(level):
+    """The acceptance bar: staleness/violation within 10% relative of
+    the sequential engine (in practice they match exactly)."""
+    from repro.storage.simulator import run_protocol, run_protocol_scalar
+    from repro.storage.ycsb import WORKLOAD_A
+
+    b = run_protocol(level, WORKLOAD_A, n_ops=900, audit=False)
+    s = run_protocol_scalar(level, WORKLOAD_A, n_ops=900, audit=False)
+    assert b["n_reads"] == s["n_reads"]
+    assert b["dropped_writes"] == 0
+    for key in ("staleness_rate", "violation_rate"):
+        if s[key] == 0.0:
+            assert b[key] == 0.0, (level, key, b[key])
+        else:
+            assert abs(b[key] - s[key]) / s[key] <= 0.10, (level, key)
+
+
+def test_run_protocol_level_orderings():
+    """Figs 10-13 shape: X-STCC never violates sessions; ALL is never
+    stale; weak levels are."""
+    from repro.storage.simulator import run_protocol
+    from repro.storage.ycsb import WORKLOAD_A
+
+    out = {lv: run_protocol(lv, WORKLOAD_A, n_ops=900, audit=False)
+           for lv in (ConsistencyLevel.ONE, ConsistencyLevel.ALL,
+                      ConsistencyLevel.X_STCC)}
+    assert out[ConsistencyLevel.X_STCC]["violation_rate"] == 0.0
+    assert out[ConsistencyLevel.ALL]["staleness_rate"] == 0.0
+    assert out[ConsistencyLevel.ONE]["violation_rate"] > 0.0
+    assert (out[ConsistencyLevel.ONE]["staleness_rate"]
+            >= out[ConsistencyLevel.X_STCC]["staleness_rate"])
+
+
+# ---------------------------------------------------------------------------
+# Serving engine on the store
+# ---------------------------------------------------------------------------
+
+
+def _dummy_engine(level):
+    """ServingEngine without a real model (bookkeeping only)."""
+    from repro.serve.engine import ServingEngine
+
+    class _M:
+        def prefill(self, params, batch):
+            raise NotImplementedError
+
+        def decode_step(self, params, cache, tokens):
+            raise NotImplementedError
+
+    return ServingEngine(_M(), level, jit=False)
+
+
+def test_serving_route_batch_reroutes_inadmissible_sessions():
+    from repro.serve.engine import ServeSession
+
+    eng = _dummy_engine(ConsistencyLevel.X_STCC)
+    eng.publish(params=None, version=1)   # replica 0
+    eng.publish(params=None, version=3)   # replica 1
+    sessions = [ServeSession(i) for i in range(4)]
+    # Everyone observes the fresh replica first -> floors rise to 3.
+    eng.route_batch(sessions, preferred=jnp.asarray([1, 1, 1, 1]))
+    assert all(s.read_floor == 3 for s in sessions)
+    # Preferring the stale replica now reroutes every session.
+    replica, served = eng.route_batch(
+        sessions, preferred=jnp.asarray([0, 0, 0, 0]))
+    assert np.asarray(replica).tolist() == [1, 1, 1, 1]
+    assert np.asarray(served).tolist() == [3, 3, 3, 3]
+    assert eng.reroutes == 4
+
+
+def test_serving_route_batch_honours_external_floor():
+    """A session's externally-set read_floor gates batched routing the
+    same way it gates route(): inadmissible preferred replicas reroute,
+    and an unsatisfiable floor raises."""
+    from repro.serve.engine import ServeSession
+
+    eng = _dummy_engine(ConsistencyLevel.X_STCC)
+    eng.publish(params=None, version=1)   # replica 0
+    eng.publish(params=None, version=3)   # replica 1
+    s = ServeSession(0, read_floor=2)
+    replica, served = eng.route_batch([s], preferred=jnp.asarray([0]))
+    assert np.asarray(replica).tolist() == [1]
+    assert np.asarray(served).tolist() == [3]
+    with pytest.raises(RuntimeError):
+        eng.route_batch([ServeSession(1, read_floor=99)],
+                        preferred=jnp.asarray([0]))
+
+
+def test_serving_session_id_beyond_capacity_raises():
+    from repro.serve.engine import ServeSession
+
+    eng = _dummy_engine(ConsistencyLevel.X_STCC)
+    eng.publish(params=None, version=1)
+    with pytest.raises(RuntimeError):
+        eng.route(ServeSession(eng.max_sessions))
+
+
+def test_duot_record_capacity_straddle_keeps_fitting_entries():
+    """A bulk append straddling DUOT capacity keeps every entry that
+    fits (overflow rows must not clobber the last slot)."""
+    from repro.core import duot as duot_lib
+
+    t = duot_lib.make(4, 2)
+    ones = jnp.ones((3,), jnp.int32)
+    batch = {"client": ones * 0, "kind": ones, "resource": ones * 0,
+             "version": jnp.asarray([1, 2, 3], jnp.int32), "replica": ones * 0,
+             "vc": jnp.ones((3, 2), jnp.int32)}
+    t = duot_lib.record(t, batch)          # 3 entries
+    t = duot_lib.record(t, batch)          # straddles: only 1 slot left
+    assert int(t.size) == 4
+    assert np.asarray(t.valid).all()
+    # Slot 3 holds the first op of the second batch, intact.
+    assert int(t.version[3]) == 1
+    assert int(t.seq[3]) == 3
+    # next_seq advances past dropped ops (they happened, just unlogged).
+    assert int(t.next_seq) == 6
+
+
+def test_serving_weak_level_goes_stale_batched():
+    from repro.serve.engine import ServeSession
+
+    eng = _dummy_engine(ConsistencyLevel.ONE)
+    eng.publish(params=None, version=1)
+    eng.publish(params=None, version=3)
+    sessions = [ServeSession(i) for i in range(4)]
+    eng.route_batch(sessions, preferred=jnp.asarray([1, 1, 1, 1]))
+    eng.route_batch(sessions, preferred=jnp.asarray([0, 0, 0, 0]))
+    assert eng.staleness_rate() > 0
+    assert eng.reroutes == 0

@@ -6,6 +6,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, reduced
+from repro.launch.mesh import make_mesh
 from repro.models import sharding
 
 
@@ -14,8 +15,7 @@ def mesh44():
     if len(jax.devices()) < 1:
         pytest.skip("no devices")
     # A virtual 1x1 mesh still exercises rule resolution paths.
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_rules_without_mesh_are_noop():

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: property tests
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cost_model
