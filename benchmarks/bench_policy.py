@@ -1,0 +1,113 @@
+"""Adaptive consistency control plane: cost/staleness/violation frontier.
+
+Runs the adaptive controller against every static consistency level on
+phase-shifting YCSB mixes (read-mostly → write-heavy and back), under
+two SLAs, and reports the monetary frontier.  The acceptance bar, per
+(workload, SLA) cell:
+
+  * adaptive monetary cost ≤ cheapest *SLA-feasible* static level
+    within 5%;
+  * adaptive staleness/violation rates inside the SLA bounds.
+
+Rows (name, us_per_call, derived):
+  policy_adaptive_<W>_<SLA>        derived = adaptive cost $ / ratio to
+                                   cheapest feasible static
+  policy_static_<W>_<SLA>_<LEVEL>  derived = static cost $ (+ FEASIBLE
+                                   marker)
+  policy_sla_<W>_<SLA>             derived = staleness/violation vs
+                                   bounds + PASS/FAIL of the bar
+  policy_score_kernel              derived = scorer agreement
+                                   (kernel == jitted oracle)
+
+The pricing preset is selectable via ``REPRO_PRICING`` (paper | gcp |
+tpu) so the frontier is not a single-provider artifact.
+"""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit, time_call
+
+N_OPS = 6400
+COST_TOLERANCE = 1.05
+
+
+def run() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.cost_model import PRICING_PRESETS
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels import ref as kernel_ref
+    from repro.policy import SLA_RELAXED, SLA_STRICT, level_table, session_params
+    from repro.storage.simulator import run_protocol_adaptive
+    from repro.storage.ycsb import PHASED_RW, PHASED_RWR
+
+    pricing_name = os.environ.get("REPRO_PRICING", "paper")
+    pricing = PRICING_PRESETS[pricing_name]
+
+    failures = []
+    for w in (PHASED_RW, PHASED_RWR):
+        for sla in (SLA_RELAXED, SLA_STRICT):
+            us, out = time_call(
+                run_protocol_adaptive, w, sla, n_ops=N_OPS, pricing=pricing,
+            )
+            a = out["adaptive"]
+            cheapest = out["cheapest_feasible_static"]
+            tag = f"{w.name}_{sla.name}"
+            for lv, m in out["static"].items():
+                emit(
+                    f"policy_static_{tag}_{lv}", 0.0,
+                    f"${m['cost']:.3e}"
+                    + (" FEASIBLE" if m["feasible"] else ""),
+                )
+            if cheapest is None:
+                emit(f"policy_adaptive_{tag}", us, "no-feasible-static")
+                failures.append(f"{tag}: no SLA-feasible static level")
+                continue
+            ratio = a["cost"] / out["static"][cheapest]["cost"]
+            emit(
+                f"policy_adaptive_{tag}", us,
+                f"${a['cost']:.3e} ratio={ratio:.3f} vs {cheapest}",
+            )
+            sla_ok = (
+                a["staleness_rate"] <= sla.max_stale_read_rate
+                and a["violation_rate"] <= sla.max_violation_rate
+            )
+            bar_ok = sla_ok and ratio <= COST_TOLERANCE
+            emit(
+                f"policy_sla_{tag}", 0.0,
+                f"stale={a['staleness_rate']:.3f}/{sla.max_stale_read_rate}"
+                f" viol={a['violation_rate']:.3f}/{sla.max_violation_rate}"
+                f" {'PASS' if bar_ok else 'FAIL'}",
+            )
+            if not bar_ok:
+                failures.append(
+                    f"{tag}: ratio={ratio:.3f} sla_ok={sla_ok}"
+                )
+
+    # Scorer kernel vs jitted oracle (the bit-exactness bar lives in
+    # tests/test_policy.py; this row tracks it per run).
+    key = jax.random.PRNGKey(0)
+    s, l = 256, 6
+    tab = level_table(pricing=pricing)
+    sess = session_params(SLA_STRICT, s, read_frac=jax.random.uniform(key, (s,)))
+    stale = jax.random.uniform(jax.random.PRNGKey(1), (s, l))
+    viol = jax.random.uniform(jax.random.PRNGKey(2), (s, l)) * 0.2
+    count = (jax.random.uniform(jax.random.PRNGKey(3), (s, l)) > 0.3).astype(
+        jnp.float32
+    )
+    u_ref, f_ref = jax.jit(kernel_ref.policy_score_ref)(
+        sess, tab, stale, viol, count
+    )
+    us_k, (u_k, f_k) = time_call(
+        kernel_ops.policy_score, sess, tab, stale, viol, count, repeats=3,
+    )
+    exact = bool(jnp.all(u_ref == u_k)) and bool(jnp.all(f_ref == f_k))
+    emit("policy_score_kernel", us_k, f"bitexact={exact}")
+    if not exact:
+        failures.append("policy_score kernel disagrees with oracle")
+
+    if failures:
+        raise AssertionError("; ".join(failures))

@@ -29,12 +29,20 @@ def run(out_dir: str = "results/benchmarks") -> dict:
     os.makedirs(out_dir, exist_ok=True)
     results: dict = {"throughput": {}, "levels": {}}
 
+    # Pricing preset (paper Table 2 by default; REPRO_PRICING=gcp for
+    # the tiered-egress provider, so cost orderings are checked against
+    # more than one billing model).
+    from repro.core.cost_model import PRICING_PRESETS
+
+    pricing = PRICING_PRESETS[os.environ.get("REPRO_PRICING", "paper")]
+
     # --- Figs 8-9: throughput vs threads -------------------------------
     for w in (WORKLOAD_A, WORKLOAD_B):
         for t in THREADS:
             for lv in PAPER_LEVELS:
                 us, m = time_call(
-                    evaluate_level, lv, w, t, engine_ops=3000)
+                    evaluate_level, lv, w, t, engine_ops=3000,
+                    pricing=pricing)
                 key = f"{w.name}/{lv.value}/t{t}"
                 results["throughput"][key] = m.throughput_ops_s
                 if t == 64:

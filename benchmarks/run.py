@@ -4,6 +4,8 @@
               the 24-node 3-DC cluster simulation.
   protocol  — batched vs scalar X-STCC engine throughput (ops/s) and
               metric agreement at the evaluation's n_ops=6000.
+  policy    — adaptive consistency control plane vs every static level
+              on phase-shifting workloads (cost/SLA frontier).
   sync_cost — the technique applied to multi-pod training (traffic +
               violations + bill per consistency level).
   kernels   — Pallas kernel agreement + oracle timing.
@@ -21,6 +23,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
         bench_kernels,
+        bench_policy,
         bench_protocol,
         bench_roofline,
         bench_storage,
@@ -31,6 +34,7 @@ def main() -> None:
     for name, mod in [
         ("storage", bench_storage),
         ("protocol", bench_protocol),
+        ("policy", bench_policy),
         ("sync_cost", bench_sync_cost),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),

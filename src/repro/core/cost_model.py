@@ -28,21 +28,83 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class PricingScheme:
-    """Paper Table 2 (defaults) — all prices in USD."""
+    """Paper Table 2 (defaults) — all prices in USD.
+
+    ``inter_dc_tiers`` optionally replaces the flat inter-DC price with
+    volume tiers (GCP-style egress pricing): a sequence of
+    ``(up_to_gb, price_per_gb)`` pairs, consumed in order.  Volume
+    beyond the last threshold is billed at the last tier's price, so a
+    finite-terminated tier list behaves as if it ended with
+    ``(float("inf"), last_price)``.  When empty, ``inter_dc_per_gb``
+    applies flat.
+    """
 
     compute_unit_per_hour: float = 0.0464       # VM instance $/hour
     storage_gb_month: float = 0.10              # leased volume $/GB-month
     storage_per_million_requests: float = 0.10  # I/O $/1e6 requests
     intra_dc_per_gb: float = 0.00               # free inside a DC / pod
     inter_dc_per_gb: float = 0.01               # billed across DCs / pods
+    inter_dc_tiers: tuple[tuple[float, float], ...] = ()
+
+    def inter_dc_cost(self, gb: float) -> float:
+        """Inter-DC transfer cost, tiered when tiers are configured."""
+        if not self.inter_dc_tiers:
+            return gb * self.inter_dc_per_gb
+        cost, prev = 0.0, 0.0
+        for up_to, price in self.inter_dc_tiers:
+            take = max(0.0, min(gb, up_to) - prev)
+            cost += take * price
+            prev = up_to
+            if gb <= up_to:
+                break
+        else:
+            # Volume past the last threshold bills at the last tier's
+            # price — never silently free.
+            cost += (gb - prev) * self.inter_dc_tiers[-1][1]
+        return cost
+
+    def marginal_inter_dc_per_gb(self, gb: float = 0.0) -> float:
+        """$/GB of the tier the volume ``gb`` falls in (flat otherwise).
+
+        Used by per-op cost vectors (``repro.policy.sla``) that need a
+        scalar marginal price rather than the piecewise integral.
+        """
+        if not self.inter_dc_tiers:
+            return self.inter_dc_per_gb
+        for up_to, price in self.inter_dc_tiers:
+            if gb < up_to:
+                return price
+        return self.inter_dc_tiers[-1][1]
 
 
 PAPER_PRICING = PricingScheme()
+
+# GCP-style preset: the classic network-egress tiering (0-1 TB at
+# $0.12/GB, 1-10 TB at $0.11, beyond at $0.08) applied to the inter-DC
+# hop, e2-small-equivalent instances, PD-balanced storage, and Cloud
+# Storage class-A-like request pricing.  The point of carrying a second
+# provider is that cost *orderings* across consistency levels should not
+# be a single-provider artifact — benchmarks select it via
+# ``PRICING_PRESETS`` / the ``REPRO_PRICING`` env var.
+GCP_PRICING = PricingScheme(
+    compute_unit_per_hour=0.0335,
+    storage_gb_month=0.10,
+    storage_per_million_requests=0.40,
+    intra_dc_per_gb=0.00,
+    inter_dc_per_gb=0.08,
+    inter_dc_tiers=((1024.0, 0.12), (10240.0, 0.11), (float("inf"), 0.08)),
+)
 
 # TPU-application pricing: v5e on-demand equivalent.  Only the instance
 # price differs; relative orderings across consistency levels are
 # insensitive to it (network/storage terms dominate the *differences*).
 TPU_PRICING = PricingScheme(compute_unit_per_hour=1.20)
+
+PRICING_PRESETS: dict[str, PricingScheme] = {
+    "paper": PAPER_PRICING,
+    "gcp": GCP_PRICING,
+    "tpu": TPU_PRICING,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,9 +152,9 @@ def cost_network(
     intra_dc_gb: float,
     pricing: PricingScheme,
 ) -> float:
-    """Eq. (.8): inter- + intra-DC transfer."""
+    """Eq. (.8): inter- + intra-DC transfer (inter tiered when configured)."""
     return (
-        inter_dc_gb * pricing.inter_dc_per_gb
+        pricing.inter_dc_cost(inter_dc_gb)
         + intra_dc_gb * pricing.intra_dc_per_gb
     )
 

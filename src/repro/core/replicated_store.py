@@ -220,8 +220,13 @@ class ReplicatedStore:
         apply_index: Array | None = None,
         extra_visible: Array | None = None,
         record: bool = True,
+        enforce: Array | bool | None = None,
     ) -> tuple[StoreState, xstcc.BatchResult]:
         """Ingest a mixed read/write batch and register it in the DUOT.
+
+        ``enforce`` overrides the level's session enforcement, per batch
+        or per op (a ``(B,)`` bool array) — the adaptive control plane
+        serves sessions at different levels out of one store.
 
         With ``op_step0`` (the global op index of the batch's first op)
         the level's merge cadence is emulated *inside* the batch, so the
@@ -267,7 +272,9 @@ class ReplicatedStore:
             extra_visible = jnp.ones((b, b), bool)
         res = xstcc.apply_op_batch(
             state.cluster, client=c, replica=p, resource=r, kind=k,
-            enforce_sessions=self.enforce_sessions,
+            enforce_sessions=(
+                self.enforce_sessions if enforce is None else enforce
+            ),
             extra_visible=extra_visible, pend_visible=pend_visible,
         )
         pend_apply = state.pend_apply
@@ -316,11 +323,13 @@ class ReplicatedStore:
         replica: Array,
         resource: Array,
         record: bool = True,
+        enforce: Array | bool | None = None,
     ) -> tuple[StoreState, xstcc.BatchResult]:
         c = jnp.asarray(client, jnp.int32)
         return self.apply_batch(
             state, client=c, replica=replica, resource=resource,
             kind=jnp.full(c.shape, xstcc.READ, jnp.int32), record=record,
+            enforce=enforce,
         )
 
     # -- server side ------------------------------------------------------------

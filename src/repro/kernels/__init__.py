@@ -4,6 +4,8 @@
   vclock_audit    — DUOT pairwise causality audit (paper §3.3).
   session_floor   — batched X-STCC session-floor admission check (the
                     serving-path per-op hot loop).
+  policy_score    — (sessions × levels) SLA feasibility/utility scorer
+                    for the adaptive consistency control plane.
 """
 
 from repro.kernels import ops, ref

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import policy_score as _ps
 from repro.kernels import session_floor as _sf
 from repro.kernels import vclock_audit as _va
 
@@ -124,6 +125,39 @@ def session_admit(
         out[:b, _sf.FLOOR],
         new_rf,
     )
+
+
+def policy_score(
+    sess: jax.Array,    # (S, SP_COLS) f32 — repro.policy.sla.session_params
+    table: jax.Array,   # (LVL_COLS, L) f32 — repro.policy.sla.level_table
+    stale: jax.Array,   # (S, L) f32
+    viol: jax.Array,    # (S, L) f32
+    count: jax.Array,   # (S, L) f32
+    *,
+    block_s: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched SLA feasibility/utility scoring via the Pallas kernel.
+
+    Same contract as ``repro.kernels.ref.policy_score_ref`` (bit-exact):
+    returns ``(utility, feasible)``.  The session axis is padded to a
+    block multiple with invalid rows, which score utility 0/feasible 0
+    and are stripped before returning.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    s = stale.shape[0]
+    block_s = max(1, min(block_s, s))
+    pad = (-s) % block_s
+    if pad:
+        sess = jnp.pad(sess, ((0, pad), (0, 0)))  # SP_VALID pads to 0
+        stale = jnp.pad(stale, ((0, pad), (0, 0)))
+        viol = jnp.pad(viol, ((0, pad), (0, 0)))
+        count = jnp.pad(count, ((0, pad), (0, 0)))
+    util, feas = _ps.policy_score(
+        sess, table, stale, viol, count,
+        block_s=block_s, interpret=interpret,
+    )
+    return util[:s], feas[:s]
 
 
 def audit_summary(codes: jax.Array) -> dict[str, jax.Array]:

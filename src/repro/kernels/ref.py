@@ -87,6 +87,100 @@ def session_admit_ref(
     return served, admissible, jnp.where(ok, floor, 0), new_rf
 
 
+# Policy-scorer constants (shared with the Pallas kernel, re-exported
+# by repro.policy.sla): utility penalty weight on the SLA-excess term —
+# far above any per-op dollar cost, so argmax(utility) prefers any
+# feasible level over every infeasible one — and the weight of the
+# structural (latency / data-age) bounds, which are violated on *every*
+# request and so outweigh relative rate overshoots.
+INFEASIBLE_PENALTY = 1.0e6
+STRUCTURAL_WEIGHT = 10.0
+
+# Packed-array layouts of the policy scorer.  Defined HERE (with the
+# scoring semantics) and imported by repro.policy.sla (the packers) and
+# kernels.policy_score (the Pallas kernel), so layout and use can never
+# drift apart.  Session-parameter columns of the (S, SP_COLS) array:
+SP_READ_FRAC, SP_MAX_STALE, SP_MAX_VIOL, SP_MAX_LAT, SP_MAX_AGE, SP_VALID = (
+    0, 1, 2, 3, 4, 5,
+)
+SP_COLS = 8
+# Level-table rows of the (LVL_COLS, L) array:
+LVL_READ_COST, LVL_WRITE_COST, LVL_REPAIR_COST, LVL_READ_LAT, LVL_STALE_AGE = (
+    0, 1, 2, 3, 4,
+)
+LVL_COLS = 8
+
+
+def policy_score_ref(
+    sess: Array,   # (S, SP_COLS) f32 — packed session params (policy.sla)
+    table: Array,  # (LVL_COLS, L) f32 — packed analytic level table
+    stale: Array,  # (S, L) f32 — windowed stale-read rate
+    viol: Array,   # (S, L) f32 — windowed violation rate
+    count: Array,  # (S, L) f32 — telemetry samples (0 = unobserved)
+) -> tuple[Array, Array]:
+    """Reference (sessions × levels) SLA feasibility / utility scorer.
+
+    Column/row layouts are defined in ``repro.policy.sla`` (SP_* and
+    LVL_* indices).  Per cell:
+
+      * telemetry with no samples is treated optimistically (rate 0 —
+        the level is presumed feasible until observed otherwise, which
+        makes a greedy controller explore cheapest-first);
+      * ``cost = rf*(read_cost + stale*repair) + (1-rf)*write_cost`` —
+        the analytic $/op, with observed staleness feeding the repair
+        term;
+      * the SLA *excess* grades how badly the four bounds (stale rate,
+        violation rate, read latency, data age) are broken — relative
+        overshoot for the measured rates, 0/1 for the structural
+        latency/age bounds; feasibility is excess == 0;
+      * ``utility = -cost - PENALTY*excess`` so argmax picks the
+        cheapest feasible level, and when *nothing* is feasible (e.g. a
+        write storm under a strict SLA) degrades to the least-violating
+        level rather than the cheapest-and-worst one.
+
+    Invalid session rows (``SP_VALID == 0``) score utility 0, feasible 0.
+    The Pallas kernel (``repro.kernels.policy_score``) must reproduce
+    this bit-exactly under jit — same op order, same dtypes.
+    """
+    sess = jnp.asarray(sess, jnp.float32)
+    table = jnp.asarray(table, jnp.float32)
+    stale = jnp.asarray(stale, jnp.float32)
+    viol = jnp.asarray(viol, jnp.float32)
+    count = jnp.asarray(count, jnp.float32)
+
+    col = lambda i: sess[:, i:i + 1]          # noqa: E731
+    rf = col(SP_READ_FRAC)
+    max_stale = col(SP_MAX_STALE)
+    max_viol = col(SP_MAX_VIOL)
+    max_lat = col(SP_MAX_LAT)
+    max_age = col(SP_MAX_AGE)
+    valid = col(SP_VALID) > 0.0
+
+    read_cost = table[LVL_READ_COST][None, :]
+    write_cost = table[LVL_WRITE_COST][None, :]
+    repair = table[LVL_REPAIR_COST][None, :]
+    lat = table[LVL_READ_LAT][None, :]
+    age = table[LVL_STALE_AGE][None, :]
+
+    has = count > 0.0
+    s_e = jnp.where(has, stale, 0.0)
+    v_e = jnp.where(has, viol, 0.0)
+    cost = rf * (read_cost + s_e * repair) + (1.0 - rf) * write_cost
+    eps = jnp.float32(1.0e-6)
+    structural = jnp.float32(STRUCTURAL_WEIGHT)
+    excess = (
+        jnp.maximum(s_e - max_stale, 0.0) / jnp.maximum(max_stale, eps)
+        + jnp.maximum(v_e - max_viol, 0.0) / jnp.maximum(max_viol, eps)
+        + structural * (lat > max_lat).astype(jnp.float32)
+        + structural * (age > max_age).astype(jnp.float32)
+    )
+    feas = (excess == 0.0) & valid
+    utility = jnp.where(
+        valid, -cost - jnp.float32(INFEASIBLE_PENALTY) * excess, 0.0
+    )
+    return utility, feas.astype(jnp.int32)
+
+
 def vclock_audit_ref(
     vc: Array,        # (M, N) int32 vector clocks
     client: Array,    # (M,) int32

@@ -1,0 +1,35 @@
+"""Adaptive consistency control plane.
+
+SLA-driven per-session consistency-level selection over the replicated
+fleet: declarative SLAs and the vectorized feasibility/utility scorer
+(:mod:`repro.policy.sla`), and the ε-greedy sliding-window controller
+(:mod:`repro.policy.controller`).  The batched scoring hot loop has a
+Pallas kernel in ``repro.kernels.policy_score``; the data-plane
+integrations live in ``repro.storage.simulator.run_protocol_adaptive``
+and ``repro.serve.engine``.
+"""
+
+from repro.policy.controller import AdaptiveController, ControllerState
+from repro.policy.sla import (
+    POLICY_LEVELS,
+    SLA,
+    SLA_RELAXED,
+    SLA_STRICT,
+    epoch_cost,
+    level_table,
+    score_levels,
+    session_params,
+)
+
+__all__ = [
+    "SLA",
+    "SLA_RELAXED",
+    "SLA_STRICT",
+    "POLICY_LEVELS",
+    "AdaptiveController",
+    "ControllerState",
+    "epoch_cost",
+    "level_table",
+    "score_levels",
+    "session_params",
+]

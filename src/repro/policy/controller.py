@@ -1,0 +1,271 @@
+"""Adaptive per-session consistency controller (ε-greedy bandit).
+
+The control loop, once per merge epoch:
+
+  1. :meth:`AdaptiveController.select` scores every (session, level)
+     cell — sliding-window telemetry through the SLA scorer
+     (``repro.policy.sla.score_levels`` / the Pallas kernel) — and picks
+     each session's level: greedy argmax-utility with an ε-decayed
+     uniform exploration arm;
+  2. the data plane runs the epoch's ops at the selected levels
+     (``repro.storage.simulator.run_protocol_adaptive`` or the serving
+     router);
+  3. :meth:`AdaptiveController.observe` folds the epoch's measured
+     per-session staleness/violation counts into the telemetry window —
+     only the cells actually *played* (bandit feedback).
+
+All controller state is a :class:`ControllerState` pytree of fixed-shape
+arrays (the telemetry ring buffer and two scalars), so whole traces jit:
+``jax.lax.scan`` over epochs with (select → gather → observe) inside the
+scanned step compiles to one program (see ``tests/test_policy.py``).
+
+Exploration economics: the analytic cost side of the utility is *known*
+(``level_table``), so the controller never explores to learn prices —
+optimistic scoring of unobserved cells makes greedy selection probe
+levels cheapest-first, and the window forgetting (old epochs age out of
+the ring) re-probes cheap levels after a workload phase shift.  ε keeps
+a trickle of undirected exploration as a safety net against telemetry
+aliasing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.consistency import ConsistencyLevel
+from repro.core.cost_model import PAPER_PRICING, PricingScheme
+from repro.policy import sla as sla_lib
+from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
+
+Array = jax.Array
+
+
+class ControllerState(NamedTuple):
+    """Telemetry ring buffer + bookkeeping — a pure-array pytree.
+
+    The window holds per-epoch *counts* (not rates): rates are formed at
+    scoring time as windowed-sum ratios, so epochs with more traffic
+    weigh more, and empty cells are distinguishable (count 0).
+    """
+
+    stale_win: Array   # (W, S, L) f32 — stale reads observed
+    viol_win: Array    # (W, S, L) f32 — violations observed
+    reads_win: Array   # (W, S, L) f32 — reads observed
+    ptr: Array         # () int32 — next ring slot
+    epoch: Array       # () int32 — epochs observed so far
+
+
+class AdaptiveController:
+    """ε-greedy per-session level selection against a declarative SLA.
+
+    Static configuration (fleet size, candidate levels, the analytic
+    level table, ε schedule) lives on the object; dynamic state is the
+    :class:`ControllerState` pytree threaded through every method, so
+    methods are jit/scan-safe.
+    """
+
+    def __init__(
+        self,
+        n_sessions: int,
+        sla: sla_lib.SLA,
+        *,
+        levels: tuple[ConsistencyLevel, ...] = sla_lib.POLICY_LEVELS,
+        window: int = 8,
+        eps0: float = 0.05,
+        eps_decay: float = 0.9,
+        margin: float = 0.8,
+        cfg: ClusterConfig = PAPER_CLUSTER,
+        pricing: PricingScheme = PAPER_PRICING,
+        merge_every: int = 8,
+        delta: int = 24,
+        use_kernel: bool = False,
+    ):
+        self.n_sessions = n_sessions
+        self.sla = sla
+        # The controller *targets* the SLA with a safety margin on the
+        # measured-rate bounds: exploration probes of weak levels (and
+        # telemetry noise at per-session sample sizes) erode the
+        # realized rates, and the margin keeps them inside the actual
+        # SLA.  Reported/acceptance feasibility always uses the raw SLA.
+        self.target_sla = dataclasses.replace(
+            sla,
+            max_stale_read_rate=sla.max_stale_read_rate * margin,
+            max_violation_rate=sla.max_violation_rate * margin,
+        )
+        self.levels = tuple(levels)
+        self.n_levels = len(self.levels)
+        self.window = window
+        self.eps0 = eps0
+        self.eps_decay = eps_decay
+        self.use_kernel = use_kernel
+        self.table = sla_lib.level_table(
+            self.levels, cfg, pricing, merge_every=merge_every, delta=delta,
+        )
+
+    # -- state ----------------------------------------------------------------
+
+    def init(self) -> ControllerState:
+        shape = (self.window, self.n_sessions, self.n_levels)
+        return ControllerState(
+            stale_win=jnp.zeros(shape, jnp.float32),
+            viol_win=jnp.zeros(shape, jnp.float32),
+            reads_win=jnp.zeros(shape, jnp.float32),
+            ptr=jnp.int32(0),
+            epoch=jnp.int32(0),
+        )
+
+    # -- telemetry ------------------------------------------------------------
+
+    def observe(
+        self,
+        state: ControllerState,
+        *,
+        level_idx: Array,   # (S,) int32 — the level each session played
+        stale: Array,       # (S,) f32 — stale reads this epoch
+        viol: Array,        # (S,) f32 — violations this epoch
+        reads: Array,       # (S,) f32 — reads this epoch
+    ) -> ControllerState:
+        """Fold one epoch of per-session telemetry into the ring.
+
+        Only the played (session, level) cells receive samples — bandit
+        feedback; every other cell of the ring slot is zeroed, which is
+        how old evidence for a level ages out after ``window`` epochs of
+        not playing it.
+        """
+        onehot = jax.nn.one_hot(
+            jnp.asarray(level_idx, jnp.int32), self.n_levels,
+            dtype=jnp.float32,
+        )
+        slot = state.ptr % self.window
+        return ControllerState(
+            stale_win=state.stale_win.at[slot].set(
+                onehot * jnp.asarray(stale, jnp.float32)[:, None]
+            ),
+            viol_win=state.viol_win.at[slot].set(
+                onehot * jnp.asarray(viol, jnp.float32)[:, None]
+            ),
+            reads_win=state.reads_win.at[slot].set(
+                onehot * jnp.asarray(reads, jnp.float32)[:, None]
+            ),
+            ptr=state.ptr + 1,
+            epoch=state.epoch + 1,
+        )
+
+    def aggregate(self, state: ControllerState) -> tuple[Array, Array, Array]:
+        """Windowed (stale_rate, viol_rate, sample_count), each (S, L)."""
+        reads = jnp.sum(state.reads_win, axis=0)
+        denom = jnp.maximum(reads, 1.0)
+        stale = jnp.sum(state.stale_win, axis=0) / denom
+        viol = jnp.sum(state.viol_win, axis=0) / denom
+        return stale, viol, reads
+
+    # -- selection ------------------------------------------------------------
+
+    def epsilon(self, state: ControllerState) -> Array:
+        return jnp.float32(self.eps0) * jnp.float32(self.eps_decay) ** (
+            state.epoch.astype(jnp.float32)
+        )
+
+    def scores(
+        self, state: ControllerState, *, read_frac: Array | float = 0.5,
+    ) -> tuple[Array, Array]:
+        """(utility, feasible) of every (session, level) cell, (S, L)."""
+        stale, viol, count = self.aggregate(state)
+        sess = sla_lib.session_params(
+            self.target_sla, self.n_sessions, read_frac=read_frac
+        )
+        return sla_lib.score_levels(
+            sess, self.table, stale, viol, count, use_kernel=self.use_kernel,
+        )
+
+    def select(
+        self,
+        state: ControllerState,
+        key: Array,
+        *,
+        read_frac: Array | float = 0.5,
+    ) -> Array:
+        """Each session's level index for the next epoch, (S,) int32."""
+        utility, _ = self.scores(state, read_frac=read_frac)
+        greedy = jnp.argmax(utility, axis=1).astype(jnp.int32)
+        k_explore, k_arm = jax.random.split(key)
+        explore = (
+            jax.random.uniform(k_explore, (self.n_sessions,))
+            < self.epsilon(state)
+        )
+        arm = jax.random.randint(
+            k_arm, (self.n_sessions,), 0, self.n_levels, jnp.int32
+        )
+        return jnp.where(explore, arm, greedy)
+
+    # -- convenience ----------------------------------------------------------
+
+    def level_of(self, idx: int) -> ConsistencyLevel:
+        return self.levels[idx]
+
+    def run_scan(
+        self,
+        key: Array,
+        telemetry: dict[str, Array],
+    ) -> tuple[ControllerState, dict[str, Array]]:
+        """Scan the full control loop over precomputed per-level telemetry.
+
+        ``telemetry`` holds (E, S, L) arrays ``stale``/``viol`` and
+        (E, S) arrays ``reads``/``writes`` (read/write counts don't
+        depend on the level — same op stream).  Each scanned step
+        selects levels from the current window, *plays* them by
+        gathering the chosen cells from the epoch's telemetry, and
+        observes the result — the exact loop the online system runs,
+        compiled as one ``lax.scan``.  Selection sees only what an
+        online controller could know: the telemetry window plus the
+        *previous* epoch's read/write mix (epoch 0 assumes 50/50), so
+        level switches lag workload phase shifts by one epoch.  Returns
+        the final state and the per-epoch trace (chosen levels +
+        realized counts).
+        """
+        e = telemetry["stale"].shape[0]
+        reads_e = telemetry["reads"].astype(jnp.float32)
+        writes_e = telemetry["writes"].astype(jnp.float32)
+        ops_e = reads_e + writes_e
+        read_frac_e = reads_e / jnp.maximum(ops_e, 1.0)
+        # Causal: epoch t is selected on epoch t-1's observed mix.
+        read_frac_e = jnp.concatenate(
+            [jnp.full((1,) + read_frac_e.shape[1:], 0.5), read_frac_e[:-1]]
+        )
+
+        def step(carry, inp):
+            state, key = carry
+            key, sub = jax.random.split(key)
+            choice = self.select(state, sub, read_frac=inp["read_frac"])
+            rows = jnp.arange(self.n_sessions)
+            stale = inp["stale"][rows, choice]
+            viol = inp["viol"][rows, choice]
+            state = self.observe(
+                state, level_idx=choice, stale=stale, viol=viol,
+                reads=inp["reads"],
+            )
+            cost = sla_lib.epoch_cost(
+                self.table, choice,
+                reads=inp["reads"], writes=inp["writes"], stale=stale,
+            )
+            return (state, key), {
+                "choice": choice, "stale": stale, "viol": viol, "cost": cost,
+            }
+
+        (state, _), trace = jax.lax.scan(
+            step,
+            (self.init(), key),
+            {
+                "stale": telemetry["stale"].astype(jnp.float32),
+                "viol": telemetry["viol"].astype(jnp.float32),
+                "reads": reads_e,
+                "writes": writes_e,
+                "read_frac": read_frac_e,
+            },
+            length=e,
+        )
+        return state, trace

@@ -1,0 +1,276 @@
+"""Declarative SLAs + the vectorized per-level feasibility/utility scorer.
+
+The adaptive control plane chooses, per session, a consistency level
+from {ONE, QUORUM, ALL, CAUSAL, TCC, X-STCC} that minimizes the
+monetary cost of eq. 5-8 (``repro.core.cost_model``) subject to a
+declarative :class:`SLA`:
+
+  * ``max_stale_read_rate``   — fraction of reads allowed to be stale
+    (measured online by the protocol engine);
+  * ``max_violation_rate``    — session-guarantee violations per read;
+  * ``max_read_latency_ms``   — p99 read latency, from the level's read
+    fan-out over :meth:`repro.storage.cluster.ClusterConfig.ack_latency_ms`
+    / ``read_latency_ms`` (a *static* per-level property of the topology);
+  * ``max_staleness_ms``      — age bound on served data, from the
+    level's timed bound Δ (0 for synchronous levels, ∞ for untimed
+    causal propagation).
+
+The scorer is deliberately split along what is *known* vs *learned*:
+monetary cost per op is analytic (traffic × pricing, per level), so the
+controller never wastes exploration learning it; staleness/violation
+rates are workload-dependent and arrive as sliding-window telemetry.
+Cells with no telemetry yet are scored optimistically (feasible at the
+analytic cost), which is what drives exploration cheapest-level-first.
+
+Everything is packed into dense arrays so one call scores a whole
+(sessions × levels) fleet; semantics live in
+``repro.kernels.ref.policy_score_ref`` and the Pallas kernel
+``repro.kernels.policy_score`` must match it bit-exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.consistency import ConsistencyLevel
+from repro.core.cost_model import PAPER_PRICING, PricingScheme
+from repro.core.replicated_store import merge_cadence
+from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
+
+Array = jax.Array
+
+# The level set the control plane selects over, in ascending nominal
+# cost order (ties broken by the analytic cost vectors at runtime).
+POLICY_LEVELS: tuple[ConsistencyLevel, ...] = (
+    ConsistencyLevel.ONE,
+    ConsistencyLevel.CAUSAL,
+    ConsistencyLevel.TCC,
+    ConsistencyLevel.X_STCC,
+    ConsistencyLevel.QUORUM,
+    ConsistencyLevel.ALL,
+)
+
+# Packed-array layouts and scoring constants live with the oracle
+# (repro.kernels.ref) so the packers here, the reference scorer, and
+# the Pallas kernel share one definition; re-exported as the
+# policy-facing names.  The penalty ranks any feasible level above
+# every infeasible one (least-violating first, cost as the tiebreak);
+# the structural weight makes latency/age violations — which hit every
+# request — outweigh relative rate overshoots.
+from repro.kernels.ref import (  # noqa: F401
+    INFEASIBLE_PENALTY,
+    LVL_COLS,
+    LVL_READ_COST,
+    LVL_READ_LAT,
+    LVL_REPAIR_COST,
+    LVL_STALE_AGE,
+    LVL_WRITE_COST,
+    SP_COLS,
+    SP_MAX_AGE,
+    SP_MAX_LAT,
+    SP_MAX_STALE,
+    SP_MAX_VIOL,
+    SP_READ_FRAC,
+    SP_VALID,
+    STRUCTURAL_WEIGHT,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLA:
+    """Per-session service-level agreement (all bounds inclusive)."""
+
+    name: str = "default"
+    max_stale_read_rate: float = 1.0
+    max_violation_rate: float = 1.0
+    max_read_latency_ms: float = math.inf
+    max_staleness_ms: float = math.inf
+
+
+# Canonical SLAs for benchmarks/examples.  STRICT keeps only the timed
+# causal levels in play (and nothing at all during write storms, where
+# the graded excess falls back to the least-violating level); RELAXED is
+# bound by session-guarantee violations — weak-but-cheap levels are
+# feasible during read-mostly phases and infeasible once the write mix
+# returns, the regime change the adaptive controller exists to exploit.
+SLA_STRICT = SLA(
+    "strict", max_stale_read_rate=0.20, max_violation_rate=0.02,
+    max_read_latency_ms=10.0, max_staleness_ms=50.0,
+)
+SLA_RELAXED = SLA(
+    "relaxed", max_stale_read_rate=0.55, max_violation_rate=0.06,
+    max_read_latency_ms=10.0,
+)
+
+
+def session_params(
+    sla: SLA,
+    n_sessions: int,
+    *,
+    read_frac: Array | float = 0.5,
+    valid: Array | None = None,
+) -> Array:
+    """Pack one SLA (shared by the fleet) into the (S, SP_COLS) array.
+
+    ``read_frac`` may be per-session (the session's recent op mix) —
+    it feeds the read/write blend of the analytic cost.
+    """
+    sp = jnp.zeros((n_sessions, SP_COLS), jnp.float32)
+    sp = sp.at[:, SP_READ_FRAC].set(jnp.asarray(read_frac, jnp.float32))
+    sp = sp.at[:, SP_MAX_STALE].set(sla.max_stale_read_rate)
+    sp = sp.at[:, SP_MAX_VIOL].set(sla.max_violation_rate)
+    sp = sp.at[:, SP_MAX_LAT].set(sla.max_read_latency_ms)
+    sp = sp.at[:, SP_MAX_AGE].set(sla.max_staleness_ms)
+    ok = jnp.ones((n_sessions,), jnp.float32) if valid is None else (
+        jnp.asarray(valid, jnp.float32)
+    )
+    return sp.at[:, SP_VALID].set(ok)
+
+
+def _instance_cost_per_work(cfg: ClusterConfig, pricing: PricingScheme) -> float:
+    """$ per unit of server work (one op's service cost on one node)."""
+    return pricing.compute_unit_per_hour / 3600.0 / cfg.node_service_rate_ops_s
+
+
+def level_table(
+    levels: tuple[ConsistencyLevel, ...] = POLICY_LEVELS,
+    cfg: ClusterConfig = PAPER_CLUSTER,
+    pricing: PricingScheme = PAPER_PRICING,
+    *,
+    merge_every: int = 8,
+    delta: int = 24,
+    ms_per_op: float | None = None,
+) -> Array:
+    """Analytic per-level table, packed as (LVL_COLS, L) float32.
+
+    Row semantics:
+
+      * ``LVL_READ_COST``  — $ per read: I/O requests for the consulted
+        replicas + inter-DC fan-out beyond the local DC + service work;
+      * ``LVL_WRITE_COST`` — $ per write: eventual propagation to the 8
+        remote replicas (+ vector-clock piggyback for causal levels) +
+        per-ack I/O + coordination work (``WRITE_COORD``);
+      * ``LVL_REPAIR_COST``— $ per *stale* read: read-repair traffic and
+        work (``REPAIR_COST``) — this couples observed staleness into
+        cost, so a weak level under churn prices itself out;
+      * ``LVL_READ_LAT``   — read latency (ms) from the topology;
+      * ``LVL_STALE_AGE``  — the level's data-age bound (ms): 0 for
+        synchronous levels, Δ ops × ``ms_per_op`` for timed levels, ∞
+        for untimed causal propagation.
+
+    Traffic constants mirror ``repro.storage.simulator.traffic_gb``.
+    Inter-DC bytes are priced at the *marginal rate at zero volume* —
+    for tiered schemes (``GCP_PRICING``) that is the first (most
+    expensive) tier, a conservative per-op price; the full-run bill in
+    ``evaluate_level``/``cost_network`` integrates the tiers instead,
+    so the two can differ once a run's volume crosses a tier boundary.
+    Within one pricing scheme all levels use the same rate, so the
+    *orderings* the controller acts on are unaffected.
+    """
+    # Deferred: storage.simulator lazily imports repro.policy (adaptive
+    # mode), so the model constants must be pulled at call time.
+    from repro.storage.simulator import REPAIR_COST, REPAIR_REMOTE, WRITE_COORD
+
+    if ms_per_op is None:
+        ms_per_op = 1e3 / cfg.node_service_rate_ops_s
+    inter_gb = pricing.marginal_inter_dc_per_gb()
+    intra_gb = pricing.intra_dc_per_gb
+    io = pricing.storage_per_million_requests / 1e6
+    inst = _instance_cost_per_work(cfg, pricing)
+    row = cfg.row_bytes
+
+    tab = jnp.zeros((LVL_COLS, len(levels)), jnp.float32)
+    for j, lv in enumerate(levels):
+        acks = lv.write_acks(cfg.replication_factor)
+        consulted = lv.read_replicas(cfg.replication_factor)
+        remote_reads = max(0, consulted - cfg.replicas_per_dc)
+        local_reads = min(consulted, cfg.replicas_per_dc)
+
+        w_inter = 8 * row + (8 * 64 if lv.is_causal else 0)
+        w_intra = 3 * row + (3 * 64 if lv.is_causal else 0)
+        write_cost = (
+            w_inter / 1e9 * inter_gb
+            + w_intra / 1e9 * intra_gb
+            + acks * io
+            + (1.0 + WRITE_COORD[lv]) * inst
+        )
+        read_cost = (
+            remote_reads * row / 1e9 * inter_gb
+            + local_reads * row / 1e9 * intra_gb
+            + consulted * io
+            + 1.0 * inst
+        )
+        repair_cost = (
+            REPAIR_REMOTE[lv] * row / 1e9 * inter_gb
+            + REPAIR_COST[lv] * inst
+        )
+
+        sync_every, d = merge_cadence(lv, merge_every, delta)
+        if sync_every == 1:
+            stale_age = 0.0
+        elif lv.is_timed:
+            stale_age = d * ms_per_op
+        else:
+            stale_age = math.inf
+
+        tab = tab.at[LVL_READ_COST, j].set(read_cost)
+        tab = tab.at[LVL_WRITE_COST, j].set(write_cost)
+        tab = tab.at[LVL_REPAIR_COST, j].set(repair_cost)
+        tab = tab.at[LVL_READ_LAT, j].set(cfg.read_latency_ms(consulted))
+        tab = tab.at[LVL_STALE_AGE, j].set(stale_age)
+    return tab
+
+
+def epoch_cost(
+    table: Array,
+    level_idx: Array,
+    *,
+    reads: Array,
+    writes: Array,
+    stale: Array,
+) -> Array:
+    """Realized $ of one epoch per session, given each session's level.
+
+    ``level_idx``/``reads``/``writes``/``stale`` are (S,) arrays (counts
+    from the telemetry aggregator); the same formula prices static runs
+    and the adaptive trace, so frontier comparisons are apples-to-apples.
+    """
+    li = jnp.asarray(level_idx, jnp.int32)
+    return (
+        jnp.asarray(reads, jnp.float32) * table[LVL_READ_COST, li]
+        + jnp.asarray(stale, jnp.float32) * table[LVL_REPAIR_COST, li]
+        + jnp.asarray(writes, jnp.float32) * table[LVL_WRITE_COST, li]
+    )
+
+
+def score_levels(
+    sess: Array,    # (S, SP_COLS) f32 — session_params()
+    table: Array,   # (LVL_COLS, L) f32 — level_table()
+    stale: Array,   # (S, L) f32 — windowed stale-read rate
+    viol: Array,    # (S, L) f32 — windowed violation rate
+    count: Array,   # (S, L) f32 — telemetry sample count (0 = unobserved)
+    *,
+    use_kernel: bool = False,
+    interpret: bool | None = None,
+) -> tuple[Array, Array]:
+    """(utility, feasible) over the (sessions × levels) fleet.
+
+    ``argmax(utility, axis=1)`` is the controller's greedy arm: the
+    cheapest SLA-feasible level (unobserved cells optimistic), falling
+    back to the *least-violating* level when nothing is feasible.  With
+    ``use_kernel`` the batched scoring runs through the Pallas kernel
+    (``repro.kernels.policy_score``); otherwise the jnp oracle.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.policy_score(
+            sess, table, stale, viol, count, interpret=interpret
+        )
+    from repro.kernels import ref as kernel_ref
+
+    return kernel_ref.policy_score_ref(sess, table, stale, viol, count)

@@ -15,6 +15,14 @@ are server-side ``install``\\ s, serves are batched session reads, and the
 batched router (:meth:`ServingEngine.route_batch`) runs the admission
 check through the Pallas session-floor kernel at serving scale.
 
+Consistency is **per session**, not per engine: the engine-level
+``level`` is only the default, and :meth:`ServingEngine.set_session_level`
+(or an attached :class:`repro.policy.AdaptiveController`, via
+:meth:`~ServingEngine.attach_controller` / :meth:`~ServingEngine.adapt_sessions`)
+moves individual sessions between consistency levels while they share
+the one replicated store — the serving half of the adaptive consistency
+control plane.
+
 The compute path (prefill/decode) is the model substrate; this module
 owns the jit'd step functions and the routing/bookkeeping.
 """
@@ -26,6 +34,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.consistency import ConsistencyLevel
 from repro.core.replicated_store import ReplicatedStore
@@ -63,6 +72,16 @@ class ServingEngine:
         self.stale_serves = 0
         self.total_serves = 0
         self.reroutes = 0
+        # Per-session overrides of the engine default, plus per-session
+        # serve telemetry (stale/violation/serve counts since the last
+        # controller consultation) feeding `adapt_sessions`.
+        self.session_levels: dict[int, ConsistencyLevel] = {}
+        self._sess_stale = np.zeros(max_sessions, np.int64)
+        self._sess_viol = np.zeros(max_sessions, np.int64)
+        self._sess_serves = np.zeros(max_sessions, np.int64)
+        self._controller = None
+        self._ctl_state = None
+        self._ctl_key = None
         self._store = ReplicatedStore(
             max_replicas, max_sessions, 1, level=level,
             pending_cap=max_sessions,
@@ -114,6 +133,81 @@ class ServingEngine:
     def latest_version(self) -> int:
         return max((r.version for r in self.replicas), default=0)
 
+    # -- per-session consistency ---------------------------------------------------
+
+    def level_for(self, session_id: int) -> ConsistencyLevel:
+        """The session's effective consistency level (default: engine's)."""
+        return self.session_levels.get(session_id, self.level)
+
+    def set_session_level(self, session_id: int, level: ConsistencyLevel):
+        """Move one session to a different consistency level online."""
+        if session_id >= self.max_sessions:
+            raise RuntimeError(
+                f"session_id {session_id} >= max_sessions {self.max_sessions}"
+            )
+        self.session_levels[session_id] = level
+
+    def attach_controller(self, controller, key: Array | None = None):
+        """Hand per-session level selection to an adaptive controller.
+
+        ``controller`` is a :class:`repro.policy.AdaptiveController`
+        sized to this engine's ``max_sessions``; call
+        :meth:`adapt_sessions` once per serving epoch to fold the
+        accumulated telemetry and re-select levels.
+        """
+        if controller.n_sessions != self.max_sessions:
+            raise ValueError(
+                f"controller sized for {controller.n_sessions} sessions, "
+                f"engine has {self.max_sessions}"
+            )
+        if self.level not in controller.levels:
+            raise ValueError(
+                f"engine default level {self.level} not among controller "
+                f"levels {controller.levels}"
+            )
+        self._controller = controller
+        self._ctl_state = controller.init()
+        self._ctl_key = jax.random.PRNGKey(0) if key is None else key
+
+    def adapt_sessions(self) -> dict[int, ConsistencyLevel]:
+        """One control-plane epoch: observe serve telemetry, re-select.
+
+        Serving is a read-only workload, so ``read_frac`` is 1 and the
+        violation telemetry comes from unguarded sessions observing
+        reads below their floor.  Returns the new assignment.
+        """
+        if self._controller is None:
+            raise RuntimeError("no controller attached")
+        ctl = self._controller
+        idx_list = []
+        for s in range(self.max_sessions):
+            lv = self.level_for(s)
+            if lv not in ctl.levels:
+                raise RuntimeError(
+                    f"session {s} is at level {lv.value}, which is not "
+                    f"among the controller's levels "
+                    f"{[l.value for l in ctl.levels]}; use "
+                    "set_session_level with a controller level (or a "
+                    "controller whose level set covers it)"
+                )
+            idx_list.append(ctl.levels.index(lv))
+        idx = jnp.asarray(idx_list, jnp.int32)
+        self._ctl_state = ctl.observe(
+            self._ctl_state,
+            level_idx=idx,
+            stale=jnp.asarray(self._sess_stale, jnp.float32),
+            viol=jnp.asarray(self._sess_viol, jnp.float32),
+            reads=jnp.asarray(self._sess_serves, jnp.float32),
+        )
+        self._ctl_key, sub = jax.random.split(self._ctl_key)
+        choice = np.asarray(ctl.select(self._ctl_state, sub, read_frac=1.0))
+        self._sess_stale[:] = 0
+        self._sess_viol[:] = 0
+        self._sess_serves[:] = 0
+        for sid in range(self.max_sessions):
+            self.session_levels[sid] = ctl.levels[int(choice[sid])]
+        return dict(self.session_levels)
+
     # -- routing ------------------------------------------------------------------
 
     def session_floor(self, session: ServeSession) -> int:
@@ -122,12 +216,12 @@ class ServingEngine:
         return max(floor, session.read_floor)
 
     def route(self, session: ServeSession, preferred: int | None = None) -> int:
-        """Pick a replica for this session per the consistency level."""
+        """Pick a replica for this session per *its* consistency level."""
         n = len(self.replicas)
         if n == 0:
             raise RuntimeError("no replicas published")
         idx = (session.session_id if preferred is None else preferred) % n
-        if self.level.is_session_guarded:
+        if self.level_for(session.session_id).is_session_guarded:
             floor = self.session_floor(session)
             if self.replicas[idx].version < floor:
                 # Reroute to the freshest admissible replica (MR/RYW).
@@ -146,8 +240,10 @@ class ServingEngine:
 
         Routes every session to its preferred replica, runs the batched
         session-floor admission check (the Pallas kernel when
-        ``use_kernel``), reroutes inadmissible sessions to the freshest
-        replica, and registers the serves in the store.  Returns
+        ``use_kernel``), reroutes inadmissible *session-guarded*
+        sessions to the freshest replica (unguarded sessions take the
+        stale serve, which is counted as their violation telemetry), and
+        registers the serves in the store.  Returns
         ``(replica_indices, served_versions)``.
         """
         n = len(self.replicas)
@@ -159,7 +255,12 @@ class ServingEngine:
                 [s.session_id % n for s in sessions], jnp.int32
             )
         preferred = jnp.asarray(preferred, jnp.int32) % n
-        if self.level.is_session_guarded:
+        guarded = jnp.asarray(
+            [self.level_for(s.session_id).is_session_guarded
+             for s in sessions],
+            bool,
+        )
+        if bool(jnp.any(guarded)):
             # Admission against the store-tracked floors (the Pallas
             # kernel path); the returned state is discarded on purpose —
             # floors are only committed by the observe step below, after
@@ -177,27 +278,42 @@ class ServingEngine:
                 [r.version for r in self.replicas], jnp.int32
             )
             adm = jnp.logical_and(adm, versions[preferred] >= ext)
+            adm = jnp.logical_or(adm, ~guarded)
             best = _freshest_replica(self.replicas)
             floor = jnp.maximum(
                 self._store.session_floor(self._st, sid, 0), ext
             )
-            if bool(jnp.any(~adm & (versions[best] < floor))):
+            if bool(jnp.any(guarded & ~adm & (versions[best] < floor))):
                 raise RuntimeError("no admissible replica for session")
             replica = jnp.where(adm, preferred, best)
             self.reroutes += int(jnp.sum(~adm))
         else:
             replica = preferred
-        served = self._observe_batch(sessions, replica)
+        served = self._observe_batch(sessions, replica, guarded)
         return replica, served
 
-    def _observe_batch(self, sessions: list[ServeSession], replica: Array):
+    def _observe_batch(
+        self, sessions: list[ServeSession], replica: Array,
+        guarded: Array | None = None,
+    ):
         sid = jnp.asarray([self._sid(s) for s in sessions], jnp.int32)
+        if guarded is None:
+            guarded = jnp.asarray(
+                [self.level_for(s.session_id).is_session_guarded
+                 for s in sessions],
+                bool,
+            )
         self._st, res = self._store.read_batch(
             self._st, client=sid, replica=jnp.asarray(replica, jnp.int32),
             resource=jnp.zeros(sid.shape, jnp.int32), record=False,
+            enforce=guarded,
         )
         self.total_serves += len(sessions)
         self.stale_serves += int(jnp.sum(res.stale))
+        sid_np = np.asarray(sid)
+        np.add.at(self._sess_stale, sid_np, np.asarray(res.stale))
+        np.add.at(self._sess_viol, sid_np, np.asarray(res.violation))
+        np.add.at(self._sess_serves, sid_np, 1)
         for s, v in zip(sessions, list(res.version)):
             s.read_floor = max(s.read_floor, int(v))
         return res.version
@@ -207,13 +323,18 @@ class ServingEngine:
         self.total_serves += 1
         if v < self.latest_version:
             self.stale_serves += 1
-        self._st, _ = self._store.read_batch(
+        self._st, res = self._store.read_batch(
             self._st,
             client=jnp.asarray([self._sid(session)], jnp.int32),
             replica=jnp.asarray([replica], jnp.int32),
             resource=jnp.zeros((1,), jnp.int32),
             record=False,
+            enforce=self.level_for(session.session_id).is_session_guarded,
         )
+        sid = self._sid(session)
+        self._sess_stale[sid] += int(res.stale[0])
+        self._sess_viol[sid] += int(res.violation[0])
+        self._sess_serves[sid] += 1
         session.read_floor = max(session.read_floor, v)
 
     # -- compute ---------------------------------------------------------------

@@ -37,7 +37,7 @@ from repro.core import audit as audit_lib
 from repro.core.consistency import ConsistencyLevel
 from repro.core.replicated_store import ReplicatedStore, merge_cadence
 from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
-from repro.storage.ycsb import Workload, generate
+from repro.storage.ycsb import PhasedWorkload, Workload, generate, generate_phased
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +68,15 @@ WRITE_COORD = {
     ConsistencyLevel.QUORUM: 0.42,
     ConsistencyLevel.ALL: 0.62,
     ConsistencyLevel.TWO: 0.2,
+}
+# Remote (inter-DC) repair traffic per stale read, in row payloads: ONE
+# repairs across DCs, causal levels order deliveries (partial), X-STCC
+# fixes up locally via the DUOT, quorum/all already paid synchronously.
+REPAIR_REMOTE = {
+    ConsistencyLevel.ONE: 1.0, ConsistencyLevel.TWO: 1.0,
+    ConsistencyLevel.CAUSAL: 0.5, ConsistencyLevel.TCC: 0.25,
+    ConsistencyLevel.X_STCC: 0.0, ConsistencyLevel.QUORUM: 0.0,
+    ConsistencyLevel.ALL: 0.0,
 }
 
 
@@ -133,16 +142,16 @@ def throughput_model(
 # ---------------------------------------------------------------------------
 
 
-def _op_stream(
-    w: Workload, n_ops: int, n_clients: int, n_resources: int, seed: int
+def _attach_clients(
+    ops: dict[str, np.ndarray], n_ops: int, n_clients: int,
+    n_resources: int, seed: int,
 ) -> dict[str, np.ndarray]:
-    """The YCSB op stream shared by the batched and scalar engines.
+    """Attach the client/mobility model to a generated op stream.
 
     Replicas = the 3 DCs; a client's home replica is its DC; reads go to
     the *nearest* replica (home DC).  Client mobility (paper Fig. 2: Bob
     reconnects to another server): 30% of ops hit a different DC than
     the session's home."""
-    ops = generate(w, n_ops=n_ops, n_keys=n_resources, seed=seed)
     rng = np.random.default_rng(seed + 1)
     client = rng.integers(0, n_clients, n_ops).astype(np.int32)
     move = rng.random(n_ops) < 0.30
@@ -154,6 +163,14 @@ def _op_stream(
         "resource": (ops["key"] % n_resources).astype(np.int32),
         "home": home,
     }
+
+
+def _op_stream(
+    w: Workload, n_ops: int, n_clients: int, n_resources: int, seed: int
+) -> dict[str, np.ndarray]:
+    """The YCSB op stream shared by the batched and scalar engines."""
+    ops = generate(w, n_ops=n_ops, n_keys=n_resources, seed=seed)
+    return _attach_clients(ops, n_ops, n_clients, n_resources, seed)
 
 
 _OP_COLS = ("client", "kind", "resource", "home")
@@ -410,6 +427,263 @@ def _scalar_runner(
 
 
 # ---------------------------------------------------------------------------
+# Adaptive mode: per-session level selection over merge epochs
+# ---------------------------------------------------------------------------
+
+
+def _op_stream_phased(
+    pw: PhasedWorkload, n_ops: int, n_clients: int, n_resources: int,
+    seed: int,
+) -> dict[str, np.ndarray]:
+    """Phase-shifting variant of :func:`_op_stream` (same client model)."""
+    ops = generate_phased(pw, n_ops=n_ops, n_keys=n_resources, seed=seed)
+    return _attach_clients(ops, n_ops, n_clients, n_resources, seed)
+
+
+@functools.lru_cache(maxsize=None)
+def _telemetry_runner(
+    level: ConsistencyLevel,
+    n_clients: int,
+    n_resources: int,
+    merge_every: int,
+    delta: int,
+    sub: int,
+    emulate: bool,
+) -> tuple[ReplicatedStore, Any]:
+    """(store, jitted engine) emitting per-client counts per sub-batch.
+
+    Same engine/cadence scheme as :func:`_batched_runner`, but each scan
+    step also segment-sums its stale/violation/read/write flags by
+    client — the per-session telemetry the adaptive control plane feeds
+    on.  The DUOT is skipped (``record=False``): adaptive runs report
+    measured rates and cost, not audit severity.
+    """
+    store = ReplicatedStore(
+        3, n_clients, n_resources, level=level, merge_every=merge_every,
+        delta=delta, pending_cap=max(128, 2 * sub), duot_cap=64,
+    )
+
+    @jax.jit
+    def run(batched):
+        def step(st, ops):
+            st, res = store.apply_batch(
+                st, client=ops["client"], replica=ops["home"],
+                resource=ops["resource"], kind=ops["kind"],
+                op_step0=ops["step0"] if emulate else None,
+                apply_index=ops.get("apply_idx"),
+                record=False,
+            )
+            st, _ = store.merge(st)
+            is_read = ops["kind"] == duot_lib.READ
+            c = ops["client"]
+            z = jnp.zeros((n_clients,), jnp.int32)
+            ys = (
+                z.at[c].add(res.stale.astype(jnp.int32)),
+                z.at[c].add(res.violation.astype(jnp.int32)),
+                z.at[c].add(is_read.astype(jnp.int32)),
+                z.at[c].add(jnp.logical_not(is_read).astype(jnp.int32)),
+            )
+            return st, ys
+
+        _, ys = jax.lax.scan(step, store.init(), batched)
+        return ys
+
+    return store, run
+
+
+def level_session_telemetry(
+    level: ConsistencyLevel,
+    stream: dict[str, np.ndarray],
+    *,
+    n_clients: int,
+    n_resources: int,
+    epoch_size: int,
+    merge_every: int = 8,
+    delta: int = 24,
+) -> dict[str, np.ndarray]:
+    """Per-(epoch, session) protocol telemetry of one level on a stream.
+
+    Runs the whole stream through the level's engine (the stream is
+    level-independent, so this is the exact counterfactual of "every
+    session at this level") and returns (E, S) count arrays: ``stale``,
+    ``viol``, ``reads``, ``writes``.  ``len(stream)`` must be a multiple
+    of ``epoch_size``, and ``epoch_size`` a multiple of the level's
+    merge cadence (so epochs align with real merge boundaries).
+    """
+    n_ops = len(stream["client"])
+    sync_every, _ = merge_cadence(level, merge_every, delta)
+    emulate = sync_every == 1 or level.is_timed
+    sub = epoch_size if emulate else sync_every
+    if n_ops % epoch_size or epoch_size % sub:
+        raise ValueError(
+            f"n_ops={n_ops} must tile into epochs of {epoch_size}, and "
+            f"epochs into merge sub-batches of {sub}"
+        )
+    n_sub = n_ops // sub
+
+    store, run = _telemetry_runner(
+        level, n_clients, n_resources, merge_every, delta, sub, emulate,
+    )
+    batched = {
+        k: jnp.asarray(stream[k].reshape(n_sub, sub)) for k in _OP_COLS
+    }
+    batched["step0"] = jnp.arange(n_sub, dtype=jnp.int32) * sub
+    if emulate and store.sync_every > 1:
+        apply_idx = store.schedule_stream(
+            stream["client"], stream["home"], stream["kind"]
+        )
+        batched["apply_idx"] = apply_idx.reshape(n_sub, sub)
+    stale, viol, reads, writes = run(batched)
+
+    per_epoch = sub and epoch_size // sub
+    n_epochs = n_ops // epoch_size
+
+    def fold(y):
+        return np.asarray(y).reshape(n_epochs, per_epoch, n_clients).sum(1)
+
+    return {
+        "stale": fold(stale), "viol": fold(viol),
+        "reads": fold(reads), "writes": fold(writes),
+    }
+
+
+def run_protocol_adaptive(
+    w: Workload | PhasedWorkload,
+    sla,
+    *,
+    n_ops: int = 6400,
+    n_clients: int = 16,
+    n_resources: int = 24,
+    epoch_size: int | None = None,
+    levels: tuple[ConsistencyLevel, ...] | None = None,
+    merge_every: int = 8,
+    delta: int = 24,
+    seed: int = 0,
+    window: int = 8,
+    eps0: float = 0.02,
+    eps_decay: float = 0.9,
+    margin: float = 0.8,
+    cfg: ClusterConfig = PAPER_CLUSTER,
+    pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
+    use_kernel: bool = False,
+) -> dict[str, Any]:
+    """Adaptive mode: re-consult the controller every merge epoch.
+
+    The op stream is cut into merge epochs (``epoch_size`` ops, each a
+    whole number of the engine's merge cadences).  Every epoch the
+    :class:`repro.policy.AdaptiveController` selects each session's
+    consistency level from its SLA-scored telemetry window; the epoch's
+    ops then run at the selected levels and the measured per-session
+    staleness/violations feed back into the window.
+
+    Because the op *stream* is level-independent, per-level telemetry is
+    exact and precomputable: each candidate level's engine ingests the
+    full stream once (:func:`level_session_telemetry`), and the control
+    loop — selection, play, feedback — runs as one ``lax.scan`` over
+    epochs (:meth:`repro.policy.AdaptiveController.run_scan`).  The
+    returned frontier compares the adaptive trace against every static
+    level *priced on the same telemetry*, so the acceptance check
+    (adaptive cost ≤ cheapest SLA-feasible static, SLA never exceeded)
+    is apples-to-apples.
+    """
+    from repro.policy import sla as sla_lib
+    from repro.policy.controller import AdaptiveController
+
+    if levels is None:
+        levels = sla_lib.POLICY_LEVELS
+    if epoch_size is None:
+        # ~32 controller consultations, aligned to the slowest cadence
+        # (ONE merges every 2*merge_every ops).
+        align = 2 * merge_every
+        epoch_size = max(align, (n_ops // 32) // align * align)
+    n_ops = (n_ops // epoch_size) * epoch_size
+
+    if isinstance(w, PhasedWorkload):
+        stream = _op_stream_phased(w, n_ops, n_clients, n_resources, seed)
+    else:
+        stream = _op_stream(w, n_ops, n_clients, n_resources, seed)
+
+    per_level = [
+        level_session_telemetry(
+            lv, stream, n_clients=n_clients, n_resources=n_resources,
+            epoch_size=epoch_size, merge_every=merge_every, delta=delta,
+        )
+        for lv in levels
+    ]
+    telemetry = {
+        "stale": np.stack([t["stale"] for t in per_level], axis=-1),
+        "viol": np.stack([t["viol"] for t in per_level], axis=-1),
+        # Read/write counts are stream properties, identical across levels.
+        "reads": per_level[0]["reads"],
+        "writes": per_level[0]["writes"],
+    }
+
+    controller = AdaptiveController(
+        n_clients, sla, levels=levels, window=window, eps0=eps0,
+        eps_decay=eps_decay, margin=margin, cfg=cfg, pricing=pricing,
+        merge_every=merge_every, delta=delta, use_kernel=use_kernel,
+    )
+    _, trace = controller.run_scan(
+        jax.random.PRNGKey(seed), jax.tree.map(jnp.asarray, telemetry)
+    )
+
+    reads_total = float(telemetry["reads"].sum())
+    writes_total = float(telemetry["writes"].sum())
+    table = controller.table
+
+    def level_static(j: int, lv: ConsistencyLevel) -> dict[str, Any]:
+        stale = float(telemetry["stale"][..., j].sum())
+        viol = float(telemetry["viol"][..., j].sum())
+        cost = (
+            reads_total * float(table[sla_lib.LVL_READ_COST, j])
+            + stale * float(table[sla_lib.LVL_REPAIR_COST, j])
+            + writes_total * float(table[sla_lib.LVL_WRITE_COST, j])
+        )
+        stale_rate = stale / max(1.0, reads_total)
+        viol_rate = viol / max(1.0, reads_total)
+        feasible = (
+            stale_rate <= sla.max_stale_read_rate
+            and viol_rate <= sla.max_violation_rate
+            and float(table[sla_lib.LVL_READ_LAT, j]) <= sla.max_read_latency_ms
+            and float(table[sla_lib.LVL_STALE_AGE, j]) <= sla.max_staleness_ms
+        )
+        return {
+            "cost": cost, "staleness_rate": stale_rate,
+            "violation_rate": viol_rate, "feasible": feasible,
+        }
+
+    static = {lv.value: level_static(j, lv) for j, lv in enumerate(levels)}
+    feasible_costs = {
+        k: v["cost"] for k, v in static.items() if v["feasible"]
+    }
+    cheapest = min(feasible_costs, key=feasible_costs.get) if feasible_costs \
+        else None
+
+    adaptive_stale = float(jnp.sum(trace["stale"]))
+    adaptive_viol = float(jnp.sum(trace["viol"]))
+    choice = np.asarray(trace["choice"])                     # (E, S)
+    level_share = {
+        lv.value: float((choice == j).mean())
+        for j, lv in enumerate(levels)
+    }
+    return {
+        "workload": w.name,
+        "sla": sla.name,
+        "n_ops": n_ops,
+        "epoch_size": epoch_size,
+        "adaptive": {
+            "cost": float(jnp.sum(trace["cost"])),
+            "staleness_rate": adaptive_stale / max(1.0, reads_total),
+            "violation_rate": adaptive_viol / max(1.0, reads_total),
+            "level_share": level_share,
+        },
+        "static": static,
+        "cheapest_feasible_static": cheapest,
+        "choice": choice,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Full per-level evaluation
 # ---------------------------------------------------------------------------
 
@@ -435,13 +709,7 @@ def traffic_gb(
     inter += reads * remote_reads * row
     intra += reads * min(consulted, cfg.replicas_per_dc) * row
     # Repair traffic for stale reads:
-    repair_remote = {
-        ConsistencyLevel.ONE: 1.0, ConsistencyLevel.TWO: 1.0,
-        ConsistencyLevel.CAUSAL: 0.5, ConsistencyLevel.TCC: 0.25,
-        ConsistencyLevel.X_STCC: 0.0, ConsistencyLevel.QUORUM: 0.0,
-        ConsistencyLevel.ALL: 0.0,
-    }[level]
-    inter += reads * stale_rate * repair_remote * row
+    inter += reads * stale_rate * REPAIR_REMOTE[level] * row
     # X-STCC piggybacks vector clocks + DUOT entries on propagation:
     if level.is_causal:
         inter += writes * 8 * 64          # 16 clients x int32 clock
@@ -457,6 +725,7 @@ def evaluate_level(
     *,
     engine_ops: int = 6000,
     seed: int = 0,
+    pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
 ) -> LevelMetrics:
     proto = run_protocol(level, w, n_ops=engine_ops, seed=seed)
     stale = proto["staleness_rate"]
@@ -472,7 +741,7 @@ def evaluate_level(
             cfg.replication_factor),
         inter_dc_gb=inter_gb,
         intra_dc_gb=intra_gb,
-        pricing=cost_model.PAPER_PRICING,
+        pricing=pricing,
     )
     return LevelMetrics(
         level=level.value,

@@ -1,0 +1,74 @@
+"""Topology invariants of ``repro.storage.cluster`` (paper §4, Fig. 7)."""
+
+import numpy as np
+import pytest
+
+from repro.core.consistency import ConsistencyLevel
+from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
+
+
+def test_paper_cluster_shape():
+    cfg = PAPER_CLUSTER
+    assert cfg.n_nodes == 24
+    assert cfg.n_datacenters * cfg.nodes_per_dc == cfg.n_nodes
+    assert cfg.replicas_per_dc * cfg.n_datacenters == cfg.replication_factor
+    assert cfg.replication_factor <= cfg.n_nodes
+
+
+def test_replica_dcs_placement():
+    cfg = PAPER_CLUSTER
+    dcs = cfg.replica_dcs()
+    assert dcs.shape == (cfg.replication_factor,)
+    # NetworkTopologyStrategy: exactly replicas_per_dc replicas per DC.
+    counts = np.bincount(dcs, minlength=cfg.n_datacenters)
+    assert np.all(counts == cfg.replicas_per_dc)
+    assert dcs.min() == 0 and dcs.max() == cfg.n_datacenters - 1
+
+
+def test_replica_dcs_custom_topology():
+    cfg = ClusterConfig(n_datacenters=5, replicas_per_dc=2,
+                        replication_factor=10)
+    dcs = cfg.replica_dcs()
+    assert len(dcs) == 10
+    assert np.all(np.bincount(dcs, minlength=5) == 2)
+
+
+def test_ack_latency_monotone_in_acks():
+    cfg = PAPER_CLUSTER
+    lats = [cfg.ack_latency_ms(a) for a in range(1, cfg.replication_factor + 1)]
+    assert all(b >= a for a, b in zip(lats, lats[1:]))
+    # Local quorum is intra-DC; anything beyond crosses DCs.
+    assert lats[0] == cfg.intra_dc_rtt_ms
+    assert cfg.ack_latency_ms(cfg.replicas_per_dc) == cfg.intra_dc_rtt_ms
+    assert cfg.ack_latency_ms(cfg.replicas_per_dc + 1) == cfg.inter_dc_rtt_ms
+    assert cfg.ack_latency_ms(cfg.replication_factor) == cfg.inter_dc_rtt_ms
+
+
+def test_read_latency_monotone_in_consulted():
+    cfg = PAPER_CLUSTER
+    lats = [cfg.read_latency_ms(c) for c in range(1, cfg.replication_factor + 1)]
+    assert all(b >= a for a, b in zip(lats, lats[1:]))
+    assert lats[0] == cfg.intra_dc_rtt_ms
+    assert lats[-1] == cfg.inter_dc_rtt_ms
+
+
+@pytest.mark.parametrize("level", list(ConsistencyLevel))
+def test_level_fanout_within_topology(level):
+    cfg = PAPER_CLUSTER
+    rf = cfg.replication_factor
+    acks = level.write_acks(rf)
+    consulted = level.read_replicas(rf)
+    assert 1 <= acks <= rf
+    assert 1 <= consulted <= rf
+    # Latency for any legal fan-out is one of the two topology RTTs.
+    assert cfg.ack_latency_ms(acks) in (
+        cfg.intra_dc_rtt_ms, cfg.inter_dc_rtt_ms
+    )
+    assert cfg.read_latency_ms(consulted) in (
+        cfg.intra_dc_rtt_ms, cfg.inter_dc_rtt_ms
+    )
+
+
+def test_inter_dc_slower_than_intra():
+    cfg = PAPER_CLUSTER
+    assert cfg.inter_dc_rtt_ms > cfg.intra_dc_rtt_ms

@@ -10,8 +10,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+
 from repro.configs import TRAIN_4K, get_config, list_archs, make_batch, reduced
 from repro.models import build_model
+
+pytestmark = pytest.mark.slow  # Per-arch prefill/decode equivalence sweeps — fast tier skips via -m 'not slow'
 
 ARCHS = list_archs()
 

@@ -11,11 +11,14 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+
 from repro.configs import TRAIN_4K, get_config, list_archs, make_batch, reduced
 from repro.core import policy_for
 from repro.models import build_model
 from repro.optim import AdamWConfig
 from repro.train import make_train_fns, split_batch_for_pods
+
+pytestmark = pytest.mark.slow  # Per-arch sweeps over the whole model zoo — fast tier skips via -m 'not slow'
 
 ARCHS = list_archs()
 

@@ -1,0 +1,312 @@
+"""Adaptive consistency control plane: scorer, kernel, controller, e2e.
+
+The acceptance bars: the Pallas ``policy_score`` kernel matches the
+``ref.py`` oracle bit-exactly (under jit — both sides get XLA's FMA
+contraction), and ``run_protocol_adaptive`` lands within 5% of the
+cheapest SLA-feasible static level without exceeding the SLA.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consistency import ConsistencyLevel
+from repro.core.cost_model import GCP_PRICING, PAPER_PRICING
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.policy import (
+    POLICY_LEVELS,
+    SLA,
+    SLA_RELAXED,
+    SLA_STRICT,
+    AdaptiveController,
+    level_table,
+    session_params,
+)
+from repro.policy import sla as sla_lib
+from repro.storage.cluster import PAPER_CLUSTER
+
+
+def _telemetry(key, s, l, unobserved=0.3):
+    k1, k2, k3 = jax.random.split(key, 3)
+    stale = jax.random.uniform(k1, (s, l))
+    viol = jax.random.uniform(k2, (s, l)) * 0.3
+    count = (jax.random.uniform(k3, (s, l)) > unobserved).astype(
+        jnp.float32
+    ) * 16.0
+    return stale, viol, count
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [1, 7, 64, 200])
+@pytest.mark.parametrize("sla", [SLA_STRICT, SLA_RELAXED])
+def test_policy_score_kernel_bitexact(s, sla):
+    l = len(POLICY_LEVELS)
+    tab = level_table()
+    key = jax.random.PRNGKey(s)
+    sess = session_params(sla, s, read_frac=jax.random.uniform(key, (s,)))
+    stale, viol, count = _telemetry(jax.random.PRNGKey(s + 1), s, l)
+    u_ref, f_ref = jax.jit(kernel_ref.policy_score_ref)(
+        sess, tab, stale, viol, count
+    )
+    u_k, f_k = kernel_ops.policy_score(sess, tab, stale, viol, count)
+    assert u_k.dtype == jnp.float32 and f_k.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(u_ref), np.asarray(u_k))
+    np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_k))
+
+
+def test_policy_score_kernel_padding_rows_invalid():
+    # Non-multiple of block: padded rows must not leak into outputs.
+    s, l = 5, len(POLICY_LEVELS)
+    tab = level_table()
+    sess = session_params(SLA_STRICT, s)
+    stale, viol, count = _telemetry(jax.random.PRNGKey(0), s, l)
+    u, f = kernel_ops.policy_score(
+        sess, tab, stale, viol, count, block_s=4
+    )
+    assert u.shape == (s, l) and f.shape == (s, l)
+    u_ref, f_ref = jax.jit(kernel_ref.policy_score_ref)(
+        sess, tab, stale, viol, count
+    )
+    np.testing.assert_array_equal(np.asarray(u_ref), np.asarray(u))
+
+
+def test_policy_score_invalid_sessions_zeroed():
+    s, l = 8, len(POLICY_LEVELS)
+    tab = level_table()
+    valid = jnp.asarray([1, 0] * 4, jnp.float32)
+    sess = session_params(SLA_STRICT, s, valid=valid)
+    stale, viol, count = _telemetry(jax.random.PRNGKey(1), s, l)
+    u, f = kernel_ref.policy_score_ref(sess, tab, stale, viol, count)
+    assert bool(jnp.all(u[1::2] == 0.0))
+    assert bool(jnp.all(f[1::2] == 0))
+
+
+# ---------------------------------------------------------------------------
+# Scorer semantics
+# ---------------------------------------------------------------------------
+
+
+def test_level_table_orderings():
+    tab = level_table()
+    j = {lv: i for i, lv in enumerate(POLICY_LEVELS)}
+    wc = tab[sla_lib.LVL_WRITE_COST]
+    # Write cost grows with acks: ONE cheapest, ALL most expensive.
+    assert float(wc[j[ConsistencyLevel.ONE]]) < float(
+        wc[j[ConsistencyLevel.QUORUM]]
+    ) < float(wc[j[ConsistencyLevel.ALL]])
+    # Synchronous levels pay inter-DC read latency; causal family is local.
+    lat = tab[sla_lib.LVL_READ_LAT]
+    assert float(lat[j[ConsistencyLevel.X_STCC]]) == pytest.approx(
+        PAPER_CLUSTER.intra_dc_rtt_ms
+    )
+    assert float(lat[j[ConsistencyLevel.ALL]]) == pytest.approx(
+        PAPER_CLUSTER.inter_dc_rtt_ms
+    )
+    # Data-age bound: 0 for sync, finite for timed, inf for untimed causal.
+    age = tab[sla_lib.LVL_STALE_AGE]
+    assert float(age[j[ConsistencyLevel.ALL]]) == 0.0
+    assert np.isfinite(float(age[j[ConsistencyLevel.X_STCC]]))
+    assert np.isinf(float(age[j[ConsistencyLevel.CAUSAL]]))
+    # Repair is most expensive for ONE, free for X-STCC's local fix-up.
+    rep = tab[sla_lib.LVL_REPAIR_COST]
+    assert float(rep[j[ConsistencyLevel.ONE]]) > float(
+        rep[j[ConsistencyLevel.X_STCC]]
+    )
+
+
+def test_level_table_pricing_presets_differ():
+    t_paper = level_table(pricing=PAPER_PRICING)
+    t_gcp = level_table(pricing=GCP_PRICING)
+    assert not bool(jnp.all(t_paper == t_gcp))
+    # GCP egress tiers start at $0.12/GB > the paper's $0.01 flat.
+    assert float(t_gcp[sla_lib.LVL_WRITE_COST, 0]) > float(
+        t_paper[sla_lib.LVL_WRITE_COST, 0]
+    )
+
+
+def test_scorer_prefers_cheapest_feasible_and_least_violating():
+    s = 4
+    l = len(POLICY_LEVELS)
+    tab = level_table()
+    sla = SLA("t", max_stale_read_rate=0.2, max_violation_rate=0.1,
+              max_read_latency_ms=10.0)
+    sess = session_params(sla, s, read_frac=0.5)
+    stale = jnp.zeros((s, l))
+    # Session 0: everything clean -> cheapest latency-feasible level
+    # (ONE).  Session 1: ONE/CAUSAL stale -> cheapest clean causal
+    # level.  Session 2: all causal levels infeasible -> least-violating
+    # (X_STCC here), NOT the cheapest-worst.
+    stale = stale.at[1, 0].set(0.9).at[1, 1].set(0.9)
+    stale = stale.at[2, 0].set(0.9).at[2, 1].set(0.8)
+    stale = stale.at[2, 2].set(0.5).at[2, 3].set(0.4)
+    viol = jnp.zeros((s, l))
+    count = jnp.full((s, l), 10.0)
+    u, f = kernel_ref.policy_score_ref(sess, tab, stale, viol, count)
+    pick = np.asarray(jnp.argmax(u, axis=1))
+    j = {lv: i for i, lv in enumerate(POLICY_LEVELS)}
+    assert pick[0] == j[ConsistencyLevel.ONE]
+    # Cheapest clean causal level (TCC or X_STCC, whichever the table
+    # prices lower at a 50/50 mix).
+    cost = 0.5 * np.asarray(tab[sla_lib.LVL_READ_COST]) + 0.5 * np.asarray(
+        tab[sla_lib.LVL_WRITE_COST]
+    )
+    assert pick[1] == min(
+        (j[ConsistencyLevel.TCC], j[ConsistencyLevel.X_STCC]),
+        key=lambda i: cost[i],
+    )
+    assert pick[2] == j[ConsistencyLevel.X_STCC]
+    assert f[0, j[ConsistencyLevel.ONE]] == 1
+    assert f[2, j[ConsistencyLevel.X_STCC]] == 0  # infeasible, least bad
+    # Latency-infeasible sync levels are never feasible under a 10 ms bound.
+    assert int(jnp.sum(f[:, j[ConsistencyLevel.ALL]])) == 0
+
+
+def test_optimistic_unobserved_cells():
+    s, l = 2, len(POLICY_LEVELS)
+    tab = level_table()
+    sess = session_params(SLA_STRICT, s, read_frac=1.0)
+    stale = jnp.full((s, l), 0.9)     # terrible telemetry...
+    viol = jnp.zeros((s, l))
+    count = jnp.zeros((s, l))         # ...but none of it observed
+    u, f = kernel_ref.policy_score_ref(sess, tab, stale, viol, count)
+    lat_ok = np.asarray(tab[sla_lib.LVL_READ_LAT]) <= 10.0
+    age_ok = np.asarray(tab[sla_lib.LVL_STALE_AGE]) <= 50.0
+    np.testing.assert_array_equal(
+        np.asarray(f[0]).astype(bool), lat_ok & age_ok
+    )
+
+
+# ---------------------------------------------------------------------------
+# Controller
+# ---------------------------------------------------------------------------
+
+
+def test_controller_converges_to_cheapest_feasible():
+    s = 8
+    ctl = AdaptiveController(s, SLA_RELAXED, window=4, eps0=0.0)
+    state = ctl.init()
+    j = {lv: i for i, lv in enumerate(ctl.levels)}
+    one, xstcc = j[ConsistencyLevel.ONE], j[ConsistencyLevel.X_STCC]
+    # Synthetic world: ONE violates the SLA, X_STCC is clean.
+    true_stale = np.full(len(ctl.levels), 0.1, np.float32)
+    true_stale[one] = 0.9
+    true_viol = np.zeros(len(ctl.levels), np.float32)
+    true_viol[one] = 0.5
+    key = jax.random.PRNGKey(0)
+    for _ in range(12):
+        key, sub = jax.random.split(key)
+        choice = ctl.select(state, sub, read_frac=0.9)
+        reads = jnp.full((s,), 20.0)
+        stale = jnp.asarray(true_stale)[choice] * reads
+        viol = jnp.asarray(true_viol)[choice] * reads
+        state = ctl.observe(
+            state, level_idx=choice, stale=stale, viol=viol, reads=reads
+        )
+    final = np.asarray(ctl.select(state, jax.random.PRNGKey(99),
+                                  read_frac=0.9))
+    # ONE observed infeasible; cheapest clean causal-family level wins.
+    assert not np.any(final == one)
+    assert np.all(final == xstcc) or np.all(
+        np.isin(final, [j[ConsistencyLevel.CAUSAL], j[ConsistencyLevel.TCC],
+                        xstcc])
+    )
+
+
+def test_controller_window_forgets_and_reprobes():
+    s = 4
+    ctl = AdaptiveController(s, SLA_RELAXED, window=3, eps0=0.0)
+    state = ctl.init()
+    one = ctl.levels.index(ConsistencyLevel.ONE)
+    # Epoch 0: ONE is played and observed infeasible.
+    bad = jnp.full((s,), 20.0)
+    state = ctl.observe(
+        state, level_idx=jnp.full((s,), one, jnp.int32),
+        stale=bad, viol=bad, reads=bad,
+    )
+    choice1 = np.asarray(ctl.select(state, jax.random.PRNGKey(1)))
+    assert not np.any(choice1 == one)
+    # Two clean epochs at another level age ONE's evidence out of the
+    # 3-epoch window; optimism then re-probes the cheap level.
+    other = ctl.levels.index(ConsistencyLevel.X_STCC)
+    for e in range(3):
+        state = ctl.observe(
+            state, level_idx=jnp.full((s,), other, jnp.int32),
+            stale=jnp.zeros((s,)), viol=jnp.zeros((s,)),
+            reads=jnp.full((s,), 20.0),
+        )
+    choice2 = np.asarray(ctl.select(state, jax.random.PRNGKey(2)))
+    assert np.all(choice2 == one)
+
+
+def test_controller_state_is_scannable():
+    s = 4
+    ctl = AdaptiveController(s, SLA_STRICT, window=2)
+    e, l = 6, len(ctl.levels)
+    key = jax.random.PRNGKey(0)
+    telemetry = {
+        "stale": jax.random.uniform(key, (e, s, l)) * 5,
+        "viol": jnp.zeros((e, s, l)),
+        "reads": jnp.full((e, s), 10.0),
+        "writes": jnp.full((e, s), 10.0),
+    }
+    run = jax.jit(lambda k, t: ctl.run_scan(k, t))
+    state, trace = run(jax.random.PRNGKey(7), telemetry)
+    assert trace["choice"].shape == (e, s)
+    assert trace["cost"].shape == (e, s)
+    assert int(state.epoch) == e
+
+
+def test_epoch_cost_matches_manual():
+    tab = level_table()
+    cost = sla_lib.epoch_cost(
+        tab, jnp.asarray([0, 3]),
+        reads=jnp.asarray([10.0, 10.0]),
+        writes=jnp.asarray([5.0, 5.0]),
+        stale=jnp.asarray([2.0, 0.0]),
+    )
+    exp0 = (10 * float(tab[sla_lib.LVL_READ_COST, 0])
+            + 2 * float(tab[sla_lib.LVL_REPAIR_COST, 0])
+            + 5 * float(tab[sla_lib.LVL_WRITE_COST, 0]))
+    assert float(cost[0]) == pytest.approx(exp0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end (the acceptance bar, scaled down)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_run_protocol_adaptive_beats_or_matches_cheapest_feasible():
+    from repro.storage.simulator import run_protocol_adaptive
+    from repro.storage.ycsb import PHASED_RW, PHASED_RWR
+
+    for pw in (PHASED_RW, PHASED_RWR):
+        out = run_protocol_adaptive(pw, SLA_RELAXED, n_ops=6400)
+        a = out["adaptive"]
+        ch = out["cheapest_feasible_static"]
+        assert ch is not None
+        assert a["cost"] <= out["static"][ch]["cost"] * 1.05
+        assert a["staleness_rate"] <= SLA_RELAXED.max_stale_read_rate
+        assert a["violation_rate"] <= SLA_RELAXED.max_violation_rate
+
+
+def test_run_protocol_adaptive_smoke_small():
+    from repro.storage.simulator import run_protocol_adaptive
+    from repro.storage.ycsb import PHASED_RW
+
+    out = run_protocol_adaptive(
+        PHASED_RW, SLA_RELAXED, n_ops=1280, epoch_size=64,
+        levels=(ConsistencyLevel.ONE, ConsistencyLevel.X_STCC),
+    )
+    shares = out["adaptive"]["level_share"]
+    assert set(shares) == {"ONE", "X_STCC"}
+    assert sum(shares.values()) == pytest.approx(1.0)
+    assert out["adaptive"]["cost"] > 0
+    for m in out["static"].values():
+        assert 0.0 <= m["staleness_rate"] <= 1.0

@@ -10,12 +10,15 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+
 from repro.configs import get_config, reduced
 from repro.core import policy_for
 from repro.data import DataConfig
 from repro.optim import AdamWConfig
 from repro.train import Trainer, TrainerConfig
 
+
+pytestmark = pytest.mark.slow  # Multi-pod training runs per consistency level — fast tier skips via -m 'not slow'
 
 def make_trainer(level, n_pods=2, n_steps=16, **pol_kw):
     cfg = reduced(get_config("qwen2-7b"), n_layers=2)

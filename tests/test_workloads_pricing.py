@@ -1,0 +1,91 @@
+"""YCSB generator knobs (zipf skew, phase schedules) + pricing presets.
+
+Unlike the hypothesis-guarded property suites, these always run — they
+cover the adaptive control plane's workload and billing inputs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.storage.ycsb import (
+    PHASED_RW,
+    PHASED_RWR,
+    WORKLOAD_A,
+    WORKLOAD_B,
+    PhasedWorkload,
+    generate,
+    generate_phased,
+)
+
+
+def _hot_key_share(ops):
+    return np.bincount(ops["key"] % 1000, minlength=1000).max() / len(
+        ops["key"]
+    )
+
+
+def test_ycsb_zipf_theta_override():
+    skewed = generate(WORKLOAD_A, n_ops=20000, seed=0, zipf_theta=2.0)
+    flat = generate(WORKLOAD_A, n_ops=20000, seed=0, zipf_theta=0.1)
+    assert _hot_key_share(skewed) > _hot_key_share(flat)
+    with pytest.raises(ValueError, match="zipf_theta"):
+        generate(WORKLOAD_A, n_ops=10, zipf_theta=0.0)
+    with pytest.raises(ValueError, match="zipf_theta"):
+        generate(WORKLOAD_A, n_ops=10, zipf_theta=-1.0)
+
+
+def test_ycsb_phased_stream():
+    ops = generate_phased(PHASED_RW, n_ops=10000, seed=0)
+    assert len(ops["kind"]) == len(ops["key"]) == len(ops["phase"]) == 10000
+    # Phase ids are contiguous and ordered.
+    assert np.all(np.diff(ops["phase"]) >= 0)
+    # Read fraction shifts across the boundary: read-mostly, then
+    # write-heavy.
+    first = ops["kind"][ops["phase"] == 0]
+    second = ops["kind"][ops["phase"] == 1]
+    assert (first == 0).mean() > 0.9
+    assert (second == 0).mean() < 0.1
+    assert PHASED_RW.read_fraction == pytest.approx(0.5)
+    assert len(PHASED_RWR.phase_lengths(10000)) == 3
+    assert sum(PHASED_RWR.phase_lengths(10000)) == 10000
+    with pytest.raises(ValueError, match="fractions"):
+        PhasedWorkload("bad", ((WORKLOAD_A, 0.5), (WORKLOAD_B, 0.3)))
+
+
+def test_gcp_egress_tiers_piecewise():
+    p = cost_model.GCP_PRICING
+    # Inside the first tier: flat $0.12/GB.
+    assert p.inter_dc_cost(100.0) == pytest.approx(100.0 * 0.12)
+    # Exactly the first tier boundary.
+    assert p.inter_dc_cost(1024.0) == pytest.approx(1024.0 * 0.12)
+    # Spanning two tiers: 1 TB at $0.12 + the rest at $0.11.
+    assert p.inter_dc_cost(2048.0) == pytest.approx(
+        1024.0 * 0.12 + 1024.0 * 0.11)
+    # Spanning all three tiers.
+    assert p.inter_dc_cost(20480.0) == pytest.approx(
+        1024.0 * 0.12 + 9216.0 * 0.11 + 10240.0 * 0.08)
+    assert p.inter_dc_cost(0.0) == 0.0
+    # A tier list without an inf terminator keeps billing overflow
+    # volume at the last tier's price (never silently free).
+    finite = cost_model.PricingScheme(
+        inter_dc_tiers=((100.0, 0.12), (200.0, 0.11))
+    )
+    assert finite.inter_dc_cost(1000.0) == pytest.approx(
+        100.0 * 0.12 + 100.0 * 0.11 + 800.0 * 0.11)
+    # Marginal price of the tier a volume falls in.
+    assert p.marginal_inter_dc_per_gb(0.0) == 0.12
+    assert p.marginal_inter_dc_per_gb(5000.0) == 0.11
+    assert p.marginal_inter_dc_per_gb(1e6) == 0.08
+    # Flat schemes ignore tiers entirely.
+    flat = cost_model.PAPER_PRICING
+    assert flat.inter_dc_cost(123.0) == pytest.approx(123.0 * 0.01)
+    assert flat.marginal_inter_dc_per_gb(1e9) == 0.01
+
+
+def test_cost_network_uses_tiers():
+    gcp = cost_model.cost_network(
+        inter_dc_gb=2048.0, intra_dc_gb=10.0, pricing=cost_model.GCP_PRICING
+    )
+    assert gcp == pytest.approx(1024.0 * 0.12 + 1024.0 * 0.11)
+    assert set(cost_model.PRICING_PRESETS) == {"paper", "gcp", "tpu"}
