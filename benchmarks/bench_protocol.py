@@ -1,17 +1,36 @@
-"""Protocol-engine throughput: batched vs scalar op ingestion.
+"""Protocol-engine throughput: batched vs scalar, tiled vs dense ingest.
 
-The headline of the batched X-STCC refactor: ``run_protocol`` (lax.scan
-over op batches through ``ReplicatedStore``, vectorized ingestion +
-fixpoint merge) against ``run_protocol_scalar`` (the seed engine: one
-``lax.cond`` per op + the one-slot-at-a-time merge pass), at the
-evaluation's n_ops=6000 on workload A.
+Two headline comparisons:
+
+  * the batched engine (``run_protocol``: lax.scan over op batches
+    through ``ReplicatedStore``) against the seed scalar engine
+    (``run_protocol_scalar``: one ``lax.cond`` per op), at the
+    evaluation's n_ops on workload A — the PR-1 result;
+  * the O(B·tile) tiled op-ingestion (``ingest="tiled"``/Pallas) against
+    the PR-1 dense O(B²)-mask ingestion (``ingest="dense"``) across a
+    batch-size sweep B ∈ {64, 256, 1024, 4096} — the memory win that
+    lets the batch grow: the dense path materializes ~6 ``(B, B)``
+    relation masks plus a ``(B, Q)`` pending mask per batch, the tiled
+    path streams ``(tile, tile)`` blocks.
 
 Rows (name, us_per_call, derived):
-  protocol_batched_<LEVEL>   derived = engine throughput, ops/s
-  protocol_scalar_<LEVEL>    derived = engine throughput, ops/s
-  protocol_speedup_<LEVEL>   derived = batched/scalar ops/s ratio
-  protocol_stale_dev_<LEVEL> derived = relative staleness deviation
-                             batched vs scalar (metric-consistency bar)
+  protocol_batched_<LEVEL>      derived = engine throughput, ops/s
+  protocol_scalar_<LEVEL>       derived = engine throughput, ops/s
+  protocol_speedup_<LEVEL>      derived = batched/scalar ops/s ratio
+  protocol_stale_dev_<LEVEL>    derived = relative staleness deviation
+                                batched vs scalar (metric-consistency bar)
+  protocol_ingest_dense_B<B>    derived = ops/s at batch size B
+  protocol_ingest_tiled_B<B>    derived = ops/s at batch size B
+  protocol_ingest_speedup_B<B>  derived = tiled/dense ops/s ratio
+  protocol_ingest_stale_dev_B<B> derived = tiled vs dense staleness
+                                deviation (bit-exact -> 0.0)
+  protocol_ingest_mem_B<B>      derived = dense_bytes/tiled_bytes mask
+                                footprint ratio (the O(B²) -> O(B) win)
+
+``REPRO_BENCH_NOPS`` scales the stream (default 6000; CI smoke uses
+600).  ``python -m benchmarks.bench_protocol --check`` runs the suite,
+writes ``BENCH_PROTOCOL.json``, and exits non-zero unless the JSON is
+valid and every staleness deviation is <= 0.5%.
 
 Timings are steady-state (first call compiles, timed calls reuse the
 cached jitted runner); the audit is excluded so the engines themselves
@@ -20,10 +39,26 @@ are compared.
 
 from __future__ import annotations
 
-from benchmarks.common import emit, time_call
+import os
+import sys
 
-N_OPS = 6000
+from benchmarks.common import emit, time_call, write_json
+
+N_OPS = int(os.environ.get("REPRO_BENCH_NOPS", "6000"))
 LEVELS = ("X_STCC", "TCC", "CAUSAL", "ONE", "QUORUM", "ALL")
+SWEEP_B = (64, 256, 1024, 4096)
+TILE = 256  # the tiled path's block size (repro.kernels.ops.op_ingest)
+
+STALE_DEV_BAR = 0.005  # metric-consistency acceptance bar
+
+
+def _stale_dev(got: dict, want: dict) -> float:
+    if want["staleness_rate"] > 0:
+        return (
+            abs(got["staleness_rate"] - want["staleness_rate"])
+            / want["staleness_rate"]
+        )
+    return abs(got["staleness_rate"])
 
 
 def run() -> None:
@@ -48,13 +83,7 @@ def run() -> None:
         emit(f"protocol_batched_{name}", us_b, f"{ops_b:.0f}")
         emit(f"protocol_scalar_{name}", us_s, f"{ops_s:.0f}")
         emit(f"protocol_speedup_{name}", us_b, f"{ops_b / ops_s:.2f}")
-        stale_dev = (
-            abs(out_b["staleness_rate"] - out_s["staleness_rate"])
-            / max(out_s["staleness_rate"], 1e-12)
-            if out_s["staleness_rate"] > 0
-            else abs(out_b["staleness_rate"])
-        )
-        emit(f"protocol_stale_dev_{name}", 0.0, f"{stale_dev:.4f}")
+        emit(f"protocol_stale_dev_{name}", 0.0, f"{_stale_dev(out_b, out_s):.4f}")
 
     geo = 1.0
     for s in speedups:
@@ -62,7 +91,64 @@ def run() -> None:
     geo **= 1.0 / len(speedups)
     emit("protocol_speedup_geomean", 0.0, f"{geo:.2f}")
 
+    # -- batch-size sweep: tiled O(B·tile) vs dense O(B²) ingestion ----------
+    for b in SWEEP_B:
+        if b > N_OPS:
+            emit(f"protocol_ingest_skip_B{b}", 0.0,
+                 f"batch>{N_OPS}ops")
+            continue
+        n_ops = max(N_OPS, 2 * b)   # at least two full batches
+        n_ops = (n_ops // b) * b
+        outs = {}
+        for ingest in ("dense", "tiled"):
+            us, out = time_call(
+                run_protocol, ConsistencyLevel.X_STCC, WORKLOAD_A,
+                n_ops=n_ops, batch_size=b, audit=False, ingest=ingest,
+                repeats=3,
+            )
+            outs[ingest] = (us, out)
+            emit(f"protocol_ingest_{ingest}_B{b}", us,
+                 f"{n_ops / (us / 1e6):.0f}")
+        us_d, out_d = outs["dense"]
+        us_t, out_t = outs["tiled"]
+        emit(f"protocol_ingest_speedup_B{b}", us_t, f"{us_d / us_t:.2f}")
+        emit(f"protocol_ingest_stale_dev_B{b}", 0.0,
+             f"{_stale_dev(out_t, out_d):.4f}")
+        # Ingestion mask footprint: the dense path materializes ~6
+        # (B, B) int/bool relation masks plus the (B, Q) pending mask
+        # (Q = 2B); the tiled path carries (B,)-vector accumulators
+        # plus (tile, tile) blocks.
+        tile = min(TILE, b)
+        dense_bytes = 6 * b * b * 4 + b * (2 * b) * 4
+        tiled_bytes = 4 * b * 4 + 6 * tile * tile * 4
+        emit(f"protocol_ingest_mem_B{b}", 0.0,
+             f"{dense_bytes / tiled_bytes:.1f}")
+
+
+def check() -> int:
+    """CI smoke: run, persist JSON, gate on metric consistency."""
+    import json
+
+    run()
+    path = write_json()
+    data = json.loads(path.read_text())   # must round-trip
+    bad = []
+    for name, row in data.items():
+        if "stale_dev" not in name:
+            continue
+        if float(row["derived"]) > STALE_DEV_BAR:
+            bad.append((name, row["derived"]))
+    if bad:
+        print(f"stale deviation above {STALE_DEV_BAR:.3%}: {bad}",
+              file=sys.stderr)
+        return 1
+    print(f"check OK: {len(data)} rows -> {path}")
+    return 0
+
 
 if __name__ == "__main__":
+    if "--check" in sys.argv:
+        sys.exit(check())
     print("name,us_per_call,derived")
     run()
+    write_json()

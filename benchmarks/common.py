@@ -1,14 +1,26 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + JSON results.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (the scaffold
 contract): ``us_per_call`` is the wall time of one measured call on this
 host; ``derived`` is the benchmark's headline metric (a figure-level
-quantity from the paper)."""
+quantity from the paper).  Every emitted row is also collected in
+:data:`RESULTS` so drivers can persist the run machine-readably
+(:func:`write_json` → ``BENCH_PROTOCOL.json`` at the repo root — the
+cross-PR perf trajectory)."""
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+RESULTS_JSON = REPO_ROOT / "BENCH_PROTOCOL.json"
+
+# name -> {"us_per_call": float, "derived": str} for every emit() of the
+# process, in emission order (dicts preserve it).
+RESULTS: dict[str, dict] = {}
 
 
 def time_call(fn: Callable, *args, repeats: int = 1, **kw) -> tuple[float, object]:
@@ -24,4 +36,13 @@ def time_call(fn: Callable, *args, repeats: int = 1, **kw) -> tuple[float, objec
 def emit(name: str, us_per_call: float, derived) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
+    RESULTS[name] = {"us_per_call": round(us_per_call, 1),
+                     "derived": str(derived)}
     return line
+
+
+def write_json(path: pathlib.Path | str = RESULTS_JSON) -> pathlib.Path:
+    """Persist every emitted row as ``{name: {us_per_call, derived}}``."""
+    path = pathlib.Path(path)
+    path.write_text(json.dumps(RESULTS, indent=2) + "\n")
+    return path

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import sys
 
+from benchmarks.common import emit, write_json
+
 
 def main() -> None:
     print("name,us_per_call,derived")
@@ -43,7 +45,12 @@ def main() -> None:
             mod.run()
         except Exception as e:  # noqa: BLE001 — report and continue
             failures.append((name, e))
-            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            emit(name, 0.0, f"ERROR:{type(e).__name__}:{e}")
+    # Machine-readable trajectory: every emitted row, including the
+    # ERROR markers above, lands in BENCH_PROTOCOL.json at the repo
+    # root so perf is diffable across PRs.
+    path = write_json()
+    print(f"wrote {path}", file=sys.stderr)
     if failures:
         for name, e in failures:
             print(f"benchmark {name} failed: {e}", file=sys.stderr)

@@ -35,6 +35,7 @@ kernel with an identical contract lives in ``repro.kernels.vclock_audit``.
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -111,14 +112,28 @@ def classify_pairs(table: Duot, hb: Array | None = None) -> Array:
     return phase
 
 
-def audit(table: Duot, *, delta: int | Array = 0) -> AuditResult:
+def audit(
+    table: Duot, *, delta: int | Array = 0, use_kernel: bool | None = None
+) -> AuditResult:
     """Full audit: classify every pair and flag violations.
 
     Args:
       table: the DUOT.
       delta: timed bound Δ in ``seq`` (timestamp) units; 0 disables the
         timed check (pure causal audit).
+      use_kernel: route the O(m²·n) pairwise pass through the tiled
+        Pallas kernel (``repro.kernels.vclock_audit``) and rebuild the
+        result from its packed codes.  ``None`` (default) picks the
+        kernel on TPU and the jnp fallback everywhere else; the kernel
+        needs a concrete ``delta``, so traced deltas (audit under jit)
+        also fall back.  Both paths are bit-identical.
     """
+    if use_kernel is None:
+        # The kernel is built with TPU grid/compiler parameters; every
+        # other backend takes the jnp fallback.
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel and not isinstance(delta, jax.core.Tracer):
+        return _audit_from_codes(table, int(delta))
     hb = vclock.happens_before_matrix(table.vc)
     phase = classify_pairs(table, hb)
     vi = table.version[:, None]
@@ -140,36 +155,43 @@ def audit(table: Duot, *, delta: int | Array = 0) -> AuditResult:
     # by more than Δ timestamps must be visible regardless of causality.
     delta = jnp.asarray(delta, jnp.int32)
     gap = table.seq[None, :] - table.seq[:, None]
-    base = (
-        table.valid[:, None]
-        & table.valid[None, :]
-        & (table.resource[:, None] == table.resource[None, :])
-        & (table.seq[:, None] < table.seq[None, :])
-    )
     timed_vio = (
         (delta > 0)
-        & base
+        & (phase != PHASE_NONE)
         & (ki == WRITE)
         & (kj == READ)
         & (gap > delta)
         & (vj < vi)
     )
+    return _assemble_result(table, phase, viol, timed_vio)
 
+
+def _assemble_result(
+    table: Duot, phase: Array, viol: Array, timed_vio: Array
+) -> AuditResult:
+    """Counts + ODG-weighted severity from the per-pair flags.
+
+    Everything downstream of the pairwise pass needs only the phase
+    codes (``base ⇔ phase > 0``, ``base ∧ hb ⇔ 1 <= phase <= 5``) and
+    the op kinds, so the dense jnp path and the Pallas-kernel path
+    share this assembly — they cannot drift apart.
+
+    Severity (paper §3.4.1): violated ODG edges weighted by kind over
+    all audited edges.  Data edges: (write, later read) pairs on one
+    resource; Causal edges: happens-before pairs; Timed edges: the
+    remaining ordered same-resource pairs.
+    """
     vio_kind = jnp.where(viol, phase, PHASE_NONE).astype(jnp.int32)
-
-    audited = phase != PHASE_NONE
-    n_audited = jnp.sum(audited.astype(jnp.int32))
+    n_audited = jnp.sum((phase != PHASE_NONE).astype(jnp.int32))
     n_violations = jnp.sum(viol.astype(jnp.int32)) + jnp.sum(
         timed_vio.astype(jnp.int32)
     )
 
-    # Severity (paper §3.4.1): violated ODG edges weighted by kind over
-    # all audited edges.  Data edges: pairs where a read returned a write's
-    # value (vi == vj across W->R); Causal edges: happens-before pairs;
-    # Timed edges: adjacent-in-time pairs (all ordered same-resource).
+    base = phase != PHASE_NONE
+    causal_edge = (phase >= PHASE_A1_MR) & (phase <= PHASE_B1_TCC)
+    ki = table.kind[:, None]
+    kj = table.kind[None, :]
     data_edge = base & (ki == WRITE) & (kj == READ)
-    causal_edge = base & hb
-    timed_edge = base
     w = (
         WEIGHT_DATA * (viol & data_edge)
         + WEIGHT_CAUSAL * (viol & causal_edge & ~data_edge)
@@ -178,7 +200,7 @@ def audit(table: Duot, *, delta: int | Array = 0) -> AuditResult:
     denom = (
         WEIGHT_DATA * data_edge
         + WEIGHT_CAUSAL * (causal_edge & ~data_edge)
-        + WEIGHT_TIMED * (timed_edge & ~causal_edge & ~data_edge)
+        + WEIGHT_TIMED * (base & ~causal_edge & ~data_edge)
     )
     severity = jnp.sum(w) / jnp.maximum(jnp.sum(denom), 1.0)
 
@@ -193,7 +215,24 @@ def audit(table: Duot, *, delta: int | Array = 0) -> AuditResult:
     )
 
 
-audit_jit = jax.jit(audit, static_argnames=())
+def _audit_from_codes(table: Duot, delta: int) -> AuditResult:
+    """Rebuild an :class:`AuditResult` from the Pallas kernel's codes.
+
+    The kernel emits ``phase | violation << 8 | timed << 9`` per pair;
+    the O(m²·n) clock comparison never runs on the host.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    codes = kernel_ops.audit_duot(table, delta=delta)
+    phase = codes & 0xFF
+    viol = ((codes >> 8) & 1).astype(bool)
+    timed_vio = ((codes >> 9) & 1).astype(bool)
+    return _assemble_result(table, phase, viol, timed_vio)
+
+
+audit_jit = jax.jit(
+    functools.partial(audit, use_kernel=False), static_argnames=()
+)
 
 
 def session_guarantee_report(result: AuditResult) -> dict[str, Array]:

@@ -146,6 +146,7 @@ class ReplicatedStore:
         delta: int = 24,
         pending_cap: int = 128,
         duot_cap: int = 1024,
+        ingest: str = "auto",
     ):
         self.n_replicas = n_replicas
         self.n_clients = n_clients
@@ -155,6 +156,11 @@ class ReplicatedStore:
         self.duot_cap = duot_cap
         self.sync_every, self.delta = merge_cadence(level, merge_every, delta)
         self.enforce_sessions = level.is_session_guarded
+        # Op-ingestion implementation (repro.kernels.ops.op_ingest):
+        # None = auto (tiled block walk on CPU, Pallas kernel on TPU;
+        # O(B·tile) memory either way); "dense" forces the O(B²)-mask
+        # baseline.  All choices are bit-identical.
+        self.ingest = ingest
 
     # -- state ----------------------------------------------------------------
 
@@ -208,6 +214,32 @@ class ReplicatedStore:
 
     # -- batch ops --------------------------------------------------------------
 
+    def _pend_timeline(
+        self, state: StoreState, resource: Array, pend_apply: Array,
+        step0: Array, b: int,
+    ) -> Array:
+        """Per-op visible pending version via a timeline running max.
+
+        Each live pending slot's version activates at batch-local index
+        ``act = clip(pend_apply - step0, 0, b)`` (row ``b`` = "after the
+        batch", i.e. never); a cumulative max down the ``(b+1, R)``
+        timeline then gives, at row ``i``, the freshest pending version
+        per resource visible to op ``i``.
+        """
+        cl = state.cluster
+        n_res = cl.global_version.shape[0]
+        act = jnp.clip(
+            jnp.asarray(pend_apply, jnp.int32) - step0, 0, b
+        )
+        res_safe = jnp.where(cl.pend_live, cl.pend_resource, n_res)
+        timeline = (
+            jnp.zeros((b + 1, n_res), jnp.int32)
+            .at[act, res_safe]
+            .max(cl.pend_version, mode="drop")
+        )
+        seen = jax.lax.cummax(timeline, axis=0)
+        return seen[jnp.arange(b, dtype=jnp.int32), resource]
+
     def apply_batch(
         self,
         state: StoreState,
@@ -218,7 +250,6 @@ class ReplicatedStore:
         kind: Array,
         op_step0: Array | int | None = None,
         apply_index: Array | None = None,
-        extra_visible: Array | None = None,
         record: bool = True,
         enforce: Array | bool | None = None,
     ) -> tuple[StoreState, xstcc.BatchResult]:
@@ -230,11 +261,15 @@ class ReplicatedStore:
 
         With ``op_step0`` (the global op index of the batch's first op)
         the level's merge cadence is emulated *inside* the batch, so the
-        caller only needs a real :meth:`merge` on batch boundaries:
+        caller only needs a real :meth:`merge` on batch boundaries.  The
+        cadence reaches the engine as the closed-form predicate
+        ``op_index(i) >= apply_index(j)`` over two ``(B,)`` vectors (plus
+        the ``(Q,)`` ``pend_apply`` shadow of the pending ring) — never
+        as a dense visibility matrix:
 
-          * synchronous levels (``sync_every == 1``): every write is
-            visible to every later op at any replica — exactly what a
-            merge-after-every-op (Δ=0) schedule serves;
+          * synchronous levels (``sync_every == 1``): ``apply_index = 0``
+            — every write is visible to every later op at any replica,
+            exactly what a merge-after-every-op (Δ=0) schedule serves;
           * causal-family levels: each write carries an emulated
             sequential apply point in ``apply_index`` (the batch's slice
             of :meth:`schedule_stream`) and becomes visible at remote
@@ -250,32 +285,50 @@ class ReplicatedStore:
         r = jnp.asarray(resource, jnp.int32)
         k = jnp.asarray(kind, jnp.int32)
         b = c.shape[0]
-        pend_visible = None
+        op_index = None
+        pend_apply = None
+        visible_version = None
         new_pend_apply = None
         if op_step0 is not None:
-            g = jnp.asarray(op_step0, jnp.int32) + jnp.arange(b, dtype=jnp.int32)
+            step0 = jnp.asarray(op_step0, jnp.int32)
+            op_index = step0 + jnp.arange(b, dtype=jnp.int32)
             if self.sync_every == 1:
-                if extra_visible is None:
-                    extra_visible = jnp.ones((b, b), bool)
-                pend_visible = jnp.ones((b, state.pend_apply.shape[0]), bool)
+                apply_index = jnp.zeros((b,), jnp.int32)
+                pend_apply = jnp.zeros_like(state.pend_apply)
                 new_pend_apply = jnp.zeros((b,), jnp.int32)
             else:
                 if apply_index is None:
-                    apply_index = self.schedule_stream(c, p, k) + jnp.asarray(
-                        op_step0, jnp.int32
-                    )
-                if extra_visible is None:
-                    extra_visible = g[:, None] >= apply_index[None, :]
-                pend_visible = g[:, None] >= state.pend_apply[None, :]
+                    apply_index = self.schedule_stream(c, p, k) + step0
+                pend_apply = state.pend_apply
                 new_pend_apply = apply_index
-        elif extra_visible is None and self.sync_every == 1:
-            extra_visible = jnp.ones((b, b), bool)
+            if self.ingest != "dense":
+                # Fold the pending ring's cadence visibility in
+                # O(B + Q): batch op indices are affine, so slot q
+                # becomes visible at the batch-local activation index
+                # act = pend_apply - op_step0; scatter each live slot's
+                # version at (act, resource), run a cumulative max down
+                # the op axis, and gather at (i, r_i).  Bit-identical
+                # to the kernels' general (tile, Q) sweep (max-join is
+                # associative), without the O(B·Q) work.  The dense
+                # baseline keeps the PR-1 (B, Q) mask for the memory
+                # benchmark.
+                visible_version = self._pend_timeline(
+                    state, r, pend_apply, step0, b
+                )
+                pend_apply = None
+        elif self.sync_every == 1:
+            # Legacy batch entry points (no op index): intra-batch
+            # merge-every-op visibility, pending ring untouched.
+            op_index = jnp.arange(b, dtype=jnp.int32)
+            apply_index = jnp.zeros((b,), jnp.int32)
         res = xstcc.apply_op_batch(
             state.cluster, client=c, replica=p, resource=r, kind=k,
             enforce_sessions=(
                 self.enforce_sessions if enforce is None else enforce
             ),
-            extra_visible=extra_visible, pend_visible=pend_visible,
+            op_index=op_index, apply_index=apply_index,
+            pend_apply=pend_apply, visible_version=visible_version,
+            ingest=self.ingest,
         )
         pend_apply = state.pend_apply
         if new_pend_apply is not None:
@@ -435,3 +488,105 @@ class ReplicatedStore:
 
     def stability_frontier(self, state: StoreState) -> Array:
         return xstcc.stability_frontier(state.cluster)
+
+
+class ShardedStore:
+    """Disjoint-shard scale-out: S independent replica fleets, one axis.
+
+    Multi-tenant ingestion partitions sessions and resources into S
+    disjoint shards (tenant groups); each shard is a full
+    :class:`ReplicatedStore` of its own (clients/resources renumbered
+    shard-locally) whose :class:`StoreState` is stacked along a leading
+    ``(S, ...)`` axis.  Every batch op maps over that axis with
+    ``jax.vmap`` — and because the shards share no state, the mapped
+    axis can be laid out across a device mesh (``jax.shard_map`` in
+    :func:`repro.storage.simulator.run_protocol_sharded` does exactly
+    that when the host has enough devices), with per-shard telemetry
+    summed afterwards.  Sharded metrics are exactly the sum of the
+    per-shard unsharded runs (``tests/test_op_ingest.py`` checks this).
+    """
+
+    def __init__(self, store: ReplicatedStore, n_shards: int):
+        self.store = store
+        self.n_shards = n_shards
+
+    def init(self) -> StoreState:
+        """Stacked fresh state, one store per shard."""
+        return jax.vmap(lambda _: self.store.init())(
+            jnp.arange(self.n_shards)
+        )
+
+    def apply_batch(
+        self,
+        state: StoreState,
+        *,
+        client: Array,     # (S, B) int32 — shard-local client ids
+        replica: Array,    # (S, B) int32
+        resource: Array,   # (S, B) int32 — shard-local resource ids
+        kind: Array,       # (S, B) int32
+        op_step0: Array | None = None,     # (S,) int32
+        apply_index: Array | None = None,  # (S, B) int32
+        record: bool = True,
+        enforce: Array | bool | None = None,
+    ) -> tuple[StoreState, xstcc.BatchResult]:
+        """One batch per shard, vmapped over the shard axis."""
+        ops = {
+            "client": jnp.asarray(client, jnp.int32),
+            "replica": jnp.asarray(replica, jnp.int32),
+            "resource": jnp.asarray(resource, jnp.int32),
+            "kind": jnp.asarray(kind, jnp.int32),
+        }
+        if op_step0 is not None:
+            ops["op_step0"] = jnp.asarray(op_step0, jnp.int32)
+        if apply_index is not None:
+            ops["apply_index"] = jnp.asarray(apply_index, jnp.int32)
+
+        def one(st, o):
+            return self.store.apply_batch(
+                st, client=o["client"], replica=o["replica"],
+                resource=o["resource"], kind=o["kind"],
+                op_step0=o.get("op_step0"), apply_index=o.get("apply_index"),
+                record=record, enforce=enforce,
+            )
+
+        return jax.vmap(one)(state, ops)
+
+    def read_batch(
+        self, state: StoreState, *, client: Array, replica: Array,
+        resource: Array, record: bool = True,
+        enforce: Array | bool | None = None,
+    ) -> tuple[StoreState, xstcc.BatchResult]:
+        c = jnp.asarray(client, jnp.int32)
+        return self.apply_batch(
+            state, client=c, replica=replica, resource=resource,
+            kind=jnp.full(c.shape, xstcc.READ, jnp.int32), record=record,
+            enforce=enforce,
+        )
+
+    def write_batch(
+        self, state: StoreState, *, client: Array, replica: Array,
+        resource: Array, record: bool = True,
+    ) -> tuple[StoreState, xstcc.BatchResult]:
+        c = jnp.asarray(client, jnp.int32)
+        return self.apply_batch(
+            state, client=c, replica=replica, resource=resource,
+            kind=jnp.full(c.shape, xstcc.WRITE, jnp.int32), record=record,
+        )
+
+    def merge(
+        self, state: StoreState, *, delta: Array | int | None = None
+    ) -> tuple[StoreState, Array]:
+        return jax.vmap(
+            lambda st: self.store.merge(st, delta=delta)
+        )(state)
+
+    def install(
+        self, state: StoreState, *, replica: Array | int,
+        resource: Array | int, version: Array | int,
+    ) -> StoreState:
+        """Install a snapshot on every shard (server-side publish)."""
+        return jax.vmap(
+            lambda st: self.store.install(
+                st, replica=replica, resource=resource, version=version
+            )
+        )(state)

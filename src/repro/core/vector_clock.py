@@ -70,14 +70,27 @@ def happens_before_matrix(vcs: Array) -> Array:
     Returns:
       ``(m, m)`` bool where ``out[i, j]`` iff ``vcs[i] -> vcs[j]``.
 
-    This is the O(m^2 * n) audit hot-spot; ``repro.kernels.vclock_audit``
-    provides the tiled Pallas equivalent for large logs.
+    ``a -> b  <=>  max_n(a_n - b_n) <= 0  and  min_n(a_n - b_n) < 0``,
+    computed as a scan over the n clock components with two ``(m, m)``
+    running extrema — O(m²) peak memory instead of the ``(m, m, n)``
+    broadcast temporary (the audit hot-spot at Cassandra-scale logs).
+    ``repro.kernels.vclock_audit`` is the tiled Pallas equivalent for
+    accelerator runs.
     """
-    a = vcs[:, None, :]  # (m, 1, n)
-    b = vcs[None, :, :]  # (1, m, n)
-    le = jnp.all(a <= b, axis=-1)
-    lt = jnp.any(a < b, axis=-1)
-    return jnp.logical_and(le, lt)
+    m = vcs.shape[0]
+    big = jnp.int32(2 ** 30)
+
+    def component(carry, col):
+        maxd, mind = carry
+        diff = col[:, None] - col[None, :]
+        return (jnp.maximum(maxd, diff), jnp.minimum(mind, diff)), None
+
+    (maxd, mind), _ = jax.lax.scan(
+        component,
+        (jnp.full((m, m), -big), jnp.full((m, m), big)),
+        vcs.T,
+    )
+    return jnp.logical_and(maxd <= 0, mind < 0)
 
 
 def concurrency_matrix(vcs: Array) -> Array:

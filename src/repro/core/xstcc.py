@@ -244,8 +244,11 @@ def apply_op_batch(
     resource: Array,
     kind: Array,
     enforce_sessions: bool | Array = True,
-    extra_visible: Array | None = None,
-    pend_visible: Array | None = None,
+    op_index: Array | None = None,
+    apply_index: Array | None = None,
+    pend_apply: Array | None = None,
+    visible_version: Array | None = None,
+    ingest: str | None = None,
 ) -> BatchResult:
     """Ingest a batch of ``B`` ops — bit-identical to the scalar loop.
 
@@ -266,20 +269,34 @@ def apply_op_batch(
         so it runs as a length-B scan over two small rows — every other
         state component is a closed-form segment/scatter op.
 
-    ``extra_visible`` (optional ``(B, B)`` bool, row = observer op, col =
-    writer op) injects extra cross-replica visibility: used by the store
-    layer to emulate a merge cadence finer than the batch (e.g. the
-    synchronous levels' merge-every-op).  Only the strict lower triangle
-    is honoured, so causality within the batch is preserved.
-    ``pend_visible`` (optional ``(B, Q)`` bool) does the same for writes
-    still in the pending ring from *earlier* batches: where True (and the
-    slot is live and on the op's resource) the pending version counts as
-    applied at the op's replica.
+    Merge cadences finer than the batch are injected through the
+    closed-form visibility predicate ``op_index(i) >= apply_index(j)``:
+    ``apply_index`` (``(B,)`` int32, the store layer's emulated
+    sequential apply point per batch write, ``NEVER`` for reads) makes a
+    write visible at *every* replica to batch ops from that op index on,
+    and ``pend_apply`` (``(Q,)`` int32) does the same for writes still
+    in the pending ring from earlier batches.  With ``apply_index=None``
+    the batch has plain scalar-loop semantics (coordinator-only
+    visibility).  No ``(B, B)`` or ``(B, Q)`` mask crosses this API.
+
+    ``visible_version`` (``(B,)`` int32) joins an externally-computed
+    per-op visible version into the replica-visible max — the store
+    layer uses it to fold the pending ring's cadence contribution in
+    O(B + Q) (a scatter + running max over the op timeline) instead of
+    the kernel's general ``(tile, Q)`` sweep; the join is associative,
+    so the result is bit-identical to passing ``pend_apply``.
+
+    ``ingest`` picks the prefix-reduction implementation
+    (``repro.kernels.ops.op_ingest``): ``"dense"`` (default — the exact
+    O(B²)-mask oracle), ``"tiled"`` (jnp block walk, O(B·tile) memory),
+    or ``"pallas"`` (the TPU kernel).  All are bit-identical.
 
     The pending ring matches the sequential loop too: the k-th write of
     the batch takes the k-th free slot (ascending), and writes beyond the
     free capacity are dropped and counted in ``pend_dropped``.
     """
+    from repro.kernels import ops as kernel_ops
+
     c = jnp.asarray(client, jnp.int32)
     p = jnp.asarray(replica, jnp.int32)
     r = jnp.asarray(resource, jnp.int32)
@@ -289,46 +306,30 @@ def apply_op_batch(
 
     is_w = k == WRITE
     idx = jnp.arange(B, dtype=jnp.int32)
-    lower = idx[:, None] > idx[None, :]          # [i, j] : j precedes i
-    same_r = r[:, None] == r[None, :]
-    prior_w_same_r = lower & same_r & is_w[None, :]
-
-    # -- versions (per-resource prefix count) --------------------------------
-    occ = jnp.sum(prior_w_same_r, axis=1, dtype=jnp.int32)
+    pend_kwargs = {}
+    if pend_apply is not None:
+        pend_kwargs = dict(
+            pend_version=state.pend_version,
+            pend_resource=state.pend_resource,
+            pend_live=state.pend_live,
+            pend_apply=jnp.asarray(pend_apply, jnp.int32),
+        )
+    raw0 = state.replica_version[p, r]
+    if visible_version is not None:
+        raw0 = jnp.maximum(raw0, jnp.asarray(visible_version, jnp.int32))
+    occ, raw, floor = kernel_ops.op_ingest(
+        c, p, r, is_w,
+        state.global_version[r],
+        raw0,
+        jnp.maximum(state.read_floor[c, r], state.write_floor[c, r]),
+        op_index=op_index,
+        apply_index=apply_index,
+        impl="dense" if ingest is None else ingest,
+        **pend_kwargs,
+    )
     gcur = state.global_version[r] + occ         # global version seen by op i
     ver_w = gcur + 1                             # version created IF a write
     verw_masked = jnp.where(is_w, ver_w, 0)
-
-    # -- replica-visible version (coordinator prefix + emulated merges) ------
-    vis = prior_w_same_r & (p[:, None] == p[None, :])
-    if extra_visible is not None:
-        vis = vis | (prior_w_same_r & extra_visible)
-    raw = jnp.maximum(
-        state.replica_version[p, r],
-        jnp.max(jnp.where(vis, verw_masked[None, :], 0), axis=1),
-    )
-    if pend_visible is not None:
-        pvis = (
-            pend_visible
-            & state.pend_live[None, :]
-            & (r[:, None] == state.pend_resource[None, :])
-        )
-        raw = jnp.maximum(
-            raw,
-            jnp.max(jnp.where(pvis, state.pend_version[None, :], 0), axis=1),
-        )
-
-    # -- session floors (per-(client, resource) prefix max) ------------------
-    # Along one session's ops on one resource, the floor evolves as the
-    # running max of {initial floor, write versions, raw read versions}:
-    # served = max(raw, floor) folds the floor chain into the prefix max.
-    same_cr = (c[:, None] == c[None, :]) & same_r
-    floor0 = jnp.maximum(state.read_floor[c, r], state.write_floor[c, r])
-    contrib = jnp.where(is_w, ver_w, raw)
-    floor = jnp.maximum(
-        floor0,
-        jnp.max(jnp.where(lower & same_cr, contrib[None, :], 0), axis=1),
-    )
 
     enforce = jnp.asarray(enforce_sessions, bool)
     adm = raw >= floor
@@ -352,15 +353,21 @@ def apply_op_batch(
     )
 
     # -- pending ring: k-th batch write -> k-th free slot --------------------
+    # The k-th-free-slot map is a cumsum rank + scatter (O(Q)), not an
+    # argsort (O(Q log Q)): free slot q has rank cumsum(free)[q] - 1
+    # among the free slots, so scattering q to its rank inverts the map.
     free = jnp.logical_not(state.pend_live)
     n_free = jnp.sum(free.astype(jnp.int32))
     wrank = jnp.cumsum(is_w.astype(jnp.int32)) - 1
-    slot_order = jnp.argsort(
-        jnp.logical_not(free), stable=True
-    ).astype(jnp.int32)
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+    kth_free = (
+        jnp.zeros((Q,), jnp.int32)
+        .at[jnp.where(free, free_rank, Q)]
+        .set(jnp.arange(Q, dtype=jnp.int32), mode="drop")
+    )
     enq = is_w & (wrank < n_free)
     slot = jnp.where(
-        enq, slot_order[jnp.clip(wrank, 0, Q - 1)], jnp.int32(Q)
+        enq, kth_free[jnp.clip(wrank, 0, Q - 1)], jnp.int32(Q)
     )
     dropped = is_w & jnp.logical_not(enq)
     applied0 = jnp.arange(P, dtype=jnp.int32)[None, :] == p[:, None]

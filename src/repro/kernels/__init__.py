@@ -4,6 +4,9 @@
   vclock_audit    — DUOT pairwise causality audit (paper §3.3).
   session_floor   — batched X-STCC session-floor admission check (the
                     serving-path per-op hot loop).
+  op_ingest       — tiled batched op-ingestion prefixes (versions /
+                    visibility / floors) in O(B·tile) memory: the
+                    engine hot path behind ``xstcc.apply_op_batch``.
   policy_score    — (sessions × levels) SLA feasibility/utility scorer
                     for the adaptive consistency control plane.
 """

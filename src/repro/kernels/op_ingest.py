@@ -1,0 +1,406 @@
+"""Tiled op-ingestion: the batched X-STCC hot path in O(B·tile) memory.
+
+``repro.core.xstcc.apply_op_batch`` needs, per op ``i`` of a ``(B,)``
+batch, three prefix reductions over the ops ``j < i`` (and the pending
+ring): the per-resource write count ``occ``, the replica-visible version
+``raw``, and the per-(client, resource) session-floor max ``floor``.
+The dense formulation (``repro.kernels.ref.op_ingest_ref``) materializes
+five ``(B, B)`` relation masks plus a ``(B, Q)`` pending mask — O(B²)
+HBM that caps the batch size the engine can sustain.
+
+This module computes the same reductions by streaming ``(Bi, Bj)``
+blocks of the batch:
+
+  * :func:`op_ingest_pallas` — the Pallas TPU kernel.  A sequential
+    1-D grid ("arbitrary" semantics) walks the lower-triangular tile
+    pairs ``(t, u <= t)``; each row tile accumulates its partial
+    sums/maxima into its output block across the column tiles
+    ``u < t``, then at the diagonal step ``u == t`` folds the
+    intra-tile lower triangle, the pending ring, and the gathered
+    state vectors, and publishes the tile's write versions and floor
+    contributions into a persistent ``(B, 2)`` buffer that later row
+    tiles read — per-step memory is O(tile² + B + Q), never O(B²).
+  * :func:`op_ingest_tiled` — the same block walk as a ``lax.scan``
+    over row tiles in plain jnp (one ``(tile, B)`` strip per step),
+    the fast path on CPU where Pallas runs interpreted.
+
+Visibility inside a tile is the closed-form cadence predicate (no
+precomputed masks cross the API):
+
+    visible(i, j) = is_write(j) ∧ same_resource(i, j) ∧
+                    (coordinator(i) == coordinator(j)
+                     ∨ op_index(i) >= apply_index(j))
+
+with ``apply_index`` = 0 for merge-every-op levels, the stream
+scheduler's emulated apply points for the op-index / timed-Δ cadences,
+and the ``NEVER`` sentinel for plain scalar-loop semantics.  All three
+implementations are integer-exact and must agree bit-for-bit with the
+oracle (``tests/test_op_ingest.py`` sweeps them).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.ref import NEVER, op_ingest_ref
+
+Array = jax.Array
+
+# op meta columns (B, OP_COLS) int32
+CLIENT, REPLICA, RESOURCE, IS_WRITE, GLOBAL0, RAW0, FLOOR0 = 0, 1, 2, 3, 4, 5, 6
+OPIDX, APPLYIDX = 7, 8
+OP_COLS = 16
+# pending meta columns (Q, PEND_COLS) int32
+PVER, PRES, PLIVE, PAPPLY = 0, 1, 2, 3
+PEND_COLS = 8
+# output columns (B, OUT_COLS) int32
+OCC, RAW, FLOOR = 0, 1, 2
+OUT_COLS = 8
+# persistent tile-exchange buffer columns (B, BUF_COLS) int32
+VERW, CONTRIB = 0, 1
+BUF_COLS = 8
+
+
+class _Packed(NamedTuple):
+    meta: Array       # (Bp, OP_COLS) int32
+    pend: Array       # (Qp, PEND_COLS) int32
+    b: int            # true batch length (rows beyond it are inert pads)
+
+
+def pack_ops(
+    client: Array,
+    replica: Array,
+    resource: Array,
+    is_write: Array,
+    g0: Array,
+    raw0: Array,
+    floor0: Array,
+    *,
+    op_index: Array | None = None,
+    apply_index: Array | None = None,
+    pend_version: Array | None = None,
+    pend_resource: Array | None = None,
+    pend_live: Array | None = None,
+    pend_apply: Array | None = None,
+    block: int = 128,
+) -> _Packed:
+    """Pack the per-op vectors into the kernel's meta layout.
+
+    Pads the batch to a ``block`` multiple with inert rows (reads on
+    resource ``-1`` — they match nothing and sort after every real op,
+    so they contribute to no reduction) and the pending ring to a lane
+    multiple with dead slots.  ``apply_index=None`` (scalar semantics)
+    packs the ``NEVER`` sentinel so the cadence predicate is vacuously
+    false.
+    """
+    b = client.shape[0]
+    pad = (-b) % block
+
+    def pcol(x, fill=0):
+        x = jnp.asarray(x, jnp.int32)
+        return jnp.pad(x, (0, pad), constant_values=fill) if pad else x
+
+    bp = b + pad
+    meta = jnp.zeros((bp, OP_COLS), jnp.int32)
+    meta = meta.at[:, CLIENT].set(pcol(client))
+    meta = meta.at[:, REPLICA].set(pcol(replica, -1))
+    meta = meta.at[:, RESOURCE].set(pcol(resource, -1))
+    meta = meta.at[:, IS_WRITE].set(
+        pcol(jnp.asarray(is_write).astype(jnp.int32))
+    )
+    meta = meta.at[:, GLOBAL0].set(pcol(g0))
+    meta = meta.at[:, RAW0].set(pcol(raw0))
+    meta = meta.at[:, FLOOR0].set(pcol(floor0))
+    meta = meta.at[:, OPIDX].set(
+        pcol(jnp.zeros((b,), jnp.int32) if op_index is None else op_index)
+    )
+    meta = meta.at[:, APPLYIDX].set(
+        pcol(
+            jnp.full((b,), NEVER, jnp.int32)
+            if apply_index is None else apply_index,
+            NEVER,
+        )
+    )
+
+    q = 0 if pend_version is None else pend_version.shape[0]
+    qp = max(8, q + (-q) % 8)
+    pend = jnp.zeros((qp, PEND_COLS), jnp.int32)
+    pend = pend.at[:, PRES].set(-1)
+    if q:
+        pend = pend.at[:q, PVER].set(jnp.asarray(pend_version, jnp.int32))
+        pend = pend.at[:q, PRES].set(jnp.asarray(pend_resource, jnp.int32))
+        pend = pend.at[:q, PLIVE].set(
+            jnp.asarray(pend_live).astype(jnp.int32)
+        )
+        pend = pend.at[:q, PAPPLY].set(
+            jnp.full((q,), NEVER, jnp.int32)
+            if pend_apply is None
+            else jnp.asarray(pend_apply, jnp.int32)
+        )
+    return _Packed(meta=meta, pend=pend, b=b)
+
+
+# -- shared tile math (identical jnp ops in the Pallas body and the scan) ----
+
+
+def _pair_parts(rows: Array, cols: Array, prior: Array):
+    """Relation masks for one (rows × cols) block.
+
+    ``prior`` is the order mask (row's global index > col's).  Returns
+    ``(prior_w, vis, floor_mask)``: prior same-resource writes, the
+    cadence-visible subset, and the session-floor (same client &
+    resource) pairs.
+    """
+    same_r = rows[:, RESOURCE][:, None] == cols[:, RESOURCE][None, :]
+    prior_w = prior & same_r & (cols[:, IS_WRITE][None, :] > 0)
+    vis = prior_w & (
+        (rows[:, REPLICA][:, None] == cols[:, REPLICA][None, :])
+        | (rows[:, OPIDX][:, None] >= cols[:, APPLYIDX][None, :])
+    )
+    floor_mask = prior & same_r & (
+        rows[:, CLIENT][:, None] == cols[:, CLIENT][None, :]
+    )
+    return prior_w, vis, floor_mask
+
+
+def _cross_parts(rows: Array, cols: Array, prior: Array, buf: Array):
+    """Partial reductions of one already-finalized column block."""
+    prior_w, vis, floor_mask = _pair_parts(rows, cols, prior)
+    occ_part = jnp.sum(prior_w, axis=1, dtype=jnp.int32)
+    vis_part = jnp.max(jnp.where(vis, buf[:, VERW][None, :], 0), axis=1)
+    floor_part = jnp.max(
+        jnp.where(floor_mask, buf[:, CONTRIB][None, :], 0), axis=1
+    )
+    return occ_part, vis_part, floor_part
+
+
+def _finalize_tile(
+    rows: Array, occ_acc: Array, vis_acc: Array, floor_acc: Array,
+    pend: Array,
+):
+    """Diagonal step: intra-tile triangle + pending ring + state joins.
+
+    ``occ/vis/floor_acc`` are the accumulated cross-tile partials.
+    Returns the tile's final ``(occ, raw, floor)`` plus its
+    ``(verw, contrib)`` buffer row for later tiles.
+    """
+    t = rows.shape[0]
+    iota = functools.partial(jax.lax.broadcasted_iota, jnp.int32, (t, t))
+    prior = iota(0) > iota(1)
+    prior_w, vis, floor_mask = _pair_parts(rows, rows, prior)
+
+    occ = occ_acc + jnp.sum(prior_w, axis=1, dtype=jnp.int32)
+    is_w = rows[:, IS_WRITE] > 0
+    ver_w = rows[:, GLOBAL0] + occ + 1
+    verw = jnp.where(is_w, ver_w, 0)
+
+    vis_max = jnp.maximum(
+        vis_acc, jnp.max(jnp.where(vis, verw[None, :], 0), axis=1)
+    )
+    pvis = (
+        (pend[:, PLIVE][None, :] > 0)
+        & (rows[:, RESOURCE][:, None] == pend[:, PRES][None, :])
+        & (rows[:, OPIDX][:, None] >= pend[:, PAPPLY][None, :])
+    )
+    pend_max = jnp.max(jnp.where(pvis, pend[:, PVER][None, :], 0), axis=1)
+    raw = jnp.maximum(jnp.maximum(rows[:, RAW0], vis_max), pend_max)
+
+    contrib = jnp.where(is_w, ver_w, raw)
+    floor = jnp.maximum(
+        jnp.maximum(rows[:, FLOOR0], floor_acc),
+        jnp.max(jnp.where(floor_mask, contrib[None, :], 0), axis=1),
+    )
+    return occ, raw, floor, verw, contrib
+
+
+# -- Pallas kernel -----------------------------------------------------------
+
+
+def _tri_coords(i):
+    """(t, u) of the i-th step of the lower-triangular (t, u <= t) walk.
+
+    ``t = floor((sqrt(8i+1)-1)/2)`` in f32, then corrected by ±1
+    against the exact integer triangular numbers — f32 rounding error
+    is far below 1 for any realistic tile count, and the correction
+    makes the mapping exact regardless.
+    """
+    i = i.astype(jnp.int32)
+    f = (jnp.sqrt(8.0 * i.astype(jnp.float32) + 1.0) - 1.0) * 0.5
+    t = f.astype(jnp.int32)
+    t = jnp.where(t * (t + 1) // 2 > i, t - 1, t)
+    t = jnp.where((t + 1) * (t + 2) // 2 <= i, t + 1, t)
+    u = i - t * (t + 1) // 2
+    return t, u
+
+
+def _op_ingest_kernel(rows_ref, cols_ref, pend_ref, out_ref, buf_ref,
+                      *, block: int):
+    t, u = _tri_coords(pl.program_id(0))
+
+    @pl.when(u == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, jnp.int32)
+
+    @pl.when(u < t)
+    def _cross():
+        rows = rows_ref[...]
+        cols = cols_ref[...]
+        buf = buf_ref[pl.ds(u * block, block), :]
+        # Every pair of a strictly-cross tile is ordered (row indices
+        # all exceed column indices), so the order mask is just True.
+        occ_p, vis_p, floor_p = _cross_parts(rows, cols, True, buf)
+        out = out_ref[...]
+        out = out.at[:, OCC].set(out[:, OCC] + occ_p)
+        out = out.at[:, RAW].set(jnp.maximum(out[:, RAW], vis_p))
+        out = out.at[:, FLOOR].set(jnp.maximum(out[:, FLOOR], floor_p))
+        out_ref[...] = out
+
+    @pl.when(u == t)
+    def _diag():
+        rows = rows_ref[...]
+        acc = out_ref[...]
+        occ, raw, floor, verw, contrib = _finalize_tile(
+            rows, acc[:, OCC], acc[:, RAW], acc[:, FLOOR], pend_ref[...]
+        )
+        out = jnp.zeros(out_ref.shape, jnp.int32)
+        out = out.at[:, OCC].set(occ)
+        out = out.at[:, RAW].set(raw)
+        out = out.at[:, FLOOR].set(floor)
+        out_ref[...] = out
+        buf = jnp.zeros((block, BUF_COLS), jnp.int32)
+        buf = buf.at[:, VERW].set(verw)
+        buf = buf.at[:, CONTRIB].set(contrib)
+        buf_ref[pl.ds(t * block, block), :] = buf
+
+
+def op_ingest_pallas(
+    packed: _Packed, *, block: int = 128, interpret: bool = False
+) -> tuple[Array, Array, Array]:
+    """Tiled ingest via ``pallas_call``.  Returns ``(occ, raw, floor)``."""
+    meta, pend, b = packed
+    bp = meta.shape[0]
+    qp = pend.shape[0]
+    assert bp % block == 0, f"padded B={bp} must tile into block={block}"
+    nb = bp // block
+
+    row_of = lambda i: (_tri_coords(i)[0], 0)                # noqa: E731
+    col_of = lambda i: (_tri_coords(i)[1], 0)                # noqa: E731
+    out, _ = pl.pallas_call(
+        functools.partial(_op_ingest_kernel, block=block),
+        # One step per ordered tile pair (t, u <= t) — the grid walks
+        # only the lower triangle, nothing is fetched for u > t.
+        grid=(nb * (nb + 1) // 2,),
+        in_specs=[
+            pl.BlockSpec((block, OP_COLS), row_of),
+            pl.BlockSpec((block, OP_COLS), col_of),
+            pl.BlockSpec((qp, PEND_COLS), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, OUT_COLS), row_of),
+            pl.BlockSpec((bp, BUF_COLS), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, OUT_COLS), jnp.int32),
+            jax.ShapeDtypeStruct((bp, BUF_COLS), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            # Row tiles accumulate across column steps and read buffer
+            # rows published by earlier diagonal steps: strict order.
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(meta, meta, pend)
+    return out[:b, OCC], out[:b, RAW], out[:b, FLOOR]
+
+
+# -- jnp tiled twin (the CPU fast path) --------------------------------------
+
+
+def op_ingest_tiled(packed: _Packed, *, block: int = 256):
+    """The kernel's block walk as a ``lax.scan`` over tile *pairs*.
+
+    Walks the same lower-triangular ``(t, u <= t)`` tile-pair sequence
+    as the Pallas grid — a ``lax.switch`` picks the cross-tile partial
+    step or the diagonal finalize step — so only the ~B²/2 ordered
+    pairs are ever touched and every step works on ``(block, block)``
+    tiles: peak memory O(B·block) for the carried accumulators, never
+    O(B²).
+    """
+    meta, pend, b = packed
+    bp = meta.shape[0]
+    nb = bp // block
+
+    # Static triangular schedule: for each row tile, its cross partials
+    # in column order, then its diagonal finalize (which publishes the
+    # tile's verw/contrib for later row tiles — same order the Pallas
+    # grid executes).
+    ts, us = [], []
+    for t in range(nb):
+        for u in range(t + 1):
+            ts.append(t)
+            us.append(u)
+    schedule = (
+        jnp.asarray(np.asarray(ts, np.int32)),
+        jnp.asarray(np.asarray(us, np.int32)),
+    )
+
+    def cross(carry, t, u):
+        buf, acc, out = carry
+        rows = jax.lax.dynamic_slice(meta, (t * block, 0), (block, OP_COLS))
+        cols = jax.lax.dynamic_slice(meta, (u * block, 0), (block, OP_COLS))
+        bufu = jax.lax.dynamic_slice(buf, (u * block, 0), (block, BUF_COLS))
+        occ_p, vis_p, floor_p = _cross_parts(rows, cols, True, bufu)
+        acct = jax.lax.dynamic_slice(acc, (t * block, 0), (block, 4))
+        acct = acct.at[:, OCC].add(occ_p)
+        acct = acct.at[:, RAW].max(vis_p)
+        acct = acct.at[:, FLOOR].max(floor_p)
+        acc = jax.lax.dynamic_update_slice(acc, acct, (t * block, 0))
+        return buf, acc, out
+
+    def diag(carry, t, u):
+        del u
+        buf, acc, out = carry
+        rows = jax.lax.dynamic_slice(meta, (t * block, 0), (block, OP_COLS))
+        acct = jax.lax.dynamic_slice(acc, (t * block, 0), (block, 4))
+        occ, raw, floor, verw, contrib = _finalize_tile(
+            rows, acct[:, OCC], acct[:, RAW], acct[:, FLOOR], pend
+        )
+        outt = jnp.stack([occ, raw, floor, jnp.zeros_like(occ)], axis=1)
+        out = jax.lax.dynamic_update_slice(out, outt, (t * block, 0))
+        buft = jnp.zeros((block, BUF_COLS), jnp.int32)
+        buft = buft.at[:, VERW].set(verw)
+        buft = buft.at[:, CONTRIB].set(contrib)
+        buf = jax.lax.dynamic_update_slice(buf, buft, (t * block, 0))
+        return buf, acc, out
+
+    def step(carry, tu):
+        t, u = tu
+        carry = jax.lax.cond(
+            u == t,
+            lambda c: diag(c, t, u),
+            lambda c: cross(c, t, u),
+            carry,
+        )
+        return carry, None
+
+    zeros = lambda w: jnp.zeros((bp, w), jnp.int32)          # noqa: E731
+    (_, _, out), _ = jax.lax.scan(
+        step, (zeros(BUF_COLS), zeros(4), zeros(4)), schedule
+    )
+    return out[:b, OCC], out[:b, RAW], out[:b, FLOOR]
+
+
+__all__ = [
+    "pack_ops",
+    "op_ingest_pallas",
+    "op_ingest_tiled",
+    "op_ingest_ref",
+    "NEVER",
+]

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import op_ingest as _oi
 from repro.kernels import policy_score as _ps
 from repro.kernels import session_floor as _sf
 from repro.kernels import vclock_audit as _va
@@ -21,6 +22,75 @@ from repro.kernels import vclock_audit as _va
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def op_ingest(
+    client: jax.Array,     # (B,) int32
+    replica: jax.Array,    # (B,) int32
+    resource: jax.Array,   # (B,) int32
+    is_write: jax.Array,   # (B,) bool
+    g0: jax.Array,         # (B,) int32 — global_version gathered per op
+    raw0: jax.Array,       # (B,) int32 — replica_version gathered per op
+    floor0: jax.Array,     # (B,) int32 — session floor gathered per op
+    *,
+    op_index: jax.Array | None = None,
+    apply_index: jax.Array | None = None,
+    pend_version: jax.Array | None = None,
+    pend_resource: jax.Array | None = None,
+    pend_live: jax.Array | None = None,
+    pend_apply: jax.Array | None = None,
+    impl: str | None = None,
+    block: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched op-ingestion prefixes ``(occ, raw, floor)``.
+
+    Same contract as ``repro.kernels.ref.op_ingest_ref`` (bit-exact) —
+    the three per-op prefix reductions that ``xstcc.apply_op_batch``
+    builds versions, admission, staleness, and floors from.  ``impl``
+    selects the implementation:
+
+      * ``"pallas"`` — the tiled TPU kernel (O(B·block) memory);
+      * ``"tiled"``  — the jnp ``lax.scan`` twin of the kernel, the
+        fast path on CPU where Pallas runs interpreted;
+      * ``"dense"``  — the O(B²) oracle (the PR-1 masks, kept as the
+        fallback and differential baseline);
+      * ``None``     — "pallas" on accelerators, "tiled" on CPU.
+    """
+    if impl is None or impl == "auto":
+        # The Pallas kernel relies on TPU sequential-grid semantics
+        # (cross steps read buffer rows published by earlier diagonal
+        # steps); on every other backend the jnp tile walk is the safe
+        # fast path.
+        impl = "pallas" if jax.default_backend() == "tpu" else "tiled"
+    if op_index is None and (
+        apply_index is not None or pend_apply is not None
+    ):
+        op_index = jnp.zeros(client.shape, jnp.int32)
+    if impl == "dense":
+        return _oi.op_ingest_ref(
+            client, replica, resource, is_write, g0, raw0, floor0,
+            op_index=op_index, apply_index=apply_index,
+            pend_version=pend_version, pend_resource=pend_resource,
+            pend_live=pend_live, pend_apply=pend_apply,
+        )
+    if block is None:
+        # Wider strips amortize the scan overhead on CPU; 128 matches
+        # the TPU lane width for the Pallas grid.
+        block = 256 if impl == "tiled" else 128
+    block = max(1, min(block, client.shape[0]))
+    packed = _oi.pack_ops(
+        client, replica, resource, is_write, g0, raw0, floor0,
+        op_index=op_index, apply_index=apply_index,
+        pend_version=pend_version, pend_resource=pend_resource,
+        pend_live=pend_live, pend_apply=pend_apply, block=block,
+    )
+    if impl == "tiled":
+        return _oi.op_ingest_tiled(packed, block=block)
+    if impl == "pallas":
+        interpret = _on_cpu() if interpret is None else interpret
+        return _oi.op_ingest_pallas(packed, block=block, interpret=interpret)
+    raise ValueError(f"unknown op_ingest impl: {impl!r}")
 
 
 def flash_attention(

@@ -51,6 +51,110 @@ def flash_attention_ref(
     return out.reshape(b, h, s, hd).astype(q.dtype)
 
 
+# Cadence sentinel: an apply index no op index ever reaches ("never
+# visible").  Shared with repro.core.replicated_store's stream scheduler.
+NEVER = 2 ** 30
+
+
+def op_ingest_ref(
+    client: Array,      # (B,) int32
+    replica: Array,     # (B,) int32
+    resource: Array,    # (B,) int32
+    is_write: Array,    # (B,) bool
+    g0: Array,          # (B,) int32 — global_version[resource] per op
+    raw0: Array,        # (B,) int32 — replica_version[replica, resource]
+    floor0: Array,      # (B,) int32 — max(read_floor, write_floor)[c, r]
+    *,
+    op_index: Array | None = None,     # (B,) int32 — global op index g
+    apply_index: Array | None = None,  # (B,) int32 — emulated apply point a
+    pend_version: Array | None = None,   # (Q,) int32
+    pend_resource: Array | None = None,  # (Q,) int32
+    pend_live: Array | None = None,      # (Q,) bool
+    pend_apply: Array | None = None,     # (Q,) int32 — apply point per slot
+) -> tuple[Array, Array, Array]:
+    """Reference batched op-ingestion prefixes (dense O(B²) masks).
+
+    The semantic core of ``repro.core.xstcc.apply_op_batch``: for every
+    op ``i`` of a ``(B,)`` batch, reduce over the ops ``j < i`` that
+    precede it —
+
+      * ``occ[i]``   — per-resource prefix write count (version rank);
+      * ``raw[i]``   — replica-visible version: the gathered
+        ``replica_version`` joined with every *visible* prior batch
+        write and every visible pending-ring write;
+      * ``floor[i]`` — session floor: the initial MR/RYW floor joined
+        with the per-(client, resource) prefix max of prior
+        contributions (write versions / raw read versions).
+
+    Visibility is the closed-form cadence predicate
+
+      ``visible(i, j) = is_write(j) ∧ same_resource ∧
+                        (coordinator(i) == coordinator(j)
+                         ∨ op_index(i) >= apply_index(j))``
+
+    which covers all three merge cadences of the store layer: scalar
+    semantics (``apply_index=None`` — coordinator-only), merge-every-op
+    (``apply_index == 0``), and the op-index cadence / timed-Δ schedule
+    (``apply_index`` = the stream scheduler's emulated apply points,
+    ``NEVER`` for reads).  Pending-ring visibility is the same predicate
+    against the ``(Q,)`` slot vectors — no ``(B, B)`` or ``(B, Q)``
+    matrices cross the API.
+
+    This oracle *does* materialize the dense masks; the Pallas kernel
+    (``repro.kernels.op_ingest``) and its jnp tiled twin compute the
+    same reduction in ``(Bi, Bj)`` blocks with O(B·tile) memory and must
+    match bit-exactly.
+    """
+    c = jnp.asarray(client, jnp.int32)
+    p = jnp.asarray(replica, jnp.int32)
+    r = jnp.asarray(resource, jnp.int32)
+    is_w = jnp.asarray(is_write, bool)
+    b = c.shape[0]
+
+    idx = jnp.arange(b, dtype=jnp.int32)
+    lower = idx[:, None] > idx[None, :]
+    same_r = r[:, None] == r[None, :]
+    prior_w = lower & same_r & is_w[None, :]
+
+    occ = jnp.sum(prior_w, axis=1, dtype=jnp.int32)
+    ver_w = jnp.asarray(g0, jnp.int32) + occ + 1
+    verw_masked = jnp.where(is_w, ver_w, 0)
+
+    vis = prior_w & (p[:, None] == p[None, :])
+    if apply_index is not None:
+        g = jnp.asarray(op_index, jnp.int32)
+        a = jnp.asarray(apply_index, jnp.int32)
+        vis = vis | (prior_w & (g[:, None] >= a[None, :]))
+    raw = jnp.maximum(
+        jnp.asarray(raw0, jnp.int32),
+        jnp.max(jnp.where(vis, verw_masked[None, :], 0), axis=1),
+    )
+    if pend_apply is not None:
+        g = jnp.asarray(op_index, jnp.int32)
+        pvis = (
+            jnp.asarray(pend_live, bool)[None, :]
+            & (r[:, None] == jnp.asarray(pend_resource, jnp.int32)[None, :])
+            & (g[:, None] >= jnp.asarray(pend_apply, jnp.int32)[None, :])
+        )
+        raw = jnp.maximum(
+            raw,
+            jnp.max(
+                jnp.where(
+                    pvis, jnp.asarray(pend_version, jnp.int32)[None, :], 0
+                ),
+                axis=1,
+            ),
+        )
+
+    same_cr = (c[:, None] == c[None, :]) & same_r
+    contrib = jnp.where(is_w, ver_w, raw)
+    floor = jnp.maximum(
+        jnp.asarray(floor0, jnp.int32),
+        jnp.max(jnp.where(lower & same_cr, contrib[None, :], 0), axis=1),
+    )
+    return occ, raw, floor
+
+
 def session_admit_ref(
     replica_version: Array,  # (P, R) int32
     read_floor: Array,       # (C, R) int32

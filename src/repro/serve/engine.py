@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.consistency import ConsistencyLevel
-from repro.core.replicated_store import ReplicatedStore
+from repro.core.replicated_store import ReplicatedStore, ShardedStore
 from repro.models.model_zoo import Model
 
 Array = jax.Array
@@ -373,3 +373,119 @@ class ServingEngine:
 
 def _freshest_replica(replicas: list[ReplicaSnapshot]) -> int:
     return max(range(len(replicas)), key=lambda r: replicas[r].version)
+
+
+class ShardedServingRouter:
+    """Device-sharded admission front door for multi-tenant serving.
+
+    Partitions the session space into ``n_shards`` disjoint tenant
+    groups of ``sessions_per_shard`` sessions; each shard owns a full
+    replicated store (snapshot replicas × shard sessions × the one
+    model resource) stacked along a leading axis
+    (:class:`repro.core.replicated_store.ShardedStore`), so the
+    admission check, reroute, and floor bookkeeping of a whole
+    ``(S, B)`` shard-aligned request batch run as one vmapped program —
+    on a multi-device host the shard axis lays out across the device
+    mesh exactly like :func:`repro.storage.simulator.run_protocol_sharded`.
+
+    Serving batches are read-only, so disjoint session shards share no
+    floor state: routing an ``(S, B)`` batch here is bit-identical to
+    routing the concatenated ``S·B`` sessions through one unsharded
+    :class:`ServingEngine` (``tests/test_op_ingest.py`` asserts it).
+    """
+
+    def __init__(
+        self,
+        n_shards: int,
+        sessions_per_shard: int,
+        max_replicas: int = 8,
+        level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+    ):
+        self.n_shards = n_shards
+        self.sessions_per_shard = sessions_per_shard
+        self.max_replicas = max_replicas
+        self.level = level
+        self._sharded = ShardedStore(
+            ReplicatedStore(
+                max_replicas, sessions_per_shard, 1, level=level,
+                pending_cap=max(8, sessions_per_shard),
+            ),
+            n_shards,
+        )
+        self._st = self._sharded.init()
+        self._versions = np.zeros(max_replicas, np.int64)
+        self.n_replicas = 0
+        self.total_serves = 0
+        self.stale_serves = 0
+        self.reroutes = 0
+
+    def install(self, replica: int, version: int):
+        """Publish a snapshot version on one replica — to every shard.
+
+        Replica ids must be dense (install ``0..n`` in order, or
+        overwrite an existing one) — the routing modulus spans
+        ``n_replicas``, and a gap would let sessions land on a replica
+        that never published (the unsharded engine appends snapshots,
+        so it cannot have gaps either).
+        """
+        if replica >= self.max_replicas:
+            raise RuntimeError(
+                f"replica {replica} >= max_replicas {self.max_replicas}"
+            )
+        if replica > self.n_replicas:
+            raise RuntimeError(
+                f"replica ids must be dense: install replica "
+                f"{self.n_replicas} before {replica}"
+            )
+        self._st = self._sharded.install(
+            self._st, replica=replica, resource=0, version=version
+        )
+        self._versions[replica] = max(self._versions[replica], version)
+        self.n_replicas = max(self.n_replicas, replica + 1)
+
+    def route(
+        self, session: Array, preferred: Array | None = None
+    ) -> tuple[Array, Array]:
+        """Route one ``(S, B)`` batch of shard-local session ids.
+
+        Admission against each shard's store floors, reroute of
+        inadmissible sessions to the freshest replica (the engine-level
+        ``route_batch`` semantics), then the batched observe read that
+        raises the floors.  Returns ``(replica, served)`` as ``(S, B)``
+        arrays.
+        """
+        if self.n_replicas == 0:
+            raise RuntimeError("no replicas published")
+        sid = jnp.asarray(session, jnp.int32)
+        if preferred is None:
+            preferred = sid % self.n_replicas
+        preferred = jnp.asarray(preferred, jnp.int32) % self.n_replicas
+
+        guarded = self.level.is_session_guarded
+        if guarded:
+            def admit(st, s, pref):
+                cl = st.cluster
+                floor = jnp.maximum(
+                    cl.read_floor[s, 0], cl.write_floor[s, 0]
+                )
+                return cl.replica_version[pref, 0] >= floor, floor
+
+            adm, floor = jax.vmap(admit)(self._st, sid, preferred)
+            best = int(np.argmax(self._versions[: self.n_replicas]))
+            if bool(jnp.any(~adm & (self._versions[best] < floor))):
+                raise RuntimeError("no admissible replica for session")
+            replica = jnp.where(adm, preferred, best)
+            self.reroutes += int(jnp.sum(~adm))
+        else:
+            replica = preferred
+        self._st, res = self._sharded.read_batch(
+            self._st, client=sid, replica=replica,
+            resource=jnp.zeros(sid.shape, jnp.int32), record=False,
+            enforce=guarded,
+        )
+        self.total_serves += int(sid.size)
+        self.stale_serves += int(jnp.sum(res.stale))
+        return replica, res.version
+
+    def staleness_rate(self) -> float:
+        return self.stale_serves / max(1, self.total_serves)

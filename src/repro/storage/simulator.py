@@ -187,6 +187,7 @@ def _batched_runner(
     sub: int,
     rem: int,
     emulate: bool,
+    ingest: str = "auto",
 ) -> tuple[ReplicatedStore, Any]:
     """(store, jitted engine) for one batched-protocol configuration.
 
@@ -197,6 +198,7 @@ def _batched_runner(
     store = ReplicatedStore(
         3, n_clients, n_resources, level=level, merge_every=merge_every,
         delta=delta, pending_cap=max(128, 2 * sub), duot_cap=duot_cap,
+        ingest=ingest,
     )
 
     def round_step(carry, ops, step0):
@@ -245,6 +247,7 @@ def run_protocol(
     seed: int = 0,
     batch_size: int = 128,
     audit: bool = True,
+    ingest: str = "auto",
 ) -> dict[str, float]:
     """Run a scaled YCSB stream through the *batched* X-STCC engine.
 
@@ -266,6 +269,11 @@ def run_protocol(
 
     ``audit=False`` skips the end-of-run DUOT audit (severity reported
     as 0) — used by throughput benchmarks to time the engine alone.
+    ``ingest`` selects the op-ingestion implementation (see
+    :class:`repro.core.replicated_store.ReplicatedStore`): ``"auto"``
+    (O(B·tile) tiled/Pallas path) or ``"dense"`` (the O(B²)-mask
+    baseline) — bit-identical, benchmarked against each other in
+    ``benchmarks/bench_protocol.py``.
     """
     stream = _op_stream(w, n_ops, n_clients, n_resources, seed)
     sync_every, _ = merge_cadence(level, merge_every, delta)
@@ -277,7 +285,7 @@ def run_protocol(
 
     store, run = _batched_runner(
         level, n_clients, n_resources, merge_every, delta, duot_cap,
-        sub, rem, emulate,
+        sub, rem, emulate, ingest,
     )
     batched = {
         k: jnp.asarray(stream[k][: n_rounds * sub].reshape(n_rounds, sub))
@@ -310,6 +318,126 @@ def run_protocol(
         "severity": severity,
         "n_reads": int(n_reads),
         "dropped_writes": int(st.cluster.pend_dropped),
+    }
+
+
+def run_protocol_sharded(
+    level: ConsistencyLevel,
+    w: Workload,
+    *,
+    n_shards: int = 2,
+    n_ops: int = 6000,
+    n_clients: int = 16,
+    n_resources: int = 24,
+    merge_every: int = 8,
+    delta: int = 24,
+    duot_cap: int = 2048,
+    seed: int = 0,
+    batch_size: int = 128,
+    audit: bool = False,
+    ingest: str = "auto",
+    use_devices: bool = True,
+) -> dict[str, float]:
+    """Multi-tenant scale-out: disjoint shards of the workload, one axis.
+
+    Partitions the cluster into ``n_shards`` tenant groups — each with
+    ``n_clients / n_shards`` sessions, ``n_resources / n_shards`` key
+    buckets, and its own independent ``n_ops / n_shards``-op YCSB stream
+    (seeded ``seed + shard``) — and ingests all groups *concurrently*:
+    the per-shard engine state is stacked along a leading axis and the
+    jitted runner maps over it with ``jax.vmap``.  When the host
+    exposes at least ``n_shards`` devices (and ``use_devices``), the
+    stacked inputs are laid out across a 1-D device mesh so XLA
+    partitions the shard axis — one tenant group per device.
+
+    Because shards share no replicas, sessions, or resources, the
+    merged telemetry is *exactly* the sum of the per-shard unsharded
+    runs (``tests/test_op_ingest.py`` asserts this), while the wall
+    time stays that of a single shard.
+    """
+    if n_clients % n_shards or n_resources % n_shards or n_ops % n_shards:
+        raise ValueError(
+            f"n_clients={n_clients}, n_resources={n_resources}, and "
+            f"n_ops={n_ops} must all be divisible by n_shards={n_shards}"
+        )
+    s_clients = n_clients // n_shards
+    s_resources = n_resources // n_shards
+    s_ops = n_ops // n_shards
+
+    sync_every, _ = merge_cadence(level, merge_every, delta)
+    emulate = sync_every == 1 or level.is_timed
+    sub = batch_size if emulate else sync_every
+    sub = max(1, min(sub, s_ops))
+    n_rounds = s_ops // sub
+    rem = s_ops - n_rounds * sub
+
+    store, run = _batched_runner(
+        level, s_clients, s_resources, merge_every, delta, duot_cap,
+        sub, rem, emulate, ingest,
+    )
+
+    batched_shards, tail_shards = [], []
+    for s in range(n_shards):
+        stream = _op_stream(w, s_ops, s_clients, s_resources, seed + s)
+        batched = {
+            k: stream[k][: n_rounds * sub].reshape(n_rounds, sub)
+            for k in _OP_COLS
+        }
+        batched["step0"] = np.arange(n_rounds, dtype=np.int32) * sub
+        tail = {k: stream[k][-max(rem, 1):] for k in _OP_COLS}
+        if emulate and store.sync_every > 1:
+            apply_idx = np.asarray(store.schedule_stream(
+                stream["client"], stream["home"], stream["kind"]
+            ))
+            batched["apply_idx"] = apply_idx[: n_rounds * sub].reshape(
+                n_rounds, sub
+            )
+            tail["apply_idx"] = apply_idx[-max(rem, 1):]
+        batched_shards.append(batched)
+        tail_shards.append(tail)
+
+    stack = lambda dicts: {                                   # noqa: E731
+        k: jnp.asarray(np.stack([d[k] for d in dicts]))
+        for k in dicts[0]
+    }
+    batched_s, tail_s = stack(batched_shards), stack(tail_shards)
+
+    devices = jax.devices()
+    if use_devices and n_shards > 1 and len(devices) >= n_shards:
+        # One tenant group per device: lay the shard axis out over a 1-D
+        # mesh; XLA partitions the vmapped program along it.
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+        mesh = Mesh(np.asarray(devices[:n_shards]), ("shard",))
+        sharding = NamedSharding(mesh, PartitionSpec("shard"))
+        put = functools.partial(jax.device_put, device=sharding)
+        batched_s = jax.tree.map(put, batched_s)
+        tail_s = jax.tree.map(put, tail_s)
+
+    st, n_stale, n_viol, n_reads = jax.vmap(run)(batched_s, tail_s)
+
+    severity = 0.0
+    if audit:
+        sev = []
+        for s in range(n_shards):
+            shard_st = jax.tree.map(lambda x, i=s: x[i], st)
+            sev.append(float(
+                store.audit(shard_st, delta=store.delta or 0).severity
+            ))
+        severity = float(np.mean(sev))
+    n_reads_total = int(jnp.sum(n_reads))
+    return {
+        "staleness_rate": float(jnp.sum(n_stale)) / max(1, n_reads_total),
+        "violation_rate": float(jnp.sum(n_viol)) / max(1, n_reads_total),
+        "severity": severity,
+        "n_reads": n_reads_total,
+        "dropped_writes": int(jnp.sum(st.cluster.pend_dropped)),
+        "n_shards": n_shards,
+        "per_shard": {
+            "stale": np.asarray(n_stale).tolist(),
+            "viol": np.asarray(n_viol).tolist(),
+            "reads": np.asarray(n_reads).tolist(),
+        },
     }
 
 

@@ -1,0 +1,69 @@
+"""Property tests for the tiled/Pallas op-ingestion (hypothesis).
+
+Random batches × all six consistency levels × all three merge cadences
+(scalar, merge-every-op, op-index/timed schedules): the O(B·tile)
+ingest implementations are bit-identical to the scalar op loop and to
+the dense oracle, pending-ring overflow included.  Seed-based versions
+of the same sweeps live in ``tests/test_op_ingest.py`` so coverage does
+not depend on the optional dev dependency.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: property tests
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import xstcc  # noqa: E402
+from repro.core.consistency import ConsistencyLevel  # noqa: E402
+
+from test_batch_equivalence import assert_states_equal, scalar_apply  # noqa: E402
+from test_op_ingest import IMPLS, _store_trace  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 16),
+    b=st.integers(1, 96),
+    level=st.sampled_from(list(ConsistencyLevel)),
+    impl=st.sampled_from(IMPLS),
+)
+def test_property_batch_matches_scalar_all_levels(seed, b, level, impl):
+    """Random batches × every level: tiled/Pallas ingest == the scalar
+    op loop, state and per-op outputs, with a tight ring (overflow)."""
+    enforce = level.is_session_guarded
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, 4, b)
+    p = rng.integers(0, 3, b)
+    r = rng.integers(0, 3, b)
+    k = rng.integers(0, 2, b)
+    state0 = xstcc.make_cluster(3, 4, 3, pending_cap=8)
+    want_state, vers, adm, stale, viol, _ = scalar_apply(
+        state0, c, p, r, k, enforce)
+    got = xstcc.apply_op_batch(
+        state0,
+        client=jnp.asarray(c, jnp.int32), replica=jnp.asarray(p, jnp.int32),
+        resource=jnp.asarray(r, jnp.int32), kind=jnp.asarray(k, jnp.int32),
+        enforce_sessions=enforce, ingest=impl)
+    assert_states_equal(want_state, got.state, f"{level} {impl} seed={seed}")
+    np.testing.assert_array_equal(np.asarray(got.version), vers)
+    np.testing.assert_array_equal(np.asarray(got.stale), stale)
+    np.testing.assert_array_equal(np.asarray(got.violation), viol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 16),
+    level=st.sampled_from([
+        ConsistencyLevel.ALL, ConsistencyLevel.X_STCC,
+        ConsistencyLevel.CAUSAL,
+    ]),
+    impl=st.sampled_from(IMPLS),
+)
+def test_property_store_cadences_bit_exact(seed, level, impl):
+    """Random multi-batch store traces across the cadence families:
+    tiled/Pallas == dense, including pending carry-over."""
+    st_d, _ = _store_trace(level, "dense", seed=seed, rounds=2, b=32)
+    st_i, _ = _store_trace(level, impl, seed=seed, rounds=2, b=32)
+    assert_states_equal(st_d.cluster, st_i.cluster, f"{level} {impl}")
