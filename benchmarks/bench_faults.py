@@ -1,0 +1,144 @@
+"""Failure scenarios: outage rate × partition duration × level.
+
+Runs the protocol engine through ``run_protocol_faulty`` under a grid
+of availability schedules — a replica-1 outage covering a fraction of
+the run and a healed 2|1 network partition of varying duration, both
+anchored in op-index space (``schedule_unit``) so every level sees the
+same failure window — and lands the per-level staleness / violation /
+anti-entropy-cost surface in ``BENCH_PROTOCOL.json``.
+
+Rows (name, us_per_call, derived):
+  fault_identity_<LEVEL>         derived = all-up faulty run == run_protocol
+                                 (bit-identity, "True"/"False")
+  fault_<LEVEL>_o<R>_p<D>        derived = staleness rate under outage
+                                 fraction R and partition duration D epochs
+  fault_viol_<LEVEL>_o<R>_p<D>   derived = violation rate
+  fault_ae_gb_<LEVEL>_o<R>_p<D>  derived = anti-entropy traffic, GB
+  fault_cost_<LEVEL>_o<R>_p<D>   derived = total bill (eq. 5) incl. the
+                                 anti-entropy network term (eq. 8)
+
+``REPRO_BENCH_NOPS`` scales the stream (default 3072; CI smoke uses a
+short one).  ``--check`` gates on: bit-identity under the all-up
+schedule for every level, zero X-STCC session violations in *every*
+scenario (after heal the session guarantees hold), anti-entropy
+traffic present whenever a heal happened, and a valid JSON round-trip.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+from benchmarks.common import emit, time_call, write_json
+
+N_OPS = int(os.environ.get("REPRO_BENCH_NOPS", "3072"))
+BATCH = 128
+LEVELS = ("X_STCC", "CAUSAL", "ONE")
+OUTAGE_RATES = (0.0, 0.5)       # fraction of the run replica 1 is down
+PARTITION_FRACS = (0.0, 0.33)   # fraction of the run the 2|1 split holds
+
+
+def _schedules():
+    """[(outage_rate, part_epochs, FaultSchedule | None)] for the grid."""
+    from repro.core import availability as av
+
+    n_ops = max(N_OPS, 4 * BATCH)
+    t = n_ops // BATCH
+    grid = []
+    for rate in OUTAGE_RATES:
+        for frac in PARTITION_FRACS:
+            o_start = max(1, t // 6)
+            o_dur = round(rate * max(0, t - o_start - 1))
+            p_start = t // 2
+            p_dur = round(frac * max(0, t - p_start - 1))
+            sched = av.all_up(t, 3)
+            if o_dur:
+                sched = sched & av.replica_outage(
+                    t, 3, 1, o_start, o_start + o_dur)
+            if p_dur:
+                sched = sched & av.partition(
+                    t, 3, [[0, 1], [2]], p_start, p_start + p_dur)
+            grid.append((rate, p_dur, sched))
+    return n_ops, grid
+
+
+def run() -> dict:
+    from repro.core.consistency import ConsistencyLevel
+    from repro.storage.simulator import run_protocol, run_protocol_faulty
+    from repro.storage.ycsb import WORKLOAD_A
+
+    n_ops, grid = _schedules()
+    results = {"identity": {}, "scenarios": []}
+
+    for name in LEVELS:
+        level = ConsistencyLevel[name]
+        base = run_protocol(
+            level, WORKLOAD_A, n_ops=n_ops, batch_size=BATCH, audit=False)
+        us, allup = time_call(
+            run_protocol_faulty, level, WORKLOAD_A, n_ops=n_ops,
+            batch_size=BATCH, audit=False,
+        )
+        same = all(
+            base[k] == allup[k]
+            for k in ("staleness_rate", "violation_rate", "n_reads")
+        )
+        results["identity"][name] = same
+        emit(f"fault_identity_{name}", us, same)
+
+    for rate, p_dur, sched in grid:
+        for name in LEVELS:
+            level = ConsistencyLevel[name]
+            us, out = time_call(
+                run_protocol_faulty, level, WORKLOAD_A, n_ops=n_ops,
+                batch_size=BATCH, schedule=sched, schedule_unit=BATCH,
+                audit=False,
+            )
+            tag = f"{name}_o{rate}_p{p_dur}"
+            emit(f"fault_{tag}", us, f"{out['staleness_rate']:.4f}")
+            emit(f"fault_viol_{tag}", 0.0, f"{out['violation_rate']:.4f}")
+            emit(f"fault_ae_gb_{tag}", 0.0, f"{out['anti_entropy_gb']:.3e}")
+            emit(f"fault_cost_{tag}", 0.0, f"{out['cost']['total']:.4e}")
+            results["scenarios"].append(
+                dict(level=name, outage=rate, part_epochs=p_dur, **{
+                    k: out[k] for k in (
+                        "staleness_rate", "violation_rate",
+                        "anti_entropy_events", "heal_epochs",
+                    )
+                })
+            )
+    return results
+
+
+def check() -> int:
+    """CI smoke: run, persist JSON, gate on the failure semantics."""
+    import json
+
+    results = run()
+    path = write_json()
+    json.loads(path.read_text())   # must round-trip
+    bad = []
+    for name, same in results["identity"].items():
+        if not same:
+            bad.append(f"all-up faulty run diverges from run_protocol "
+                       f"for {name}")
+    for s in results["scenarios"]:
+        if s["level"] == "X_STCC" and s["violation_rate"] > 0:
+            bad.append(f"X-STCC served session violations under "
+                       f"o{s['outage']}/p{s['part_epochs']}")
+        if s["heal_epochs"] and s["anti_entropy_events"] == 0:
+            bad.append(f"{s['level']} o{s['outage']}/p{s['part_epochs']} "
+                       "healed without anti-entropy traffic")
+    if bad:
+        for b in bad:
+            print(b, file=sys.stderr)
+        return 1
+    print(f"check OK: {len(results['scenarios'])} scenarios -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        sys.exit(check())
+    print("name,us_per_call,derived")
+    run()
+    write_json()

@@ -4,6 +4,8 @@
               the 24-node 3-DC cluster simulation.
   protocol  — batched vs scalar X-STCC engine throughput (ops/s) and
               metric agreement at the evaluation's n_ops=6000.
+  faults    — failure scenarios (outage rate × partition duration ×
+              level): staleness/violations/anti-entropy cost surface.
   policy    — adaptive consistency control plane vs every static level
               on phase-shifting workloads (cost/SLA frontier).
   sync_cost — the technique applied to multi-pod training (traffic +
@@ -24,6 +26,7 @@ from benchmarks.common import emit, write_json
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
+        bench_faults,
         bench_kernels,
         bench_policy,
         bench_protocol,
@@ -36,6 +39,7 @@ def main() -> None:
     for name, mod in [
         ("storage", bench_storage),
         ("protocol", bench_protocol),
+        ("faults", bench_faults),
         ("policy", bench_policy),
         ("sync_cost", bench_sync_cost),
         ("kernels", bench_kernels),

@@ -2,6 +2,8 @@
 
 Modules:
   vector_clock — Fidge/Mattern clock algebra (jit-able).
+  availability — FaultSchedule availability timelines (outages,
+                 partitions, closure, heal detection).
   duot         — Distributed User Operations Table (bounded op log).
   audit        — eq. 1a–1d pair classification + violation detection.
   odg          — Operations Dependency Graph (Timed/Causal/Data edges).
@@ -17,6 +19,7 @@ Modules:
 
 from repro.core import (
     audit,
+    availability,
     cost_model,
     duot,
     odg,
@@ -25,6 +28,7 @@ from repro.core import (
     vector_clock,
     xstcc,
 )
+from repro.core.availability import FaultSchedule
 from repro.core.consistency import (
     PAPER_LEVELS,
     ConsistencyLevel,
@@ -35,6 +39,8 @@ from repro.core.replicated_store import ReplicatedStore, StoreState
 
 __all__ = [
     "audit",
+    "availability",
+    "FaultSchedule",
     "cost_model",
     "duot",
     "odg",

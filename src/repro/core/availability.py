@@ -1,0 +1,265 @@
+"""Availability timelines: replica outages and network partitions.
+
+The failure-scenario axis of the framework.  A :class:`FaultSchedule`
+is a vectorized availability timeline over ``T`` epochs (an epoch is
+one merge round of the batched engine — see
+``repro.storage.simulator.run_protocol_faulty``) and ``R`` replicas:
+
+  * ``up``   — ``(T, R)`` bool, replica liveness per epoch;
+  * ``link`` — ``(T, R, R)`` bool, symmetric pairwise connectivity
+    (``link[t, i, j]`` = the network lets ``i`` and ``j`` exchange
+    merge traffic during epoch ``t``).
+
+Everything downstream consumes the *closed* effective connectivity
+:meth:`closure`: ``conn[t, i, j]`` is True iff a version held at a live
+``i`` can reach a live ``j`` during epoch ``t`` through any chain of
+live, linked replicas — multi-hop gossip relays across the component,
+exactly the RedCloud-style anti-entropy reachability.  The masked merge
+(:func:`repro.core.xstcc.server_merge` with ``up``/``link``) propagates
+pending writes only along that closure; with everything up the closure
+is all-True and the masked fixpoint is bit-identical to the unmasked
+one.
+
+Schedules compose by intersection (``a & b``): a replica is up when
+both schedules say so, a link exists when both allow it — so an outage
+and a partition overlay naturally.  Constructors cover the scenarios
+the benchmarks sweep (:func:`replica_outage`, :func:`partition`), and
+:func:`from_predicates` accepts closed-form predicates over the epoch
+index in the spirit of the PR-3 cadence predicates, so a schedule never
+needs a dense timeline materialized by the caller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+def _closure_one(conn: np.ndarray) -> np.ndarray:
+    """Transitive closure of one boolean connectivity matrix."""
+    c = conn.copy()
+    r = c.shape[0]
+    hops = max(1, int(np.ceil(np.log2(max(r, 2)))))
+    for _ in range(hops):  # repeated squaring: paths double per round
+        c = c | ((c @ c) > 0)
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Per-epoch availability of a replica fleet (see module docstring)."""
+
+    up: np.ndarray    # (T, R) bool
+    link: np.ndarray  # (T, R, R) bool, symmetric, True diagonal
+
+    def __post_init__(self):
+        up = np.asarray(self.up, bool)
+        link = np.asarray(self.link, bool)
+        if up.ndim != 2 or link.shape != up.shape + (up.shape[1],):
+            raise ValueError(
+                f"up must be (T, R) and link (T, R, R); got {up.shape} "
+                f"and {link.shape}"
+            )
+        # Symmetric channel, every replica trivially linked to itself.
+        link = link | link.transpose(0, 2, 1)
+        eye = np.eye(up.shape[1], dtype=bool)
+        link = link | eye[None]
+        if not up.any(axis=1).all():
+            raise ValueError(
+                "schedule leaves no replica up in some epoch; clients "
+                "would have nowhere to route"
+            )
+        object.__setattr__(self, "up", up)
+        object.__setattr__(self, "link", link)
+
+    # -- shape ----------------------------------------------------------------
+
+    @property
+    def n_epochs(self) -> int:
+        return self.up.shape[0]
+
+    @property
+    def n_replicas(self) -> int:
+        return self.up.shape[1]
+
+    def slice(self, n_epochs: int) -> "FaultSchedule":
+        """First ``n_epochs`` epochs (extending with the last epoch)."""
+        t = self.n_epochs
+        if n_epochs <= t:
+            return FaultSchedule(self.up[:n_epochs], self.link[:n_epochs])
+        pad = n_epochs - t
+        return FaultSchedule(
+            np.concatenate([self.up, np.repeat(self.up[-1:], pad, 0)]),
+            np.concatenate([self.link, np.repeat(self.link[-1:], pad, 0)]),
+        )
+
+    # -- derived masks --------------------------------------------------------
+
+    def closure(self) -> np.ndarray:
+        """(T, R, R) closed effective connectivity among live replicas.
+
+        ``conn[t]`` is the transitive closure of
+        ``up ∧ up ∧ link`` with diagonal ``up`` — a down replica reaches
+        nothing, not even itself.  Memoized: ``faulty()``/``heals()``
+        and the drivers all reuse one computation (the instance is
+        frozen, so the masks can't change under the cache).
+        """
+        cached = getattr(self, "_closure", None)
+        if cached is not None:
+            return cached
+        eff = (
+            self.link
+            & self.up[:, :, None]
+            & self.up[:, None, :]
+        )
+        out = np.stack([_closure_one(eff[t]) for t in range(self.n_epochs)])
+        eye = np.eye(self.n_replicas, dtype=bool)
+        out = np.where(eye[None], self.up[:, :, None] & eye[None], out)
+        object.__setattr__(self, "_closure", out)
+        return out
+
+    def faulty(self) -> np.ndarray:
+        """(T,) bool — any replica down or any live pair disconnected."""
+        conn = self.closure()
+        full = self.up.all(axis=1) & conn.all(axis=(1, 2))
+        return ~full
+
+    def heals(self) -> np.ndarray:
+        """(T,) bool — epochs whose connectivity *gained* an edge.
+
+        A heal epoch triggers the anti-entropy catch-up pass: some
+        (holder, replica) pair that could not exchange traffic in epoch
+        ``t-1`` can in ``t``.  Epoch 0 never heals (nothing preceded).
+        """
+        conn = self.closure()
+        gained = np.zeros(self.n_epochs, bool)
+        gained[1:] = (conn[1:] & ~conn[:-1]).any(axis=(1, 2))
+        return gained
+
+    # -- composition ----------------------------------------------------------
+
+    def __and__(self, other: "FaultSchedule") -> "FaultSchedule":
+        if self.up.shape != other.up.shape:
+            raise ValueError(
+                f"schedules disagree on shape: {self.up.shape} vs "
+                f"{other.up.shape}"
+            )
+        return FaultSchedule(self.up & other.up, self.link & other.link)
+
+
+# -- constructors -------------------------------------------------------------
+
+
+def all_up(n_epochs: int, n_replicas: int) -> FaultSchedule:
+    """The no-fault schedule (the bit-identity baseline)."""
+    return FaultSchedule(
+        np.ones((n_epochs, n_replicas), bool),
+        np.ones((n_epochs, n_replicas, n_replicas), bool),
+    )
+
+
+def replica_outage(
+    n_epochs: int, n_replicas: int, replica: int, start: int, stop: int
+) -> FaultSchedule:
+    """Replica ``replica`` is down for epochs ``[start, stop)``."""
+    s = all_up(n_epochs, n_replicas)
+    up = s.up.copy()
+    up[start:stop, replica] = False
+    return FaultSchedule(up, s.link)
+
+
+def partition_link(
+    n_replicas: int, groups: Sequence[Sequence[int]]
+) -> np.ndarray:
+    """(R, R) connectivity matrix of one partition into ``groups``.
+
+    ``groups`` must cover every replica exactly once (a typo'd
+    partition should fail loudly, not produce a plausible wrong mask).
+    The one membership/validation implementation — ``partition``
+    schedules and ``runtime.NodeHealth`` both build on it.
+    """
+    seen = sorted(r for g in groups for r in g)
+    if seen != list(range(n_replicas)):
+        raise ValueError(
+            f"groups {groups} must partition replicas 0..{n_replicas - 1}"
+        )
+    member = np.zeros(n_replicas, np.int32)
+    for gid, g in enumerate(groups):
+        for r in g:
+            member[r] = gid
+    same = member[:, None] == member[None, :]
+    return same | np.eye(n_replicas, dtype=bool)
+
+
+def partition(
+    n_epochs: int,
+    n_replicas: int,
+    groups: Sequence[Sequence[int]],
+    start: int,
+    stop: int,
+) -> FaultSchedule:
+    """Network partition into ``groups`` for epochs ``[start, stop)``.
+
+    Links between replicas of different groups are cut; links inside a
+    group survive.  ``groups`` must cover every replica exactly once —
+    e.g. the classic 2|1 split of a 3-DC fleet is
+    ``partition(T, 3, [[0, 1], [2]], a, b)``.
+    """
+    same = partition_link(n_replicas, groups)
+    s = all_up(n_epochs, n_replicas)
+    link = s.link.copy()
+    link[start:stop] &= same[None]
+    return FaultSchedule(s.up, link)
+
+
+def from_predicates(
+    n_epochs: int,
+    n_replicas: int,
+    up_fn: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None,
+    link_fn: Callable[[np.ndarray, np.ndarray, np.ndarray], np.ndarray]
+    | None = None,
+) -> FaultSchedule:
+    """Closed-form schedule: ``up_fn(t, r)`` and ``link_fn(t, i, j)``.
+
+    The predicates are evaluated vectorized over broadcast index grids
+    (like the PR-3 cadence predicates — no dense timeline on the caller
+    side).  Omitted predicates default to always-True.
+    """
+    t = np.arange(n_epochs)[:, None]
+    r = np.arange(n_replicas)[None, :]
+    up = (
+        np.broadcast_to(np.asarray(up_fn(t, r), bool),
+                        (n_epochs, n_replicas)).copy()
+        if up_fn is not None
+        else np.ones((n_epochs, n_replicas), bool)
+    )
+    if link_fn is not None:
+        tt = np.arange(n_epochs)[:, None, None]
+        i = np.arange(n_replicas)[None, :, None]
+        j = np.arange(n_replicas)[None, None, :]
+        link = np.broadcast_to(
+            np.asarray(link_fn(tt, i, j), bool),
+            (n_epochs, n_replicas, n_replicas),
+        ).copy()
+    else:
+        link = np.ones((n_epochs, n_replicas, n_replicas), bool)
+    return FaultSchedule(up, link)
+
+
+def reroute_ops(home: np.ndarray, up: np.ndarray) -> np.ndarray:
+    """First live replica at or after ``home`` in ring order.
+
+    ``home`` is ``(B,)`` int, ``up`` ``(R,)`` bool; ops whose home
+    replica is down fail over to the next live replica (deterministic —
+    the serving router's failover, in array form).  Works on numpy or
+    jax arrays (the faulty driver calls it inside jit).
+    """
+    r = up.shape[0]
+    offs = np.arange(r, dtype=np.int32)
+    cand = (home[:, None] + offs[None, :]) % r        # (B, R)
+    ok = up[cand]                                     # (B, R)
+    first = ok.argmax(axis=1)                         # first live candidate
+    b = np.arange(home.shape[0])
+    return cand[b, first]

@@ -292,7 +292,7 @@ class ReplicatedStore:
         if op_step0 is not None:
             step0 = jnp.asarray(op_step0, jnp.int32)
             op_index = step0 + jnp.arange(b, dtype=jnp.int32)
-            if self.sync_every == 1:
+            if self.sync_every == 1 and apply_index is None:
                 apply_index = jnp.zeros((b,), jnp.int32)
                 pend_apply = jnp.zeros_like(state.pend_apply)
                 new_pend_apply = jnp.zeros((b,), jnp.int32)
@@ -388,14 +388,62 @@ class ReplicatedStore:
     # -- server side ------------------------------------------------------------
 
     def merge(
-        self, state: StoreState, *, delta: Array | int | None = None
+        self,
+        state: StoreState,
+        *,
+        delta: Array | int | None = None,
+        up: Array | None = None,
+        link: Array | None = None,
     ) -> tuple[StoreState, Array]:
-        """Timed-causal propagation (Δ defaults to the level's cadence)."""
+        """Timed-causal propagation (Δ defaults to the level's cadence).
+
+        ``up``/``link`` mask the propagation to live, connected replica
+        pairs (see :func:`repro.core.xstcc.server_merge`); omitted they
+        reproduce the fully-connected merge bit-exactly.
+        """
         d = self.delta if delta is None else delta
         cluster, n = xstcc.server_merge(
-            state.cluster, delta=d, level=self.level
+            state.cluster, delta=d, level=self.level, up=up, link=link
         )
         return state._replace(cluster=cluster), n
+
+    def merge_faulty(
+        self,
+        state: StoreState,
+        *,
+        up: Array,
+        link: Array,
+        delta: Array | int | None = None,
+    ) -> tuple[StoreState, Array, Array]:
+        """Masked merge that also meters propagation traffic.
+
+        Returns ``(state, n_applied, events)`` where ``events`` counts
+        the (write, replica) deliveries this merge performed — each is
+        one replica-propagation payload for the cost model (eq. 8).
+        The count is the growth of ``pend_applied`` (coordinator copies
+        were stamped at commit time, so only real transfers count).
+        """
+        before = jnp.sum(state.cluster.pend_applied.astype(jnp.int32))
+        new, n = self.merge(state, delta=delta, up=up, link=link)
+        events = (
+            jnp.sum(new.cluster.pend_applied.astype(jnp.int32)) - before
+        )
+        return new, n, events
+
+    def anti_entropy(
+        self, state: StoreState, *, up: Array, link: Array
+    ) -> tuple[StoreState, Array]:
+        """Full reconciliation along the currently-live links.
+
+        The heal-time catch-up pass: with Δ=0 every live pending write
+        is overdue, so one masked fixpoint pushes the whole backlog to
+        every replica its holders can now reach — a healed replica (or
+        a re-joined partition side) converges in one pass.  Returns
+        ``(state, events)`` with ``events`` the deliveries performed,
+        charged as anti-entropy traffic by the failure drivers.
+        """
+        new, _, events = self.merge_faulty(state, up=up, link=link, delta=0)
+        return new, events
 
     def install(
         self,
@@ -574,11 +622,26 @@ class ShardedStore:
         )
 
     def merge(
-        self, state: StoreState, *, delta: Array | int | None = None
+        self,
+        state: StoreState,
+        *,
+        delta: Array | int | None = None,
+        up: Array | None = None,
+        link: Array | None = None,
     ) -> tuple[StoreState, Array]:
+        """Merge every shard (one availability mask shared by all)."""
         return jax.vmap(
-            lambda st: self.store.merge(st, delta=delta)
+            lambda st: self.store.merge(st, delta=delta, up=up, link=link)
         )(state)
+
+    def anti_entropy(
+        self, state: StoreState, *, up: Array, link: Array
+    ) -> tuple[StoreState, Array]:
+        """Heal-time reconciliation on every shard; events summed."""
+        st, ev = jax.vmap(
+            lambda s: self.store.anti_entropy(s, up=up, link=link)
+        )(state)
+        return st, jnp.sum(ev)
 
     def install(
         self, state: StoreState, *, replica: Array | int,

@@ -440,6 +440,8 @@ def server_merge(
     *,
     delta: Array | int,
     level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+    up: Array | None = None,
+    link: Array | None = None,
 ) -> tuple[ClusterState, Array]:
     """Timed-causal propagation step (server side).
 
@@ -459,13 +461,35 @@ def server_merge(
     pass always lands in this merge (the one-at-a-time scan picks it up
     this merge only when the enabler sorts first, else next merge).
 
-    Returns (state, n_applied).
+    ``up`` (``(P,)`` bool) and ``link`` (``(P, P)`` bool, the *closed*
+    connectivity of :meth:`repro.core.availability.FaultSchedule.closure`)
+    mask the propagation: a pending write reaches replica ``p`` only if
+    ``p`` is live and connected to a replica already holding it, and the
+    causal gate is evaluated over the write's reachable component
+    instead of the whole fleet.  Writes therefore apply *partially*
+    under a partition (their slot stays live until every replica has
+    them), and a later merge with healed masks catches the stragglers
+    up — the anti-entropy pass.  With all-True masks (or ``None``) the
+    masked fixpoint is bit-identical to the unmasked one: the reachable
+    component is the whole fleet, so gates, rounds, and updates
+    coincide.
+
+    Returns (state, n_applied) — writes that reached at least one new
+    replica this merge.
     """
     del level  # the order is identical; levels differ in *when* merge runs
     d = jnp.asarray(delta, jnp.int32)
     Q, P = state.pend_applied.shape
     C = state.replica_vc.shape[1]
     R = state.global_version.shape[0]
+    masked = up is not None or link is not None
+    if masked:
+        u = (jnp.ones((P,), bool) if up is None
+             else jnp.asarray(up, bool))
+        ln = (jnp.ones((P, P), bool) if link is None
+              else jnp.asarray(link, bool))
+        # Holders can only hand a write to live, reachable replicas.
+        conn = ln & u[None, :] & u[:, None]
 
     live = state.pend_live
     overdue = jnp.logical_and(live, (state.clock - state.pend_time) >= d)
@@ -481,23 +505,40 @@ def server_merge(
     def body_fn(carry):
         rv, rvc, applied, n, _ = carry
         deps_ok = jnp.all(
-            jnp.all(dep_vc[:, None, :] <= rvc[None, :, :], axis=-1), axis=-1
-        )
-        done = jnp.all(applied, axis=1)
-        elig = live & ~done & (overdue | deps_ok)
+            dep_vc[:, None, :] <= rvc[None, :, :], axis=-1
+        )                                                   # (Q, P)
+        if masked:
+            # reach[w, p]: some holder of w can ship it to p this epoch.
+            reach = jnp.any(
+                applied[:, :, None] & conn[None, :, :], axis=1
+            )                                               # (Q, P)
+            # The causal gate spans the write's reachable component
+            # (deps at already-applied holders hold trivially); with
+            # full connectivity this is the all-replica gate.
+            gate = jnp.all(jnp.where(reach, deps_ok, True), axis=1)
+            elig_at = (
+                live[:, None] & ~applied & reach
+                & (overdue | gate)[:, None]
+            )                                               # (Q, P)
+        else:
+            done = jnp.all(applied, axis=1)
+            elig = live & ~done & (overdue | jnp.all(deps_ok, axis=-1))
+            elig_at = elig[:, None] & ~applied
+        ver_at = jnp.where(elig_at, state.pend_version[:, None], 0)
         upd = (
-            jnp.zeros((R,), jnp.int32)
+            jnp.zeros((R, P), jnp.int32)
             .at[res_safe]
-            .max(jnp.where(elig, state.pend_version, 0), mode="drop")
+            .max(ver_at, mode="drop")
         )
-        rv = jnp.maximum(rv, upd[None, :])
+        rv = jnp.maximum(rv, upd.T)
         vc_new = jnp.max(
-            jnp.where(elig[:, None], state.pend_vc, 0), axis=0
-        )
-        rvc = jnp.maximum(rvc, vc_new[None, :])
-        applied = applied | elig[:, None]
-        n = n + jnp.sum(elig.astype(jnp.int32))
-        return (rv, rvc, applied, n, jnp.any(elig))
+            jnp.where(elig_at[:, :, None], state.pend_vc[:, None, :], 0),
+            axis=0,
+        )                                                   # (P, C)
+        rvc = jnp.maximum(rvc, vc_new)
+        applied = applied | elig_at
+        n = n + jnp.sum(jnp.any(elig_at, axis=1).astype(jnp.int32))
+        return (rv, rvc, applied, n, jnp.any(elig_at))
 
     rv, rvc, applied, n_applied, _ = jax.lax.while_loop(
         cond_fn,

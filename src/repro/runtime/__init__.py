@@ -3,6 +3,7 @@ from repro.runtime.fault_tolerance import (
     NodeHealth,
     RestartManager,
     StragglerMonitor,
+    schedule_from_snapshots,
 )
 from repro.runtime.elastic import rescale_stacked, rescale_train_state
 
@@ -11,6 +12,7 @@ __all__ = [
     "NodeHealth",
     "RestartManager",
     "StragglerMonitor",
+    "schedule_from_snapshots",
     "rescale_stacked",
     "rescale_train_state",
 ]

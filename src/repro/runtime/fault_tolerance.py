@@ -17,15 +17,26 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass
 class NodeHealth:
     """Injectable health source.  Production would wire this to the
-    coordination service heartbeats; tests flip bits."""
+    coordination service heartbeats; tests flip bits.
+
+    Besides per-node liveness it can carry a network partition
+    (:meth:`set_partition`), and it is the canonical driver of the
+    availability masks the rest of the stack consumes: ``up_mask()`` /
+    ``link_mask()`` feed ``repro.core.xstcc.server_merge``'s masked
+    propagation, ``ServingEngine.set_replica_health`` takes the object
+    directly, and :meth:`snapshot`+:func:`schedule_from_snapshots`
+    turn a health history into a
+    :class:`repro.core.availability.FaultSchedule` for the failure
+    drivers."""
 
     n_nodes: int
     heartbeat_timeout_s: float = 30.0
@@ -34,6 +45,7 @@ class NodeHealth:
         now = time.time()
         self.last_heartbeat = [now] * self.n_nodes
         self.forced_down: set[int] = set()
+        self._partition: np.ndarray | None = None  # (n, n) link matrix
 
     def beat(self, node: int, now: float | None = None) -> None:
         self.last_heartbeat[node] = time.time() if now is None else now
@@ -52,6 +64,46 @@ class NodeHealth:
             and (now - self.last_heartbeat[i] < self.heartbeat_timeout_s)
             for i in range(self.n_nodes)
         ]
+
+    # -- availability masks ----------------------------------------------------
+
+    def set_partition(self, groups: Sequence[Sequence[int]] | None) -> None:
+        """Declare a network partition (``None`` heals it).
+
+        Validation and membership come from
+        :func:`repro.core.availability.partition_link` — the same
+        implementation the schedule constructors use, so health-driven
+        and schedule-driven masks cannot diverge."""
+        from repro.core.availability import partition_link
+
+        self._partition = (
+            None if groups is None
+            else partition_link(self.n_nodes, groups)
+        )
+
+    def up_mask(self, now: float | None = None) -> np.ndarray:
+        """(n_nodes,) bool liveness — the ``up`` mask of the masked merge."""
+        return np.asarray(self.alive(now), bool)
+
+    def link_mask(self) -> np.ndarray:
+        """(n_nodes, n_nodes) bool connectivity from the partition state."""
+        if self._partition is None:
+            return np.ones((self.n_nodes, self.n_nodes), bool)
+        return self._partition.copy()
+
+    def snapshot(self, now: float | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """One availability epoch: ``(up, link)`` as of ``now``."""
+        return self.up_mask(now), self.link_mask()
+
+
+def schedule_from_snapshots(snapshots: Sequence[tuple[np.ndarray, np.ndarray]]):
+    """Stack :meth:`NodeHealth.snapshot` epochs into a FaultSchedule."""
+    from repro.core.availability import FaultSchedule
+
+    return FaultSchedule(
+        np.stack([s[0] for s in snapshots]),
+        np.stack([s[1] for s in snapshots]),
+    )
 
 
 @dataclasses.dataclass
@@ -93,15 +145,29 @@ class StragglerMonitor:
                 out.append(pod)
         return out
 
-    def merge_weights(self) -> jnp.ndarray:
-        """Per-pod weights for the next merge: stragglers excluded, mass
-        redistributed (the Δ-skip).  Shape (n_pods,), sums to n_pods."""
+    def up_mask(self) -> np.ndarray:
+        """(n_pods,) bool — stragglers dropped from the next merge.
+
+        This is the availability mask ``SyncEngine.merge(params, sync,
+        up=...)`` consumes (the same mask shape the replicated store's
+        failure path uses): a flagged pod neither contributes to nor
+        receives the merge and catches up at the next one — the Δ-skip.
+        When every pod straggles the mask keeps everyone (a merge of
+        nobody is no merge at all).
+        """
         lag = set(self.stragglers())
-        ok = [i for i in range(self.n_pods) if i not in lag]
-        w = jnp.zeros((self.n_pods,), jnp.float32)
-        if not ok:  # everyone slow: keep everyone
-            return jnp.ones((self.n_pods,), jnp.float32)
-        return w.at[jnp.array(ok)].set(self.n_pods / len(ok))
+        up = np.ones(self.n_pods, bool)
+        if len(lag) < self.n_pods:
+            up[list(lag)] = False
+        return up
+
+    def merge_weights(self) -> jnp.ndarray:
+        """Per-pod weights of :meth:`up_mask` (legacy shape: the mass of
+        the dropped pods redistributed; sums to n_pods)."""
+        up = self.up_mask()
+        return jnp.asarray(
+            up.astype(np.float32) * (self.n_pods / max(1, int(up.sum())))
+        )
 
 
 class RestartManager:
@@ -118,10 +184,16 @@ class RestartManager:
         Session guarantees make this safe against replica lag: a worker
         that already saw version v can never be handed v' < v (monotonic
         read), and a worker restarting right after its own save is
-        guaranteed to see that save (read-your-write)."""
+        guaranteed to see that save (read-your-write).
+
+        Only a *successful* recovery consumes restart budget — a
+        restore that throws leaves the budget untouched so the caller
+        can retry against a healed store.  A restored version that no
+        replica has metadata for is an integrity error and raises
+        (silently resuming from step 0 would replay the whole run over
+        a live checkpoint)."""
         if self.restarts >= self.policy.max_restarts:
             raise RuntimeError("restart budget exhausted")
-        self.restarts += 1
         self.store.propagate()
         params, version, rerouted = self.store.restore(template, session)
         meta_step = None
@@ -131,4 +203,10 @@ class RestartManager:
             if e:
                 meta_step = e["step"]
                 break
-        return params, int(meta_step if meta_step is not None else 0)
+        if meta_step is None:
+            raise RuntimeError(
+                f"restored checkpoint version {version} has no metadata "
+                "entry on any replica; refusing to resume from step 0"
+            )
+        self.restarts += 1
+        return params, int(meta_step)

@@ -72,6 +72,10 @@ class ServingEngine:
         self.stale_serves = 0
         self.total_serves = 0
         self.reroutes = 0
+        self.failovers = 0
+        # Replica liveness (NodeHealth-driven): down replicas are
+        # inadmissible for every session and requests fail over.
+        self.replica_up = np.ones(max_replicas, bool)
         # Per-session overrides of the engine default, plus per-session
         # serve telemetry (stale/violation/serve counts since the last
         # controller consultation) feeding `adapt_sessions`.
@@ -132,6 +136,40 @@ class ServingEngine:
     @property
     def latest_version(self) -> int:
         return max((r.version for r in self.replicas), default=0)
+
+    # -- replica health -----------------------------------------------------------
+
+    def set_replica_health(self, health) -> None:
+        """Drive the liveness mask from a health source.
+
+        ``health`` is either a ``repro.runtime.NodeHealth`` (its
+        ``alive()`` vector is consumed) or a boolean sequence/array of
+        per-replica liveness.  Down replicas become inadmissible in
+        :meth:`route` / :meth:`route_batch` and requests fail over.
+        """
+        if hasattr(health, "alive"):
+            health = health.alive()
+        up = np.asarray(health, bool)
+        if up.shape[0] > self.max_replicas:
+            raise ValueError(
+                f"health covers {up.shape[0]} replicas, engine has "
+                f"max_replicas={self.max_replicas}"
+            )
+        self.replica_up[: up.shape[0]] = up
+
+    def fail_replica(self, replica: int) -> None:
+        self.replica_up[replica] = False
+
+    def heal_replica(self, replica: int) -> None:
+        self.replica_up[replica] = True
+
+    def _up(self) -> np.ndarray:
+        """Liveness mask over the published replicas."""
+        n = len(self.replicas)
+        up = self.replica_up[:n]
+        if not up.any():
+            raise RuntimeError("no live replica to serve from")
+        return up
 
     # -- per-session consistency ---------------------------------------------------
 
@@ -216,19 +254,36 @@ class ServingEngine:
         return max(floor, session.read_floor)
 
     def route(self, session: ServeSession, preferred: int | None = None) -> int:
-        """Pick a replica for this session per *its* consistency level."""
+        """Pick a replica for this session per *its* consistency level.
+
+        A down replica is inadmissible for every session regardless of
+        level: the request fails over to the freshest live replica —
+        the same target :meth:`route_batch` picks, so the scalar and
+        batched paths route identical traffic identically — counted in
+        ``failovers`` and ``reroutes``; the session floors are then
+        checked against the failover target.
+        """
         n = len(self.replicas)
         if n == 0:
             raise RuntimeError("no replicas published")
+        up = self._up()
         idx = (session.session_id if preferred is None else preferred) % n
+        failed_over = not up[idx]
+        if failed_over:
+            idx = _freshest_replica(self.replicas, up)
+            self.failovers += 1
+            self.reroutes += 1
         if self.level_for(session.session_id).is_session_guarded:
             floor = self.session_floor(session)
             if self.replicas[idx].version < floor:
-                # Reroute to the freshest admissible replica (MR/RYW).
-                best = _freshest_replica(self.replicas)
+                best = _freshest_replica(self.replicas, up)
                 if self.replicas[best].version < floor:
                     raise RuntimeError("no admissible replica for session")
-                self.reroutes += 1
+                # Reroute to the freshest live admissible replica
+                # (MR/RYW); a down+inadmissible serve still counts one
+                # reroute, like the batched path's single ~ok.
+                if not failed_over:
+                    self.reroutes += 1
                 idx = best
         return idx
 
@@ -241,14 +296,16 @@ class ServingEngine:
         Routes every session to its preferred replica, runs the batched
         session-floor admission check (the Pallas kernel when
         ``use_kernel``), reroutes inadmissible *session-guarded*
-        sessions to the freshest replica (unguarded sessions take the
-        stale serve, which is counted as their violation telemetry), and
-        registers the serves in the store.  Returns
-        ``(replica_indices, served_versions)``.
+        sessions to the freshest live replica (unguarded sessions take
+        the stale serve, which is counted as their violation telemetry),
+        fails sessions whose preferred replica is down over to the
+        freshest live replica, and registers the serves in the store.
+        Returns ``(replica_indices, served_versions)``.
         """
         n = len(self.replicas)
         if n == 0:
             raise RuntimeError("no replicas published")
+        up = self._up()
         sid = jnp.asarray([self._sid(s) for s in sessions], jnp.int32)
         if preferred is None:
             preferred = jnp.asarray(
@@ -260,6 +317,8 @@ class ServingEngine:
              for s in sessions],
             bool,
         )
+        alive = jnp.asarray(up)[preferred]
+        best = _freshest_replica(self.replicas, up)
         if bool(jnp.any(guarded)):
             # Admission against the store-tracked floors (the Pallas
             # kernel path); the returned state is discarded on purpose —
@@ -279,16 +338,17 @@ class ServingEngine:
             )
             adm = jnp.logical_and(adm, versions[preferred] >= ext)
             adm = jnp.logical_or(adm, ~guarded)
-            best = _freshest_replica(self.replicas)
+            ok = adm & alive
             floor = jnp.maximum(
                 self._store.session_floor(self._st, sid, 0), ext
             )
-            if bool(jnp.any(guarded & ~adm & (versions[best] < floor))):
+            if bool(jnp.any(guarded & ~ok & (versions[best] < floor))):
                 raise RuntimeError("no admissible replica for session")
-            replica = jnp.where(adm, preferred, best)
-            self.reroutes += int(jnp.sum(~adm))
         else:
-            replica = preferred
+            ok = alive
+        replica = jnp.where(ok, preferred, best)
+        self.reroutes += int(jnp.sum(~ok))
+        self.failovers += int(jnp.sum(~alive))
         served = self._observe_batch(sessions, replica, guarded)
         return replica, served
 
@@ -319,10 +379,11 @@ class ServingEngine:
         return res.version
 
     def _observe(self, session: ServeSession, replica: int):
-        v = self.replicas[replica].version
-        self.total_serves += 1
-        if v < self.latest_version:
-            self.stale_serves += 1
+        # Telemetry comes from the store's read result — the same
+        # source `_observe_batch` uses, so the scalar and batched
+        # routing paths can never disagree about one serve (the old
+        # python-side `version < latest_version` check diverged from
+        # the store under enforcement and snapshot overwrites).
         self._st, res = self._store.read_batch(
             self._st,
             client=jnp.asarray([self._sid(session)], jnp.int32),
@@ -331,11 +392,13 @@ class ServingEngine:
             record=False,
             enforce=self.level_for(session.session_id).is_session_guarded,
         )
+        self.total_serves += 1
+        self.stale_serves += int(res.stale[0])
         sid = self._sid(session)
         self._sess_stale[sid] += int(res.stale[0])
         self._sess_viol[sid] += int(res.violation[0])
         self._sess_serves[sid] += 1
-        session.read_floor = max(session.read_floor, v)
+        session.read_floor = max(session.read_floor, int(res.version[0]))
 
     # -- compute ---------------------------------------------------------------
 
@@ -349,8 +412,11 @@ class ServingEngine:
     def decode(self, session: ServeSession, cache, tokens,
                replica: int):
         """Decode continues on the session's bound replica (KV cache
-        affinity); version floors were checked at prefill."""
-        self.total_serves += 1
+        affinity); version floors were checked at prefill.  A decode
+        step is not a routed serve: it never counts toward
+        ``total_serves`` (a serve is counted once per routed request,
+        so the engine-level ``staleness_rate`` and the per-session
+        telemetry share one denominator)."""
         return self._decode(self.replicas[replica].params, cache, tokens)
 
     def generate(self, session: ServeSession, batch: dict, n_tokens: int,
@@ -371,8 +437,14 @@ class ServingEngine:
         return self.stale_serves / max(1, self.total_serves)
 
 
-def _freshest_replica(replicas: list[ReplicaSnapshot]) -> int:
-    return max(range(len(replicas)), key=lambda r: replicas[r].version)
+def _freshest_replica(
+    replicas: list[ReplicaSnapshot], up: np.ndarray | None = None
+) -> int:
+    """Freshest replica, restricted to live ones when ``up`` is given."""
+    live = range(len(replicas)) if up is None else [
+        r for r in range(len(replicas)) if up[r]
+    ]
+    return max(live, key=lambda r: replicas[r].version)
 
 
 class ShardedServingRouter:
@@ -414,10 +486,24 @@ class ShardedServingRouter:
         )
         self._st = self._sharded.init()
         self._versions = np.zeros(max_replicas, np.int64)
+        self.replica_up = np.ones(max_replicas, bool)
         self.n_replicas = 0
         self.total_serves = 0
         self.stale_serves = 0
         self.reroutes = 0
+        self.failovers = 0
+
+    def set_replica_health(self, health) -> None:
+        """Drive the liveness mask (``NodeHealth`` or a bool vector)."""
+        if hasattr(health, "alive"):
+            health = health.alive()
+        up = np.asarray(health, bool)
+        if up.shape[0] > self.max_replicas:
+            raise ValueError(
+                f"health covers {up.shape[0]} replicas, router has "
+                f"max_replicas={self.max_replicas}"
+            )
+        self.replica_up[: up.shape[0]] = up
 
     def install(self, replica: int, version: int):
         """Publish a snapshot version on one replica — to every shard.
@@ -456,10 +542,17 @@ class ShardedServingRouter:
         """
         if self.n_replicas == 0:
             raise RuntimeError("no replicas published")
+        up = self.replica_up[: self.n_replicas]
+        if not up.any():
+            raise RuntimeError("no live replica to serve from")
         sid = jnp.asarray(session, jnp.int32)
         if preferred is None:
             preferred = sid % self.n_replicas
         preferred = jnp.asarray(preferred, jnp.int32) % self.n_replicas
+        alive = jnp.asarray(up)[preferred]
+        # Freshest *live* replica is the failover / reroute target.
+        best = int(np.argmax(np.where(up, self._versions[: self.n_replicas],
+                                      -1)))
 
         guarded = self.level.is_session_guarded
         if guarded:
@@ -471,13 +564,17 @@ class ShardedServingRouter:
                 return cl.replica_version[pref, 0] >= floor, floor
 
             adm, floor = jax.vmap(admit)(self._st, sid, preferred)
-            best = int(np.argmax(self._versions[: self.n_replicas]))
-            if bool(jnp.any(~adm & (self._versions[best] < floor))):
+            ok = adm & alive
+            if bool(jnp.any(~ok & (self._versions[best] < floor))):
                 raise RuntimeError("no admissible replica for session")
-            replica = jnp.where(adm, preferred, best)
-            self.reroutes += int(jnp.sum(~adm))
+            replica = jnp.where(ok, preferred, best)
+            self.reroutes += int(jnp.sum(~ok))
         else:
-            replica = preferred
+            # A failover is a reroute too — same counting as the
+            # unsharded engine for identical traffic.
+            replica = jnp.where(alive, preferred, best)
+            self.reroutes += int(jnp.sum(~alive))
+        self.failovers += int(jnp.sum(~alive))
         self._st, res = self._sharded.read_batch(
             self._st, client=sid, replica=replica,
             resource=jnp.zeros(sid.shape, jnp.int32), record=False,

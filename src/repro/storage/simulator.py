@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import availability as avail_lib
 from repro.core import cost_model, xstcc
 from repro.core import duot as duot_lib
 from repro.core import audit as audit_lib
@@ -438,6 +439,346 @@ def run_protocol_sharded(
             "viol": np.asarray(n_viol).tolist(),
             "reads": np.asarray(n_reads).tolist(),
         },
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _faulty_runner(
+    level: ConsistencyLevel,
+    n_clients: int,
+    n_resources: int,
+    merge_every: int,
+    delta: int,
+    duot_cap: int,
+    sub: int,
+    rem: int,
+    emulate: bool,
+    pending_cap: int,
+    ingest: str = "auto",
+) -> tuple[ReplicatedStore, Any]:
+    """(store, jitted engine) for one failure-scenario configuration.
+
+    The faulty twin of :func:`_batched_runner`: identical batching and
+    cadence emulation, but every round carries its epoch's availability
+    masks — a heal-time anti-entropy pass, down-replica failover for
+    the epoch's ops, an emulation clamp while faults are active, and a
+    *masked* boundary merge whose propagation deliveries are metered.
+    With an all-up schedule every one of those is the identity, so the
+    run is bit-identical to :func:`run_protocol`.
+
+    Kept as a deliberate twin rather than folding :func:`run_protocol`
+    into it: the all-up driver is the throughput benchmark's hot path
+    (``bench_protocol``) and must stay free of mask plumbing, cond'd
+    anti-entropy, and event metering.  The CI fault smoke
+    (``bench_faults --check``) and
+    ``test_faulty_all_up_bit_identical_to_run_protocol`` police the
+    twins against drifting apart.
+    """
+    store = ReplicatedStore(
+        3, n_clients, n_resources, level=level, merge_every=merge_every,
+        delta=delta, pending_cap=pending_cap, duot_cap=duot_cap,
+        ingest=ingest,
+    )
+
+    def round_step(carry, ops, step0, width):
+        st, n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = carry
+        up, conn = ops["up"], ops["conn"]
+        # Heal epoch: reconcile the backlog along the newly-available
+        # links (Δ=0 full catch-up) before serving this epoch's ops.
+        st, ev = jax.lax.cond(
+            ops["heal"],
+            lambda s: store.anti_entropy(s, up=up, link=conn),
+            lambda s: (s, jnp.int32(0)),
+            st,
+        )
+        ae_ev = ae_ev + ev
+        # Ops whose home replica is down fail over to the next live
+        # replica in ring order (the serving router's failover).
+        home = avail_lib.reroute_ops(ops["home"], up)
+        n_fail = n_fail + jnp.sum((home != ops["home"]).astype(jnp.int32))
+        # While a fault is active, the closed-form cadence's "applied
+        # everywhere at the apply index" assumption is wrong — defer
+        # pending-ring visibility to the real masked merges.
+        end = step0 + width
+        st = st._replace(pend_apply=jnp.where(
+            ops["faulty"], jnp.maximum(st.pend_apply, end), st.pend_apply
+        ))
+        st, res = store.apply_batch(
+            st, client=ops["client"], replica=home,
+            resource=ops["resource"], kind=ops["kind"],
+            op_step0=step0 if emulate else None,
+            apply_index=ops.get("apply_idx"),
+        )
+        st, _, ev = store.merge_faulty(st, up=up, link=conn)
+        prop_ev = prop_ev + ev
+        is_read = ops["kind"] == duot_lib.READ
+        return (
+            st,
+            n_stale + jnp.sum(res.stale.astype(jnp.int32)),
+            n_viol + jnp.sum(res.violation.astype(jnp.int32)),
+            n_reads + jnp.sum(is_read.astype(jnp.int32)),
+            ae_ev, prop_ev, n_fail,
+        )
+
+    @jax.jit
+    def run(batched, tail):
+        z = jnp.int32(0)
+        carry = (store.init(), z, z, z, z, z, z)
+        n_rounds = batched["client"].shape[0]
+
+        def step(carry, ops):
+            return round_step(carry, ops, ops["step0"], sub), None
+
+        carry, _ = jax.lax.scan(step, carry, batched)
+        if rem:
+            carry = round_step(carry, tail, jnp.int32(n_rounds * sub), rem)
+        return carry
+
+    return store, run
+
+
+def _fault_epoch_inputs(
+    schedule, n_rounds: int, rem: int,
+) -> tuple[Any, dict[str, np.ndarray], dict[str, np.ndarray]]:
+    """(schedule, per-round mask arrays, tail mask arrays)."""
+    n_epochs = n_rounds + (1 if rem else 0)
+    schedule = schedule.slice(n_epochs)
+    conn = schedule.closure()
+    faulty = schedule.faulty()
+    heals = schedule.heals()
+    per_round = {
+        "up": schedule.up[:n_rounds],
+        "conn": conn[:n_rounds],
+        "faulty": faulty[:n_rounds],
+        "heal": heals[:n_rounds],
+    }
+    t = n_epochs - 1
+    tail = {
+        "up": schedule.up[t],
+        "conn": conn[t],
+        "faulty": faulty[t],
+        "heal": heals[t],
+    }
+    return schedule, per_round, tail
+
+
+def _clamp_apply_idx(
+    apply_idx: np.ndarray, faulty: np.ndarray, sub: int, n_ops: int,
+) -> np.ndarray:
+    """Defer emulated apply points to end-of-epoch in faulty epochs."""
+    out = np.asarray(apply_idx, np.int32).copy()
+    for t in np.flatnonzero(faulty):
+        lo = t * sub
+        hi = min(n_ops, lo + sub)
+        out[lo:hi] = np.maximum(out[lo:hi], hi)
+    return out
+
+
+def run_protocol_faulty(
+    level: ConsistencyLevel,
+    w: Workload,
+    *,
+    schedule=None,
+    n_ops: int = 6000,
+    n_clients: int = 16,
+    n_resources: int = 24,
+    merge_every: int = 8,
+    delta: int = 24,
+    duot_cap: int = 2048,
+    seed: int = 0,
+    batch_size: int = 128,
+    audit: bool = True,
+    ingest: str = "auto",
+    pending_cap: int | None = None,
+    n_shards: int = 1,
+    schedule_unit: int | None = None,
+    cfg: ClusterConfig = PAPER_CLUSTER,
+    pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
+) -> dict[str, Any]:
+    """Run the protocol under replica outages and network partitions.
+
+    ``schedule`` is a :class:`repro.core.availability.FaultSchedule`
+    whose epochs are this run's merge rounds (``None`` = all-up); it is
+    sliced/extended to the run's epoch count.  Because different levels
+    merge at different cadences, a merge round spans a level-dependent
+    number of ops — ``schedule_unit`` (ops per schedule epoch, e.g. the
+    batch size) instead anchors the schedule in *op-index* space, so one
+    schedule describes the same outage window for every level: round
+    ``t`` takes the masks of schedule epoch ``t·sub // schedule_unit``.
+    Per epoch the driver
+
+      * runs the heal-time **anti-entropy pass** when connectivity
+        gained an edge (Δ=0 masked reconciliation, deliveries metered
+        as anti-entropy traffic and billed through eq. 8),
+      * **fails over** ops whose home replica is down to the next live
+        replica,
+      * defers the closed-form cadence emulation to the real **masked
+        merges** while a fault is active (a partition invalidates the
+        "applied everywhere at the apply index" assumption), and
+      * merges along live, connected replica pairs only.
+
+    With an all-up schedule every step above is the identity and the
+    returned metrics are bit-identical to :func:`run_protocol` with the
+    same arguments (asserted in ``tests/test_faults.py`` and by the CI
+    fault smoke).  ``n_shards > 1`` stacks disjoint tenant shards under
+    one shared availability schedule (``ShardedStore`` layout, telemetry
+    summed — the :func:`run_protocol_sharded` scheme).
+
+    The pending ring holds the partition backlog (a write's slot stays
+    live until every replica has it), so ``pending_cap`` defaults to a
+    generous ``max(256, 2·sub, n_writes expected)``; ``dropped_writes``
+    in the result reports any overflow.
+    """
+    if n_clients % n_shards or n_resources % n_shards or n_ops % n_shards:
+        raise ValueError(
+            f"n_clients={n_clients}, n_resources={n_resources}, and "
+            f"n_ops={n_ops} must all be divisible by n_shards={n_shards}"
+        )
+    s_clients = n_clients // n_shards
+    s_resources = n_resources // n_shards
+    s_ops = n_ops // n_shards
+
+    sync_every, _ = merge_cadence(level, merge_every, delta)
+    emulate = sync_every == 1 or level.is_timed
+    sub = batch_size if emulate else sync_every
+    sub = max(1, min(sub, s_ops))
+    n_rounds = s_ops // sub
+    rem = s_ops - n_rounds * sub
+    if pending_cap is None:
+        n_writes = int(round((1.0 - w.read_fraction) * s_ops)) + 1
+        pending_cap = max(256, 2 * sub, n_writes)
+
+    if schedule is None:
+        schedule = avail_lib.all_up(max(1, n_rounds + (1 if rem else 0)), 3)
+    if schedule.n_replicas != 3:
+        raise ValueError(
+            f"schedule covers {schedule.n_replicas} replicas; the paper "
+            "cluster has 3 DCs"
+        )
+    if schedule_unit:
+        # Re-anchor the op-indexed schedule onto this level's rounds.
+        starts = np.arange(n_rounds + (1 if rem else 0)) * sub
+        idx = np.minimum(starts // schedule_unit, schedule.n_epochs - 1)
+        schedule = avail_lib.FaultSchedule(
+            schedule.up[idx], schedule.link[idx]
+        )
+    schedule, masks, tail_masks = _fault_epoch_inputs(schedule, n_rounds, rem)
+
+    store, run = _faulty_runner(
+        level, s_clients, s_resources, merge_every, delta, duot_cap,
+        sub, rem, emulate, pending_cap, ingest,
+    )
+
+    batched_shards, tail_shards = [], []
+    for s in range(n_shards):
+        stream = _op_stream(w, s_ops, s_clients, s_resources, seed + s)
+        batched = {
+            k: stream[k][: n_rounds * sub].reshape(n_rounds, sub)
+            for k in _OP_COLS
+        }
+        batched["step0"] = np.arange(n_rounds, dtype=np.int32) * sub
+        tail = {k: stream[k][-max(rem, 1):] for k in _OP_COLS}
+        if emulate:
+            if store.sync_every > 1:
+                apply_idx = np.asarray(store.schedule_stream(
+                    stream["client"], stream["home"], stream["kind"]
+                ))
+            else:
+                # Synchronous levels: instant visibility in clean
+                # epochs, deferred to the masked merge under faults.
+                apply_idx = np.zeros(s_ops, np.int32)
+            full_faulty = np.concatenate(
+                [masks["faulty"],
+                 np.asarray([tail_masks["faulty"]]) if rem else
+                 np.zeros(0, bool)]
+            )
+            apply_idx = _clamp_apply_idx(apply_idx, full_faulty, sub, s_ops)
+            batched["apply_idx"] = apply_idx[: n_rounds * sub].reshape(
+                n_rounds, sub
+            )
+            tail["apply_idx"] = apply_idx[-max(rem, 1):]
+        batched.update(masks)
+        tail.update(tail_masks)
+        batched_shards.append(batched)
+        tail_shards.append(tail)
+
+    stack = lambda dicts: {                                   # noqa: E731
+        k: jnp.asarray(np.stack([d[k] for d in dicts]))
+        for k in dicts[0]
+    }
+    if n_shards > 1:
+        batched_s, tail_s = stack(batched_shards), stack(tail_shards)
+        out = jax.vmap(run)(batched_s, tail_s)
+        st = out[0]
+        n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = (
+            int(jnp.sum(x)) for x in out[1:]
+        )
+        dropped = int(jnp.sum(st.cluster.pend_dropped))
+    else:
+        b = {k: jnp.asarray(v) for k, v in batched_shards[0].items()}
+        t = {k: jnp.asarray(v) for k, v in tail_shards[0].items()}
+        out = run(b, t)
+        st = out[0]
+        n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = (
+            int(x) for x in out[1:]
+        )
+        dropped = int(st.cluster.pend_dropped)
+
+    severity = 0.0
+    if audit:
+        if n_shards > 1:
+            sev = []
+            for s in range(n_shards):
+                shard_st = jax.tree.map(lambda x, i=s: x[i], st)
+                sev.append(float(
+                    store.audit(shard_st, delta=store.delta or 0).severity
+                ))
+            severity = float(np.mean(sev))
+        else:
+            severity = float(
+                store.audit(st, delta=store.delta or 0).severity
+            )
+
+    stale_rate = n_stale / max(1, n_reads)
+    viol_rate = n_viol / max(1, n_reads)
+
+    # -- eq. 8: the measured failure-path traffic joins the bill ----------
+    row = cfg.row_bytes
+    anti_entropy_gb = ae_ev * row / 1e9
+    propagation_gb = prop_ev * row / 1e9
+    thr, _ = throughput_model(level, w, 64, cfg, stale_rate)
+    runtime_s = n_ops / thr
+    inter_gb, intra_gb = traffic_gb(level, w, n_ops, cfg, stale_rate)
+    bill = cost_model.cost_all(
+        nb_instances=cfg.n_nodes,
+        runtime_hours=runtime_s / 3600.0,
+        hosted_gb=cfg.total_data_gb_after_replication,
+        months=runtime_s / (30 * 24 * 3600.0),
+        io_requests=float(n_ops) * level.write_acks(cfg.replication_factor),
+        inter_dc_gb=inter_gb + anti_entropy_gb,
+        intra_dc_gb=intra_gb,
+        pricing=pricing,
+    )
+    cost = bill.as_dict()
+    cost["anti_entropy_network"] = cost_model.cost_network(
+        inter_dc_gb=anti_entropy_gb, intra_dc_gb=0.0, pricing=pricing
+    )
+    return {
+        "staleness_rate": stale_rate,
+        "violation_rate": viol_rate,
+        "severity": severity,
+        "n_reads": n_reads,
+        "dropped_writes": dropped,
+        "failovers": n_fail,
+        "anti_entropy_events": ae_ev,
+        "propagation_events": prop_ev,
+        "anti_entropy_gb": anti_entropy_gb,
+        "propagation_gb": propagation_gb,
+        "n_epochs": schedule.n_epochs,
+        "faulty_epochs": int(schedule.faulty().sum()),
+        "heal_epochs": int(schedule.heals().sum()),
+        "n_shards": n_shards,
+        "cost": cost,
     }
 
 

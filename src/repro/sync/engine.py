@@ -137,62 +137,105 @@ class SyncEngine:
 
     # -- merges --------------------------------------------------------------
 
-    def merge(self, params, sync: SyncState) -> tuple[Any, SyncState]:
-        """Apply the policy's inter-pod merge to pod-stacked ``params``."""
+    def merge(
+        self, params, sync: SyncState, up: Array | None = None
+    ) -> tuple[Any, SyncState]:
+        """Apply the policy's inter-pod merge to pod-stacked ``params``.
+
+        ``up`` (``(P,)`` bool, ``None`` = all) masks the merge: pods
+        outside the mask drop out — they neither contribute to nor
+        receive this merge's combined parameters, and the protocol
+        bookkeeping propagates only among the live pods (the same
+        availability mask the replicated store's failure path uses,
+        replacing the old ad-hoc straggler weight vector).  A dropped
+        pod keeps its local parameters and catches up at the next merge
+        it participates in — the Δ bound caps how stale it can get.
+        """
         if self.n_pods == 1:
             return params, sync._replace(merges=sync.merges + 1)
         level = self.policy.level
         if level in (ConsistencyLevel.ALL, ConsistencyLevel.TWO):
-            new = self._mean_merge(params)
+            new = self._mean_merge(params, up)
         elif level is ConsistencyLevel.QUORUM:
-            new = self._quorum_merge(params, sync.merges)
+            new = self._quorum_merge(params, sync.merges, up)
         elif level is ConsistencyLevel.ONE:
-            new = self._gossip_merge(params)
+            new = self._gossip_merge(params, up)
         elif level is ConsistencyLevel.CAUSAL:
-            new = self._mean_merge(params)
+            new = self._mean_merge(params, up)
         else:  # TCC / X_STCC
-            new, sync = self._xstcc_merge(params, sync)
-        sync = self._bookkeep(sync, level)
+            new, sync = self._xstcc_merge(params, sync, up)
+        sync = self._bookkeep(sync, level, up)
         return new, sync
 
-    def _mean_merge(self, params):
+    def _pod_weights(self, up: Array | None):
+        """(per-pod f32 weights, live count) for masked reductions."""
+        if up is None:
+            return None, float(self.n_pods)
+        w = jnp.asarray(up, bool).astype(jnp.float32)
+        return w, jnp.maximum(jnp.sum(w), 1.0)
+
+    def _mean_merge(self, params, up: Array | None = None):
+        w, n = self._pod_weights(up)
+
         def m(x):
-            mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
-            return jnp.broadcast_to(mean, x.shape).astype(x.dtype)
+            x32 = x.astype(jnp.float32)
+            if w is None:
+                mean = jnp.mean(x32, axis=0, keepdims=True)
+                return jnp.broadcast_to(mean, x.shape).astype(x.dtype)
+            wb = w.reshape((self.n_pods,) + (1,) * (x.ndim - 1))
+            mean = jnp.sum(x32 * wb, axis=0, keepdims=True) / n
+            return jnp.where(
+                wb > 0, jnp.broadcast_to(mean, x.shape), x32
+            ).astype(x.dtype)
 
         return jax.tree.map(m, params)
 
-    def _quorum_merge(self, params, merges):
+    def _quorum_merge(self, params, merges, up: Array | None = None):
         p = self.n_pods
         q = self.policy.quorum_size(p)
         start = jnp.mod(merges, p)
         idx = jnp.arange(p, dtype=jnp.int32)
         member = jnp.mod(idx - start, p) < q  # rotating quorum membership
+        if up is not None:
+            member = member & jnp.asarray(up, bool)
+            denom = jnp.maximum(jnp.sum(member.astype(jnp.float32)), 1.0)
+        else:
+            denom = q
 
         def m(x):
             mask = member.reshape((p,) + (1,) * (x.ndim - 1))
             x32 = x.astype(jnp.float32)
             msum = jnp.sum(jnp.where(mask, x32, 0.0), axis=0, keepdims=True)
-            merged = msum / q
+            merged = msum / denom
             return jnp.where(mask, merged, x32).astype(x.dtype)
 
         return jax.tree.map(m, params)
 
-    def _gossip_merge(self, params):
+    def _gossip_merge(self, params, up: Array | None = None):
+        # A gossip hop runs only when both endpoints are live.
+        ok = None
+        if up is not None:
+            u = jnp.asarray(up, bool)
+            ok = u & jnp.roll(u, 1)
+
         def m(x):
-            neighbor = jnp.roll(x, 1, axis=0)
-            return ((x.astype(jnp.float32) + neighbor.astype(jnp.float32))
-                    * 0.5).astype(x.dtype)
+            x32 = x.astype(jnp.float32)
+            mixed = (x32 + jnp.roll(x32, 1, axis=0)) * 0.5
+            if ok is None:
+                return mixed.astype(x.dtype)
+            okb = ok.reshape((self.n_pods,) + (1,) * (x.ndim - 1))
+            return jnp.where(okb, mixed, x32).astype(x.dtype)
 
         return jax.tree.map(m, params)
 
-    def _xstcc_merge(self, params, sync: SyncState):
+    def _xstcc_merge(self, params, sync: SyncState, up: Array | None = None):
         method = self.policy.compress_inter_pod
         if method == "none":
-            return self._mean_merge(params), sync
+            return self._mean_merge(params, up), sync
 
         anchor = sync.anchor
         p = self.n_pods
+        w, n_live = self._pod_weights(up)
 
         if method == "int8":
             def m(x, a):
@@ -207,10 +250,20 @@ class SyncEngine:
                 # (all-gather of s8) and combined locally.
                 deq = q.astype(jnp.float32) * scale.reshape(
                     (p,) + (1,) * (x.ndim - 1))
-                mean_delta = jnp.mean(deq, axis=0)
-                merged = a.astype(jnp.float32) + mean_delta
-                return jnp.broadcast_to(merged[None], x.shape).astype(x.dtype), \
-                    merged.astype(a.dtype)
+                if w is None:
+                    mean_delta = jnp.mean(deq, axis=0)
+                    merged = a.astype(jnp.float32) + mean_delta
+                    out = jnp.broadcast_to(merged[None], x.shape)
+                else:
+                    wb = w.reshape((p,) + (1,) * (x.ndim - 1))
+                    mean_delta = jnp.sum(deq * wb, axis=0) / n_live
+                    merged = a.astype(jnp.float32) + mean_delta
+                    out = jnp.where(
+                        wb > 0,
+                        jnp.broadcast_to(merged[None], x.shape),
+                        x.astype(jnp.float32),
+                    )
+                return out.astype(x.dtype), merged.astype(a.dtype)
 
             pairs = jax.tree.map(m, params, anchor)
             new = jax.tree.map(lambda t: t[0], pairs,
@@ -232,11 +285,29 @@ class SyncEngine:
             vals = jnp.take_along_axis(flat, idx, axis=1)
             sparse = jnp.zeros_like(flat).at[
                 jnp.arange(p)[:, None], idx].set(vals)
-            new_resid = (flat - sparse).reshape(x.shape).astype(x.dtype)
-            mean_delta = jnp.mean(sparse, axis=0).reshape(x.shape[1:])
-            merged = a.astype(jnp.float32) + mean_delta
-            return (jnp.broadcast_to(merged[None], x.shape).astype(x.dtype),
-                    merged.astype(a.dtype), new_resid)
+            if w is None:
+                new_resid = (flat - sparse).reshape(x.shape).astype(x.dtype)
+                mean_delta = jnp.mean(sparse, axis=0).reshape(x.shape[1:])
+                merged = a.astype(jnp.float32) + mean_delta
+                out = jnp.broadcast_to(merged[None], x.shape)
+            else:
+                # A dropped pod transmits nothing: its sparse update is
+                # excluded, its residual untouched, its params kept.
+                wf = w[:, None]
+                new_resid = jnp.where(
+                    wf > 0, flat - sparse, r.astype(jnp.float32).reshape(p, -1)
+                ).reshape(x.shape).astype(x.dtype)
+                mean_delta = (
+                    jnp.sum(sparse * wf, axis=0) / n_live
+                ).reshape(x.shape[1:])
+                merged = a.astype(jnp.float32) + mean_delta
+                wb = w.reshape((p,) + (1,) * (x.ndim - 1))
+                out = jnp.where(
+                    wb > 0,
+                    jnp.broadcast_to(merged[None], x.shape),
+                    x.astype(jnp.float32),
+                )
+            return (out.astype(x.dtype), merged.astype(a.dtype), new_resid)
 
         triples = jax.tree.map(m, params, anchor, sync.residual)
         is3 = lambda t: isinstance(t, tuple) and len(t) == 3
@@ -247,7 +318,10 @@ class SyncEngine:
 
     # -- protocol bookkeeping --------------------------------------------------
 
-    def _bookkeep(self, sync: SyncState, level: ConsistencyLevel) -> SyncState:
+    def _bookkeep(
+        self, sync: SyncState, level: ConsistencyLevel,
+        up: Array | None = None,
+    ) -> SyncState:
         """Register this merge in the protocol state.
 
         Data-plane mirror of the merge: each pod *writes* its update at
@@ -259,7 +333,12 @@ class SyncEngine:
         (write-acks span the replica set); causal-family levels
         propagate after, bounded by Δ — so ONE and plain CAUSAL expose
         session violations at the neighbor read, while X-STCC's
-        enforcement repairs them (and counts zero)."""
+        enforcement repairs them (and counts zero).
+
+        ``up`` masks the propagation to the pods in this merge: a
+        dropped pod still commits its local write (it keeps training),
+        but the server-side merge only moves versions among live pods,
+        so its replica goes observably stale until it rejoins."""
         p = self.n_pods
         store = self._store
         st = store.wrap(sync.cluster, sync.duot)
@@ -274,7 +353,7 @@ class SyncEngine:
         )
         if sync_ack:
             # Write acks span the replica set before the write commits.
-            st, _ = store.merge(st, delta=0)
+            st, _ = store.merge(st, delta=0, up=up)
 
         # Batched read at the *neighbor* replica (client mobility).
         # X-STCC enforces the session floors (store.enforce_sessions);
@@ -286,7 +365,7 @@ class SyncEngine:
 
         if not sync_ack:
             # Timed-causal propagation (bounded by Δ for TCC/X-STCC).
-            st, _ = store.merge(st, delta=self.policy.delta_steps)
+            st, _ = store.merge(st, delta=self.policy.delta_steps, up=up)
 
         severity = sync.severity
         if self.policy.audit_every and level.is_causal:

@@ -1,0 +1,494 @@
+"""Failure scenarios: availability schedules, masked merges, the
+faulty protocol driver, serving failover, masked sync merges, and the
+restart-path fixes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import availability as av
+from repro.core import xstcc
+from repro.core.consistency import ConsistencyLevel
+from repro.core.replicated_store import ReplicatedStore
+from repro.storage.simulator import run_protocol, run_protocol_faulty
+from repro.storage.ycsb import WORKLOAD_A
+
+R3 = np.ones((3, 3), bool)
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_outage_and_partition_compose():
+    s = av.replica_outage(8, 3, 1, 2, 5) & av.partition(
+        8, 3, [[0, 1], [2]], 4, 6)
+    assert s.faulty().tolist() == [0, 0, 1, 1, 1, 1, 0, 0]
+    # Two heals: the outage ends at 5 (0-1 reconnect), the partition at 6.
+    assert s.heals().tolist() == [0, 0, 0, 0, 0, 1, 1, 0]
+    c = s.closure()
+    # During the overlap (epoch 4): replica 1 down, 2 partitioned off.
+    assert c[4].astype(int).tolist() == [[1, 0, 0], [0, 0, 0], [0, 0, 1]]
+    assert c[7].all()
+
+
+def test_schedule_closure_is_transitive():
+    # 0-1 and 1-2 linked, 0-2 cut: closure must connect 0 and 2 via 1.
+    def link_fn(t, i, j):
+        return ~(((i == 0) & (j == 2)) | ((i == 2) & (j == 0)))
+
+    s = av.from_predicates(2, 3, link_fn=link_fn)
+    assert s.closure().all()
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="no replica up"):
+        av.FaultSchedule(np.zeros((2, 3), bool), np.ones((2, 3, 3), bool))
+    with pytest.raises(ValueError, match="partition replicas"):
+        av.partition(4, 3, [[0], [2]], 0, 2)
+    with pytest.raises(ValueError, match="must be"):
+        av.FaultSchedule(np.ones((2, 3), bool), np.ones((2, 2, 2), bool))
+
+
+def test_schedule_slice_extends_with_last_epoch():
+    s = av.replica_outage(4, 3, 0, 3, 4).slice(7)
+    assert s.n_epochs == 7
+    assert not s.up[4:, 0].any()        # last epoch (outage) repeated
+    assert s.slice(2).n_epochs == 2
+
+
+def test_reroute_ops_first_live_in_ring_order():
+    up = np.array([True, False, True])
+    got = av.reroute_ops(np.array([0, 1, 2, 1]), up)
+    assert got.tolist() == [0, 2, 2, 2]
+    assert av.reroute_ops(np.array([0, 1, 2]), np.ones(3, bool)).tolist() \
+        == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Masked server merge
+# ---------------------------------------------------------------------------
+
+
+def _store(level=ConsistencyLevel.X_STCC):
+    return ReplicatedStore(3, 4, 4, level=level, merge_every=4, delta=8)
+
+
+def _seeded_state(store):
+    st = store.init()
+    st, _ = store.write_batch(
+        st, client=jnp.asarray([0, 1, 2, 0]), replica=jnp.asarray([0, 1, 2, 0]),
+        resource=jnp.asarray([0, 1, 2, 3]))
+    st, _ = store.read_batch(
+        st, client=jnp.asarray([3]), replica=jnp.asarray([1]),
+        resource=jnp.asarray([0]))
+    return st
+
+
+def test_masked_merge_all_up_bit_identical():
+    store = _store()
+    st = _seeded_state(store)
+    plain, n0 = xstcc.server_merge(st.cluster, delta=2)
+    masked, n1 = xstcc.server_merge(
+        st.cluster, delta=2, up=jnp.ones(3, bool), link=jnp.asarray(R3))
+    assert int(n0) == int(n1)
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(masked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_masked_merge_down_replica_receives_nothing():
+    store = _store()
+    st = _seeded_state(store)
+    up = jnp.asarray([True, True, False])
+    st2, n, ev = store.merge_faulty(st, up=up, link=jnp.asarray(R3), delta=0)
+    rv = np.asarray(st2.cluster.replica_version)
+    # Writes at replicas 0/1 reached each other but not the dead 2.
+    assert rv[1, 0] >= 1 and rv[0, 1] >= 1
+    assert rv[2, 0] == 0 and rv[2, 1] == 0
+    # The write coordinated at 2 propagated nowhere.
+    assert rv[0, 2] == 0 and rv[1, 2] == 0
+    # Slots stay live: the backlog waits for the heal.
+    assert bool(jnp.any(st2.cluster.pend_live))
+    assert int(ev) > 0
+
+
+def test_masked_merge_partition_blocks_cross_traffic_then_heals():
+    store = _store()
+    st = _seeded_state(store)
+    split = np.array([[1, 1, 0], [1, 1, 0], [0, 0, 1]], bool)
+    st2, _, _ = store.merge_faulty(
+        st, up=jnp.ones(3, bool), link=jnp.asarray(split), delta=0)
+    rv = np.asarray(st2.cluster.replica_version)
+    assert rv[2, 0] == 0 and rv[0, 2] == 0    # nothing crossed the split
+    assert rv[1, 0] >= 1                      # same side propagated
+    # Heal: one anti-entropy pass converges every replica.
+    st3, ev = store.anti_entropy(
+        st2, up=jnp.ones(3, bool), link=jnp.asarray(R3))
+    rv3 = np.asarray(st3.cluster.replica_version)
+    assert rv3[2, 0] >= 1 and rv3[0, 2] >= 1
+    assert int(ev) > 0
+    assert not bool(jnp.any(st3.cluster.pend_live))
+
+
+# ---------------------------------------------------------------------------
+# run_protocol_faulty
+# ---------------------------------------------------------------------------
+
+FAULT_KEYS = ("staleness_rate", "violation_rate", "n_reads")
+
+
+@pytest.mark.parametrize("name", ["X_STCC", "TCC", "CAUSAL", "ONE",
+                                  "QUORUM", "ALL"])
+def test_faulty_all_up_bit_identical_to_run_protocol(name):
+    level = ConsistencyLevel[name]
+    base = run_protocol(level, WORKLOAD_A, n_ops=768, audit=False)
+    faulty = run_protocol_faulty(level, WORKLOAD_A, n_ops=768, audit=False)
+    for k in FAULT_KEYS:
+        assert base[k] == faulty[k], (name, k)
+    assert faulty["anti_entropy_events"] == 0
+    assert faulty["failovers"] == 0
+
+
+def _scenario(n_ops=1536, batch=128):
+    t = n_ops // batch
+    return (av.replica_outage(t, 3, 1, 2, 5)
+            & av.partition(t, 3, [[0, 1], [2]], 6, 9))
+
+
+def test_faulty_outage_partition_acceptance():
+    """The acceptance scenario: one replica out, a healed 2|1 split."""
+    n_ops, batch = 1536, 128
+    sched = _scenario(n_ops, batch)
+    out = {}
+    for name in ("X_STCC", "CAUSAL", "ONE"):
+        out[name] = run_protocol_faulty(
+            ConsistencyLevel[name], WORKLOAD_A, n_ops=n_ops,
+            batch_size=batch, schedule=sched, schedule_unit=batch,
+            audit=False,
+        )
+    # X-STCC: session guarantees hold through the faults and the heal.
+    assert out["X_STCC"]["violation_rate"] == 0.0
+    # Weak levels serve MR/RYW violations under the same schedule.
+    assert out["CAUSAL"]["violation_rate"] > 0
+    assert out["ONE"]["violation_rate"] > 0
+    for name, m in out.items():
+        # The heal pass reconciled a nonzero backlog, and its traffic
+        # is charged through eq. 8 into the bill.
+        assert m["heal_epochs"] > 0
+        assert m["anti_entropy_events"] > 0, name
+        assert m["anti_entropy_gb"] > 0
+        assert m["cost"]["anti_entropy_network"] > 0
+        assert m["cost"]["network"] > 0
+        assert m["failovers"] > 0       # ops moved off the dead replica
+        assert m["dropped_writes"] == 0  # ring held the backlog
+
+
+def test_faulty_partition_raises_staleness_for_timed_levels():
+    """A long 2|1 partition starves the cut-off side of propagation:
+    with no failover (every replica is up), reads stuck on the isolated
+    side go observably stale."""
+    n_ops, batch = 1536, 128
+    t = n_ops // batch
+    sched = av.partition(t, 3, [[0, 1], [2]], 2, t - 1)
+    for name in ("X_STCC", "TCC"):
+        level = ConsistencyLevel[name]
+        base = run_protocol(level, WORKLOAD_A, n_ops=n_ops,
+                            batch_size=batch, audit=False)
+        faulty = run_protocol_faulty(
+            level, WORKLOAD_A, n_ops=n_ops, batch_size=batch,
+            schedule=sched, schedule_unit=batch, audit=False)
+        assert faulty["staleness_rate"] > base["staleness_rate"]
+        assert faulty["failovers"] == 0   # everyone is up — no reroutes
+
+
+def test_faulty_outage_moves_traffic_not_correctness():
+    """A replica outage redirects its traffic (failovers > 0) and the
+    healed run still ends with an empty backlog and zero X-STCC
+    violations — staleness may move either way (survivor replicas
+    concentrate reads on fresher copies)."""
+    n_ops, batch = 1536, 128
+    t = n_ops // batch
+    sched = av.replica_outage(t, 3, 1, 2, t - 1)
+    faulty = run_protocol_faulty(
+        ConsistencyLevel.X_STCC, WORKLOAD_A, n_ops=n_ops, batch_size=batch,
+        schedule=sched, schedule_unit=batch, audit=False)
+    assert faulty["failovers"] > 0
+    assert faulty["violation_rate"] == 0.0
+    assert faulty["anti_entropy_events"] > 0   # heal at t-1 reconciled
+
+
+def test_faulty_sharded_runs_and_sums():
+    sched = _scenario()
+    single = run_protocol_faulty(
+        ConsistencyLevel.X_STCC, WORKLOAD_A, n_ops=1536, schedule=sched,
+        schedule_unit=128, audit=False)
+    sharded = run_protocol_faulty(
+        ConsistencyLevel.X_STCC, WORKLOAD_A, n_ops=1536, n_shards=2,
+        schedule=sched, schedule_unit=128, audit=False)
+    assert sharded["n_shards"] == 2
+    assert sharded["n_reads"] > 0
+    assert sharded["violation_rate"] == 0.0
+    assert 0.0 <= sharded["staleness_rate"] <= 1.0
+    assert single["violation_rate"] == 0.0
+
+
+def test_faulty_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="divisible"):
+        run_protocol_faulty(ConsistencyLevel.X_STCC, WORKLOAD_A,
+                            n_ops=100, n_shards=3)
+    with pytest.raises(ValueError, match="3 DCs"):
+        run_protocol_faulty(
+            ConsistencyLevel.X_STCC, WORKLOAD_A, n_ops=256,
+            schedule=av.all_up(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# Serving failover
+# ---------------------------------------------------------------------------
+
+
+def _dummy_engine(level=ConsistencyLevel.X_STCC):
+    from repro.serve.engine import ServingEngine
+
+    class _M:
+        def prefill(self, params, batch):
+            raise NotImplementedError
+
+        def decode_step(self, params, cache, tokens):
+            raise NotImplementedError
+
+    return ServingEngine(_M(), level, jit=False)
+
+
+def test_route_fails_over_off_down_replica():
+    from repro.serve.engine import ServeSession
+
+    eng = _dummy_engine()
+    eng.publish(None, version=2)   # replica 0
+    eng.publish(None, version=1)   # replica 1
+    eng.fail_replica(0)
+    s = ServeSession(0)
+    assert eng.route(s, preferred=0) == 1
+    assert eng.failovers == 1 and eng.reroutes == 1
+    eng.heal_replica(0)
+    assert eng.route(s, preferred=0) == 0
+    assert eng.failovers == 1
+
+
+def test_route_no_live_replica_raises():
+    from repro.serve.engine import ServeSession
+
+    eng = _dummy_engine()
+    eng.publish(None, version=1)
+    eng.fail_replica(0)
+    with pytest.raises(RuntimeError, match="no live replica"):
+        eng.route(ServeSession(0))
+
+
+def test_route_failover_respects_session_floor():
+    from repro.serve.engine import ServeSession
+
+    eng = _dummy_engine()
+    eng.publish(None, version=1)   # replica 0
+    eng.publish(None, version=3)   # replica 1
+    s = ServeSession(0)
+    eng.route_batch([s], preferred=jnp.asarray([1]))   # floor -> 3
+    eng.fail_replica(1)
+    # The only live replica is below the session floor: refuse.
+    with pytest.raises(RuntimeError, match="no admissible replica"):
+        eng.route(s, preferred=1)
+
+
+def test_route_batch_fails_over_down_replicas_all_levels():
+    from repro.serve.engine import ServeSession
+
+    for level in (ConsistencyLevel.X_STCC, ConsistencyLevel.ONE):
+        eng = _dummy_engine(level)
+        eng.publish(None, version=2)
+        eng.publish(None, version=2)
+        eng.fail_replica(0)
+        sessions = [ServeSession(i) for i in range(4)]
+        replica, _ = eng.route_batch(
+            sessions, preferred=jnp.asarray([0, 1, 0, 1]))
+        assert np.asarray(replica).tolist() == [1, 1, 1, 1]
+        assert eng.failovers == 2
+
+
+def test_set_replica_health_from_node_health():
+    from repro.runtime import NodeHealth
+    from repro.serve.engine import ServeSession
+
+    eng = _dummy_engine()
+    eng.publish(None, version=1)
+    eng.publish(None, version=1)
+    h = NodeHealth(2, heartbeat_timeout_s=60.0)
+    h.fail(1)
+    eng.set_replica_health(h)
+    assert eng.route(ServeSession(1), preferred=1) == 0
+    h.recover(1)
+    eng.set_replica_health(h)
+    assert eng.route(ServeSession(1), preferred=1) == 1
+
+
+def test_sharded_router_fails_over():
+    from repro.serve.engine import ShardedServingRouter
+
+    router = ShardedServingRouter(n_shards=2, sessions_per_shard=4,
+                                  level=ConsistencyLevel.X_STCC)
+    router.install(0, 1)
+    router.install(1, 2)
+    router.set_replica_health([False, True])
+    sid = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    replica, served = router.route(sid)
+    assert (np.asarray(replica) == 1).all()
+    assert router.failovers == 4     # the four sessions preferring 0
+    assert (np.asarray(served) == 2).all()
+
+
+# ---------------------------------------------------------------------------
+# Masked sync merges (straggler mask replaces the weight vector)
+# ---------------------------------------------------------------------------
+
+
+def _sync_engine(level="X_STCC", n_pods=4):
+    from repro.core.consistency import policy_for
+    from repro.sync.engine import SyncEngine
+
+    return SyncEngine(policy_for(level, delta_steps=2), n_pods)
+
+
+def test_masked_mean_merge_excludes_down_pod():
+    eng = _sync_engine()
+    params = {"w": jnp.asarray([[0.0], [1.0], [2.0], [7.0]])}
+    sync = eng.init_state(params)
+    up = jnp.asarray([True, True, True, False])
+    new, _ = eng.merge(params, sync, up=up)
+    w = np.asarray(new["w"])[:, 0]
+    np.testing.assert_allclose(w[:3], 1.0)   # mean of 0,1,2 — 7 excluded
+    assert w[3] == 7.0                       # dropped pod keeps its params
+
+
+def test_masked_merge_bookkeeping_leaves_replica_stale():
+    eng = _sync_engine()
+    params = {"w": jnp.zeros((4, 2))}
+    sync = eng.init_state(params)
+    up = jnp.asarray([True, True, True, False])
+    _, sync = eng.merge(params, sync, up=up)
+    rv = np.asarray(sync.cluster.replica_version)[:, 0]
+    # Live pods exchanged versions among themselves, but the dropped
+    # pod's write (the newest — it committed last) reached nobody.
+    assert rv[3] == rv.max()
+    assert rv[:3].max() < rv[3]
+    # Catch-up: the next merge with everyone restores convergence.
+    new, sync2 = eng.merge(params, sync)
+    rv2 = np.asarray(sync2.cluster.replica_version)[:, 0]
+    assert rv2.min() >= rv[3]
+
+
+def test_straggler_up_mask_drives_merge():
+    from repro.runtime import StragglerMonitor
+
+    mon = StragglerMonitor(4, factor=2.0)
+    for pod in range(4):
+        for _ in range(4):
+            mon.record(pod, 1.0)
+    mon.record(3, 10.0)
+    up = mon.up_mask()
+    assert up.tolist() == [True, True, True, False]
+    # Legacy weights are now derived from the mask.
+    w = np.asarray(mon.merge_weights())
+    assert w[3] == 0.0 and w.sum() == pytest.approx(4.0)
+    eng = _sync_engine()
+    params = {"w": jnp.asarray([[0.0], [0.0], [0.0], [9.0]])}
+    sync = eng.init_state(params)
+    new, _ = eng.merge(params, sync, up=jnp.asarray(up))
+    assert np.asarray(new["w"])[3, 0] == 9.0
+
+
+def test_masked_quorum_and_gossip_keep_down_pod_params():
+    for level in ("QUORUM", "ONE"):
+        eng = _sync_engine(level)
+        params = {"w": jnp.asarray([[0.0], [1.0], [2.0], [9.0]])}
+        sync = eng.init_state(params)
+        new, _ = eng.merge(params, sync, up=jnp.asarray([1, 1, 1, 0], bool))
+        assert np.asarray(new["w"])[3, 0] == 9.0
+
+
+# ---------------------------------------------------------------------------
+# Restart path (satellite fixes)
+# ---------------------------------------------------------------------------
+
+
+class _StubStore:
+    """Checkpoint-store stub for budget/metadata edge cases."""
+
+    n_replicas = 2
+
+    def __init__(self, fail_restore=False, meta_step=None):
+        self.fail_restore = fail_restore
+        self.meta_step = meta_step
+
+    def propagate(self):
+        pass
+
+    def restore(self, template, session):
+        if self.fail_restore:
+            raise OSError("replica payload corrupt")
+        return {"w": 0}, 7, False
+
+    def _read_meta(self, r):
+        if self.meta_step is None:
+            return {"entries": {}}
+        return {"entries": {"7": {"step": self.meta_step}}}
+
+
+def test_failed_restore_does_not_burn_budget():
+    from repro.runtime import FailurePolicy, RestartManager
+
+    mgr = RestartManager(_StubStore(fail_restore=True),
+                         FailurePolicy(max_restarts=1))
+    with pytest.raises(OSError):
+        mgr.recover(None, None)
+    assert mgr.restarts == 0
+    # The budget is still available for a retry against a healed store.
+    mgr.store = _StubStore(meta_step=42)
+    params, step = mgr.recover(None, None)
+    assert step == 42 and mgr.restarts == 1
+    with pytest.raises(RuntimeError, match="budget"):
+        mgr.recover(None, None)
+
+
+def test_missing_meta_raises_instead_of_step_zero():
+    from repro.runtime import FailurePolicy, RestartManager
+
+    mgr = RestartManager(_StubStore(meta_step=None),
+                         FailurePolicy(max_restarts=4))
+    with pytest.raises(RuntimeError, match="no metadata"):
+        mgr.recover(None, None)
+    assert mgr.restarts == 0
+
+
+def test_node_health_partition_masks():
+    from repro.runtime import NodeHealth, schedule_from_snapshots
+
+    h = NodeHealth(3, heartbeat_timeout_s=60.0)
+    with pytest.raises(ValueError, match="partition replicas"):
+        h.set_partition([[0, 1]])          # node 2 unaccounted for
+    snaps = [h.snapshot()]
+    h.set_partition([[0, 1], [2]])
+    snaps.append(h.snapshot())
+    h.fail(1)
+    snaps.append(h.snapshot())
+    h.set_partition(None)
+    h.recover(1)
+    snaps.append(h.snapshot())
+    sched = schedule_from_snapshots(snaps)
+    assert sched.n_epochs == 4 and sched.n_replicas == 3
+    assert sched.faulty().tolist() == [False, True, True, False]
+    assert sched.heals().tolist() == [False, False, False, True]
+    c = sched.closure()
+    assert not c[1, 0, 2] and c[1, 0, 1]
+    assert not c[2, 0, 1]                  # replica 1 down
+    assert c[3].all()

@@ -70,3 +70,71 @@ def test_no_admissible_replica_raises(engine_setup):
     s = ServeSession(0, read_floor=99)
     with pytest.raises(RuntimeError):
         eng.route(s)
+
+
+# -- telemetry accounting (scalar path == batch path) -------------------------
+
+
+def _bookkeeping_engine(level):
+    """ServingEngine without a real model (routing/telemetry only)."""
+
+    class _M:
+        def prefill(self, params, batch):
+            raise NotImplementedError
+
+        def decode_step(self, params, cache, tokens):
+            return "logits", "cache"
+
+    return ServingEngine(_M(), level, jit=False)
+
+
+def _publish_overwritten(eng):
+    """v2 on replica 0, v3 on replica 1, then replica 1 rolled back.
+
+    The store's version frontier (monotone, 3) and the python-side
+    snapshot maximum (2 after the rollback) disagree — exactly the case
+    where the old scalar path's `version < latest_version` check
+    diverged from the store's staleness verdict."""
+    eng.publish(None, version=2)              # replica 0
+    eng.publish(None, version=3)              # replica 1
+    eng.publish(None, version=1, replica=1)   # rollback replica 1
+
+
+def test_scalar_and_batch_routing_agree_on_telemetry():
+    import numpy as np
+
+    serves = [(0, 0), (1, 0), (2, 1), (1, 1), (0, 0)]
+    scalar = _bookkeeping_engine(ConsistencyLevel.ONE)
+    _publish_overwritten(scalar)
+    for sid, pref in serves:
+        s = ServeSession(sid)
+        scalar._observe(s, scalar.route(s, preferred=pref))
+    batch = _bookkeeping_engine(ConsistencyLevel.ONE)
+    _publish_overwritten(batch)
+    for sid, pref in serves:
+        batch.route_batch([ServeSession(sid)],
+                          preferred=jnp.asarray([pref]))
+    assert scalar.total_serves == batch.total_serves == len(serves)
+    # Both paths now count staleness from the store's result; serving
+    # v2 after v3 existed *is* stale even though the freshest surviving
+    # snapshot is v2.
+    assert scalar.stale_serves == batch.stale_serves > 0
+    np.testing.assert_array_equal(scalar._sess_stale, batch._sess_stale)
+    np.testing.assert_array_equal(scalar._sess_viol, batch._sess_viol)
+    np.testing.assert_array_equal(scalar._sess_serves, batch._sess_serves)
+
+
+def test_decode_does_not_inflate_staleness_denominator():
+    eng = _bookkeeping_engine(ConsistencyLevel.X_STCC)
+    eng.publish(None, version=1)
+    s = ServeSession(0)
+    eng._observe(s, eng.route(s))
+    before = (eng.total_serves, eng.staleness_rate())
+    for _ in range(5):
+        eng.decode(s, None, None, replica=0)
+    # A serve is counted once per routed request: decode steps change
+    # neither denominator, so the engine-level rate stays equal to the
+    # per-session telemetry rate.
+    assert eng.total_serves == before[0] == 1
+    assert eng.staleness_rate() == before[1]
+    assert int(eng._sess_serves.sum()) == eng.total_serves

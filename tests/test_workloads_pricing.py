@@ -83,6 +83,46 @@ def test_gcp_egress_tiers_piecewise():
     assert flat.marginal_inter_dc_per_gb(1e9) == 0.01
 
 
+def test_tier_edges_continuous_and_monotone():
+    """inter_dc_cost must be continuous and monotone in gb across tier
+    boundaries — for inf-terminated and finite tier lists alike — and
+    the marginal price at a boundary is the tier the next byte bills
+    in."""
+    finite = cost_model.PricingScheme(
+        inter_dc_tiers=((100.0, 0.12), (200.0, 0.10))  # no inf terminator
+    )
+    schemes = [cost_model.GCP_PRICING, finite]
+    for p in schemes:
+        boundaries = [t[0] for t in p.inter_dc_tiers
+                      if t[0] != float("inf")]
+        for b in boundaries:
+            eps = 1e-6
+            below = p.inter_dc_cost(b - eps)
+            at = p.inter_dc_cost(b)
+            above = p.inter_dc_cost(b + eps)
+            # Continuity: crossing the boundary changes cost by at most
+            # the marginal price times the step.
+            assert at - below == pytest.approx(0.0, abs=1e-6)
+            assert above - at == pytest.approx(0.0, abs=1e-6)
+        # Monotone over a grid spanning every tier (incl. overflow past
+        # a finite-terminated list).
+        hi = 2.0 * max(boundaries)
+        grid = np.linspace(0.0, hi, 201)
+        costs = np.array([p.inter_dc_cost(g) for g in grid])
+        assert (np.diff(costs) >= -1e-12).all()
+    # Volume exactly at a tier boundary bills the full tier below it.
+    assert finite.inter_dc_cost(100.0) == pytest.approx(100.0 * 0.12)
+    assert finite.inter_dc_cost(200.0) == pytest.approx(
+        100.0 * 0.12 + 100.0 * 0.10)
+    # Marginal at the boundary: the next GB bills in the next tier …
+    assert finite.marginal_inter_dc_per_gb(100.0) == 0.10
+    assert finite.marginal_inter_dc_per_gb(100.0 - 1e-9) == 0.12
+    # … and past a finite-terminated list, at the last tier's price.
+    assert finite.marginal_inter_dc_per_gb(200.0) == 0.10
+    assert finite.marginal_inter_dc_per_gb(1e9) == 0.10
+    assert cost_model.GCP_PRICING.marginal_inter_dc_per_gb(1024.0) == 0.11
+
+
 def test_cost_network_uses_tiers():
     gcp = cost_model.cost_network(
         inter_dc_gb=2048.0, intra_dc_gb=10.0, pricing=cost_model.GCP_PRICING
