@@ -1,0 +1,193 @@
+"""Geo-replication: region skew × placement plan × consistency level.
+
+Runs the protocol engine through ``run_protocol_geo`` on the paper's
+3-region topology under two client-population skews (uniform and a
+hot-region concentration), meters the (G, G) propagation-traffic
+matrix per level, prices it through the tiered egress matrix, and runs
+the replica-placement planner against the paper's static 4-per-DC
+placement on the same regional demand — all landing in
+``BENCH_PROTOCOL.json``.
+
+Rows (name, us_per_call, derived):
+  geo_identity_<LEVEL>      derived = single-region run_protocol_geo ==
+                            run_protocol (bit-identity, "True"/"False")
+  geo_<LEVEL>_<skew>        derived = staleness rate on the 3-region topo
+  geo_wan_gb_<LEVEL>_<skew> derived = off-diagonal (WAN) traffic, GB
+  geo_lat_<LEVEL>_<skew>    derived = mean RTT-matrix latency, ms
+  geo_cost_<LEVEL>_<skew>   derived = bill with per-pair egress billing
+  geo_plan_<skew>           derived = planner total cost on the demand
+  geo_plan_static_<skew>    derived = static 4-per-DC total cost
+  geo_plan_ok_<skew>        derived = planner never costlier than static
+                            at >= its SLA feasibility ("True"/"False")
+
+``REPRO_BENCH_NOPS`` scales the stream (default 2048; CI smoke uses a
+short one).  ``--check`` gates on: (a) bit-identity with
+``run_protocol`` on the degenerate single-region topology for all six
+policy levels, and (b) the planner's plan costing no more than the
+static paper placement while matching its SLA feasibility, plus a
+valid JSON round-trip.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+from benchmarks.common import emit, time_call, write_json
+
+N_OPS = int(os.environ.get("REPRO_BENCH_NOPS", "2048"))
+BATCH = 128
+LEVELS = ("X_STCC", "CAUSAL", "ONE")
+IDENTITY_LEVELS = ("ONE", "CAUSAL", "TCC", "X_STCC", "QUORUM", "ALL")
+N_CLIENTS = 16
+N_RESOURCES = 24
+
+# Client-population skews: region of client c is skew[c % len(skew)].
+SKEWS = {
+    "uniform": None,                                  # home-replica regions
+    "hot0": (0,) * 11 + (1, 1, 1) + (2, 2),           # ~70% in region 0
+}
+
+
+def _topology(skew_name: str):
+    import dataclasses
+
+    from repro.geo.topology import PAPER_TOPOLOGY
+
+    skew = SKEWS[skew_name]
+    if skew is None:
+        return PAPER_TOPOLOGY
+    return dataclasses.replace(PAPER_TOPOLOGY, client_region=skew)
+
+
+def _plan_vs_static(topology, seed: int = 0):
+    """(planner result, static baseline) on the stream's regional demand."""
+    from repro.geo import placement as pl
+    from repro.policy.sla import SLA_RELAXED
+    from repro.storage.simulator import _op_stream
+    from repro.storage.ycsb import WORKLOAD_A
+
+    stream = _op_stream(
+        WORKLOAD_A, max(N_OPS, 512), N_CLIENTS, N_RESOURCES, seed,
+        topology.n_replicas,
+    )
+    reads, writes = pl.region_demand(
+        stream["client"], stream["kind"], stream["resource"], topology,
+        N_RESOURCES,
+    )
+    plan = pl.plan_placement(topology, reads, writes, SLA_RELAXED)
+    static = pl.evaluate_counts(
+        topology, pl.static_counts(topology, 4), reads, writes, SLA_RELAXED
+    )
+    return plan, static
+
+
+def run() -> dict:
+    from repro.core.consistency import ConsistencyLevel
+    from repro.geo.topology import single_region
+    from repro.storage.simulator import run_protocol, run_protocol_geo
+    from repro.storage.ycsb import WORKLOAD_A
+
+    n_ops = max(N_OPS, 4 * BATCH)
+    results = {"identity": {}, "planner": {}, "scenarios": []}
+
+    degenerate = single_region(3)
+    for name in IDENTITY_LEVELS:
+        level = ConsistencyLevel[name]
+        base = run_protocol(
+            level, WORKLOAD_A, n_ops=n_ops, batch_size=BATCH, audit=False)
+        us, geo = time_call(
+            run_protocol_geo, level, WORKLOAD_A, n_ops=n_ops,
+            batch_size=BATCH, topology=degenerate, audit=False,
+        )
+        same = all(
+            base[k] == geo[k]
+            for k in ("staleness_rate", "violation_rate", "n_reads",
+                      "dropped_writes")
+        )
+        results["identity"][name] = same
+        emit(f"geo_identity_{name}", us, same)
+
+    for skew_name in SKEWS:
+        topo = _topology(skew_name)
+        for name in LEVELS:
+            level = ConsistencyLevel[name]
+            us, out = time_call(
+                run_protocol_geo, level, WORKLOAD_A, n_ops=n_ops,
+                batch_size=BATCH, topology=topo, audit=False,
+            )
+            tag = f"{name}_{skew_name}"
+            wan_gb = sum(
+                out["propagation_gb"][g][h]
+                for g in range(out["n_regions"])
+                for h in range(out["n_regions"]) if g != h
+            )
+            emit(f"geo_{tag}", us, f"{out['staleness_rate']:.4f}")
+            emit(f"geo_wan_gb_{tag}", 0.0, f"{wan_gb:.3e}")
+            emit(f"geo_lat_{tag}", 0.0, f"{out['mean_latency_ms']:.2f}")
+            emit(f"geo_cost_{tag}", 0.0, f"{out['cost']['total_geo']:.4e}")
+            results["scenarios"].append(
+                dict(level=name, skew=skew_name, wan_gb=wan_gb, **{
+                    k: out[k] for k in
+                    ("staleness_rate", "violation_rate", "mean_latency_ms")
+                })
+            )
+
+        us, (plan, static) = time_call(_plan_vs_static, topo)
+        ok = (
+            plan.total_cost <= static["total_cost"] * (1 + 1e-6)
+            and plan.n_feasible >= static["n_feasible"]
+        )
+        results["planner"][skew_name] = {
+            "planner_cost": plan.total_cost,
+            "static_cost": static["total_cost"],
+            "planner_feasible": plan.n_feasible,
+            "static_feasible": static["n_feasible"],
+            "ok": ok,
+        }
+        emit(f"geo_plan_{skew_name}", us, f"{plan.total_cost:.4e}")
+        emit(f"geo_plan_static_{skew_name}", 0.0,
+             f"{static['total_cost']:.4e}")
+        emit(f"geo_plan_ok_{skew_name}", 0.0, ok)
+    return results
+
+
+def check() -> int:
+    """CI smoke: run, persist JSON, gate on the geo semantics."""
+    import json
+
+    results = run()
+    path = write_json()
+    json.loads(path.read_text())   # must round-trip
+    bad = []
+    for name, same in results["identity"].items():
+        if not same:
+            bad.append(
+                f"single-region run_protocol_geo diverges from "
+                f"run_protocol for {name}"
+            )
+    for skew, p in results["planner"].items():
+        if not p["ok"]:
+            bad.append(
+                f"planner plan costlier than static 4-per-DC under "
+                f"{skew}: {p['planner_cost']:.4e} > {p['static_cost']:.4e} "
+                f"(feasible {p['planner_feasible']} vs "
+                f"{p['static_feasible']})"
+            )
+    if bad:
+        for b in bad:
+            print(b, file=sys.stderr)
+        return 1
+    print(
+        f"check OK: {len(results['scenarios'])} scenarios, "
+        f"{len(results['planner'])} planner comparisons -> {path}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        sys.exit(check())
+    print("name,us_per_call,derived")
+    run()
+    write_json()

@@ -42,7 +42,24 @@ def emit(name: str, us_per_call: float, derived) -> str:
 
 
 def write_json(path: pathlib.Path | str = RESULTS_JSON) -> pathlib.Path:
-    """Persist every emitted row as ``{name: {us_per_call, derived}}``."""
+    """Persist every emitted row as ``{name: {us_per_call, derived}}``.
+
+    Merges with the file's existing rows instead of clobbering them: a
+    standalone bench run (``python -m benchmarks.bench_geo``) only
+    *updates* its own rows and every other suite's survive — the file
+    is the cross-PR perf trajectory, not one process's scratch space.
+    Rows re-emitted by this process override their stale versions; an
+    unreadable/non-dict file is treated as empty rather than fatal.
+    """
     path = pathlib.Path(path)
-    path.write_text(json.dumps(RESULTS, indent=2) + "\n")
+    merged: dict = {}
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+            if isinstance(prior, dict):
+                merged = prior
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(RESULTS)
+    path.write_text(json.dumps(merged, indent=2) + "\n")
     return path

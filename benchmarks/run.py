@@ -6,6 +6,9 @@
               metric agreement at the evaluation's n_ops=6000.
   faults    — failure scenarios (outage rate × partition duration ×
               level): staleness/violations/anti-entropy cost surface.
+  geo       — region-aware topology (region skew × placement plan ×
+              level): WAN traffic matrix, per-pair egress bill, and the
+              placement planner vs the paper's static 4-per-DC plan.
   policy    — adaptive consistency control plane vs every static level
               on phase-shifting workloads (cost/SLA frontier).
   sync_cost — the technique applied to multi-pod training (traffic +
@@ -27,6 +30,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
         bench_faults,
+        bench_geo,
         bench_kernels,
         bench_policy,
         bench_protocol,
@@ -40,6 +44,7 @@ def main() -> None:
         ("storage", bench_storage),
         ("protocol", bench_protocol),
         ("faults", bench_faults),
+        ("geo", bench_geo),
         ("policy", bench_policy),
         ("sync_cost", bench_sync_cost),
         ("kernels", bench_kernels),

@@ -26,6 +26,43 @@ from __future__ import annotations
 import dataclasses
 
 
+def tiered_cost(
+    gb: float, flat_per_gb: float, tiers: tuple[tuple[float, float], ...]
+) -> float:
+    """Piecewise-linear volume cost: ``tiers`` of ``(up_to_gb, price)``.
+
+    With no tiers, bills flat at ``flat_per_gb``.  Volume beyond the
+    last threshold bills at the last tier's price (a finite-terminated
+    list behaves as if it ended with ``(inf, last_price)``).
+    """
+    if not tiers:
+        return gb * flat_per_gb
+    cost, prev = 0.0, 0.0
+    for up_to, price in tiers:
+        take = max(0.0, min(gb, up_to) - prev)
+        cost += take * price
+        prev = up_to
+        if gb <= up_to:
+            break
+    else:
+        # Volume past the last threshold bills at the last tier's
+        # price — never silently free.
+        cost += (gb - prev) * tiers[-1][1]
+    return cost
+
+
+def tiered_marginal(
+    gb: float, flat_per_gb: float, tiers: tuple[tuple[float, float], ...]
+) -> float:
+    """$/GB of the tier the volume ``gb`` falls in (flat otherwise)."""
+    if not tiers:
+        return flat_per_gb
+    for up_to, price in tiers:
+        if gb < up_to:
+            return price
+    return tiers[-1][1]
+
+
 @dataclasses.dataclass(frozen=True)
 class PricingScheme:
     """Paper Table 2 (defaults) — all prices in USD.
@@ -48,20 +85,7 @@ class PricingScheme:
 
     def inter_dc_cost(self, gb: float) -> float:
         """Inter-DC transfer cost, tiered when tiers are configured."""
-        if not self.inter_dc_tiers:
-            return gb * self.inter_dc_per_gb
-        cost, prev = 0.0, 0.0
-        for up_to, price in self.inter_dc_tiers:
-            take = max(0.0, min(gb, up_to) - prev)
-            cost += take * price
-            prev = up_to
-            if gb <= up_to:
-                break
-        else:
-            # Volume past the last threshold bills at the last tier's
-            # price — never silently free.
-            cost += (gb - prev) * self.inter_dc_tiers[-1][1]
-        return cost
+        return tiered_cost(gb, self.inter_dc_per_gb, self.inter_dc_tiers)
 
     def marginal_inter_dc_per_gb(self, gb: float = 0.0) -> float:
         """$/GB of the tier the volume ``gb`` falls in (flat otherwise).
@@ -69,12 +93,7 @@ class PricingScheme:
         Used by per-op cost vectors (``repro.policy.sla``) that need a
         scalar marginal price rather than the piecewise integral.
         """
-        if not self.inter_dc_tiers:
-            return self.inter_dc_per_gb
-        for up_to, price in self.inter_dc_tiers:
-            if gb < up_to:
-                return price
-        return self.inter_dc_tiers[-1][1]
+        return tiered_marginal(gb, self.inter_dc_per_gb, self.inter_dc_tiers)
 
 
 PAPER_PRICING = PricingScheme()
@@ -105,6 +124,115 @@ PRICING_PRESETS: dict[str, PricingScheme] = {
     "gcp": GCP_PRICING,
     "tpu": TPU_PRICING,
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class EgressMatrix:
+    """Per-region-pair egress pricing over a ``G``-region topology.
+
+    Cloud egress is priced by *pair class*, not by a single inter-DC
+    scalar: same-region transfer is (near-)free, same-continent costs
+    one rate, cross-continent another, and each class may carry its own
+    volume tiers.  ``pair_class[g][h]`` assigns region pair ``(g, h)``
+    (traffic *from* g *to* h) a price class; ``class_per_gb[k]`` is
+    class k's flat $/GB and ``class_tiers[k]`` its optional
+    ``(up_to_gb, price)`` volume tiers (same semantics as
+    :func:`tiered_cost`).  Class 0 is conventionally the intra-region
+    class.
+
+    All fields are tuples so instances are hashable (they ride along in
+    ``lru_cache``-keyed run configurations).
+    """
+
+    pair_class: tuple[tuple[int, ...], ...]      # (G, G) class ids
+    class_per_gb: tuple[float, ...]              # flat $/GB per class
+    class_tiers: tuple[tuple[tuple[float, float], ...], ...] = ()
+
+    def __post_init__(self):
+        g = len(self.pair_class)
+        if any(len(row) != g for row in self.pair_class):
+            raise ValueError("pair_class must be square (G, G)")
+        n_cls = len(self.class_per_gb)
+        if self.class_tiers and len(self.class_tiers) != n_cls:
+            raise ValueError(
+                "class_tiers must be empty or have one entry per class"
+            )
+        for row in self.pair_class:
+            for k in row:
+                if not 0 <= k < n_cls:
+                    raise ValueError(f"pair class {k} out of range")
+
+    @property
+    def n_regions(self) -> int:
+        return len(self.pair_class)
+
+    def _tiers(self, k: int) -> tuple[tuple[float, float], ...]:
+        return self.class_tiers[k] if self.class_tiers else ()
+
+    def pair_cost(self, g: int, h: int, gb: float) -> float:
+        """Cost of ``gb`` shipped from region ``g`` to region ``h``.
+
+        Each pair bills its own piecewise-tiered integral, so zero
+        traffic on a pair costs exactly zero regardless of what other
+        pairs carried.
+        """
+        k = self.pair_class[g][h]
+        return tiered_cost(gb, self.class_per_gb[k], self._tiers(k))
+
+    def pair_marginal(self, g: int, h: int, gb: float = 0.0) -> float:
+        """$/GB of the tier pair ``(g, h)``'s volume ``gb`` falls in."""
+        k = self.pair_class[g][h]
+        return tiered_marginal(gb, self.class_per_gb[k], self._tiers(k))
+
+    def price_matrix(self) -> list[list[float]]:
+        """(G, G) marginal-at-zero $/GB — the planner's analytic prices."""
+        g = self.n_regions
+        return [
+            [self.pair_marginal(i, j, 0.0) for j in range(g)]
+            for i in range(g)
+        ]
+
+    @classmethod
+    def from_pricing(
+        cls, n_regions: int, pricing: PricingScheme
+    ) -> "EgressMatrix":
+        """The degenerate two-class matrix of a scalar pricing scheme.
+
+        Diagonal pairs bill at ``intra_dc_per_gb`` (flat), off-diagonal
+        pairs at the scheme's inter-DC price including its volume tiers
+        — so a one-region or uniformly-priced world embeds exactly into
+        the matrix billing.
+        """
+        pair = tuple(
+            tuple(0 if i == j else 1 for j in range(n_regions))
+            for i in range(n_regions)
+        )
+        return cls(
+            pair_class=pair,
+            class_per_gb=(pricing.intra_dc_per_gb, pricing.inter_dc_per_gb),
+            class_tiers=((), tuple(pricing.inter_dc_tiers)),
+        )
+
+
+def cost_network_matrix(*, traffic_gb, egress: EgressMatrix) -> float:
+    """Eq. (.8) generalized: a (G, G) traffic matrix billed per pair.
+
+    ``traffic_gb[g][h]`` is the volume shipped from region ``g`` to
+    region ``h``; every pair runs through its own tiered price class.
+    Because volume tiers are concave (price non-increasing in volume),
+    per-pair billing is never cheaper than billing the aggregate sum
+    through one scalar tier list — the geo bill upper-bounds the flat
+    approximation, which is exactly why the aggregate-scalar model
+    under-reported WAN cost.
+    """
+    total = 0.0
+    g = egress.n_regions
+    for i in range(g):
+        for j in range(g):
+            vol = float(traffic_gb[i][j])
+            if vol:
+                total += egress.pair_cost(i, j, vol)
+    return total
 
 
 @dataclasses.dataclass(frozen=True)

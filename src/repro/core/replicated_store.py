@@ -407,6 +407,40 @@ class ReplicatedStore:
         )
         return state._replace(cluster=cluster), n
 
+    def merge_geo(
+        self,
+        state: StoreState,
+        topology,
+        *,
+        delta: Array | int | None = None,
+        up: Array | None = None,
+        link: Array | None = None,
+    ) -> tuple[StoreState, Array, Array]:
+        """Two-tier region-grouped merge (see ``xstcc.server_merge_geo``).
+
+        ``topology`` is a :class:`repro.geo.topology.RegionTopology`
+        whose ``n_replicas`` matches this store.  The returned state is
+        bit-identical to :meth:`merge` — only the accounting changes:
+        the third return value is the ``(G, G)`` delivery-event matrix
+        (intra-region fan-out on the diagonal, one WAN hop per (write,
+        newly-reached region) off it) that the egress matrix bills per
+        pair.  ``up``/``link`` masks compose exactly as in
+        :meth:`merge`, so region-severing partitions stop the
+        inter-region tier naturally.
+        """
+        if topology.n_replicas != self.n_replicas:
+            raise ValueError(
+                f"topology places {topology.n_replicas} replicas, store "
+                f"has {self.n_replicas}"
+            )
+        d = self.delta if delta is None else delta
+        cluster, n, traffic = xstcc.server_merge_geo(
+            state.cluster, delta=d,
+            region=topology.regions(), n_regions=topology.n_regions,
+            rtt_ms=topology.rtt(), level=self.level, up=up, link=link,
+        )
+        return state._replace(cluster=cluster), n, traffic
+
     def merge_faulty(
         self,
         state: StoreState,

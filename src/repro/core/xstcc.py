@@ -557,6 +557,82 @@ def server_merge(
     return new, n_applied
 
 
+def server_merge_geo(
+    state: ClusterState,
+    *,
+    delta: Array | int,
+    region: Array,
+    n_regions: int,
+    rtt_ms: Array,
+    level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+    up: Array | None = None,
+    link: Array | None = None,
+) -> tuple[ClusterState, Array, Array]:
+    """Two-tier (region-grouped) propagation step.
+
+    Geo-replicated propagation is two-tier: a write crosses the WAN
+    *once* per destination region, then fans out over the region's LAN
+    — intra-region exchange first, one inter-region hop per (write,
+    region) per epoch.  The resulting state is **bit-identical** to
+    :func:`server_merge` (the flat fixpoint IS the closure both tiers
+    converge to; grouping changes which link carries each delivery, not
+    which deliveries happen), so this wrapper runs the flat fixpoint
+    for the state and re-derives the per-tier accounting from the
+    ``pend_applied`` delta:
+
+      * a (write, replica) delivery lands in region ``h``; if some
+        replica of ``h`` already held the write before this merge, the
+        copy travels the LAN — an ``(h, h)`` event;
+      * otherwise the *first* copy into ``h`` ships across the WAN from
+        the nearest region (by ``rtt_ms``, ties → lowest region id)
+        that held the write pre-merge — a ``(src, h)`` event — and the
+        remaining copies fan out on the LAN.
+
+    ``up``/``link`` masks pass through to the flat fixpoint, so a
+    region-severing partition stops the inter-region tier exactly like
+    it stops the flat merge, and the attribution meters only the
+    deliveries that actually happened.
+
+    Returns ``(state, n_applied, traffic)`` with ``traffic`` a
+    ``(G, G)`` int32 matrix of delivery events (one event = one row
+    payload shipped from a region-g holder to a region-h replica) —
+    the quantity the egress matrix bills per pair (eq. 8, tiered).
+    """
+    reg = jnp.asarray(region, jnp.int32)
+    rtt = jnp.asarray(rtt_ms, jnp.float32)
+    G = n_regions
+    before = state.pend_applied                           # (Q, P)
+    new, n_applied = server_merge(
+        state, delta=delta, level=level, up=up, link=link
+    )
+    newly = jnp.logical_and(new.pend_applied, jnp.logical_not(before))
+    onehot = (
+        reg[:, None] == jnp.arange(G, dtype=jnp.int32)[None, :]
+    )                                                     # (P, G)
+    held = jnp.any(before[:, :, None] & onehot[None], axis=1)      # (Q, G)
+    new_in = jnp.sum(
+        (newly[:, :, None] & onehot[None]).astype(jnp.int32), axis=1
+    )                                                     # (Q, G)
+    # First copy into a previously-empty region crosses the WAN from
+    # the nearest pre-merge holder region.
+    inter = (new_in > 0) & jnp.logical_not(held)          # (Q, G)
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    src_cost = jnp.where(held[:, :, None], rtt[None], big)  # (Q, Gsrc, Gdst)
+    src = jnp.argmin(src_cost, axis=1).astype(jnp.int32)    # (Q, Gdst)
+    dst = jnp.broadcast_to(
+        jnp.arange(G, dtype=jnp.int32)[None, :], src.shape
+    )
+    traffic = (
+        jnp.zeros((G, G), jnp.int32)
+        .at[src, dst]
+        .add(inter.astype(jnp.int32))
+    )
+    intra = jnp.sum(new_in - inter.astype(jnp.int32), axis=0)      # (G,)
+    gi = jnp.arange(G, dtype=jnp.int32)
+    traffic = traffic.at[gi, gi].add(intra)
+    return new, n_applied, traffic
+
+
 def server_merge_sequential(
     state: ClusterState,
     *,

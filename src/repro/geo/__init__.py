@@ -1,0 +1,20 @@
+"""Region-aware geo-replication layer.
+
+``repro.geo.topology`` makes *where* a replica lives a first-class
+input: a replica→region map, a (G, G) RTT matrix, and a (G, G)
+egress-price-tier matrix (``repro.core.cost_model.EgressMatrix``).
+``repro.geo.placement`` turns that into a decision: a planner that
+scores candidate per-resource (replication-factor × region-assignment)
+plans against an SLA and the analytic cost tables.
+
+The package init stays light on purpose: ``repro.storage.cluster``
+imports :mod:`repro.geo.topology` lazily to derive its latency lookups,
+and :mod:`repro.geo.placement` imports the cluster config — importing
+both eagerly here would tie that knot into a cycle.
+"""
+
+from repro.geo.topology import (  # noqa: F401
+    PAPER_TOPOLOGY,
+    RegionTopology,
+    single_region,
+)

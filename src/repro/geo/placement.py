@@ -1,0 +1,383 @@
+"""Replica-placement planner: where should each resource's replicas live?
+
+The open lever the replica-consistency surveys point at: consistency
+*level* selection (``repro.policy``) and replica *placement* co-decide
+the bill.  This module scores candidate per-resource plans — a
+replication factor split across regions, i.e. a ``(G,)`` count vector —
+against the regional demand of each resource, the topology's RTT and
+egress-price matrices, and an SLA's read-latency bound:
+
+  * **cost** (eq. 5-8, analytic): storage for every hosted copy, the
+    two-tier write propagation (client→coordinator upload, one WAN hop
+    per hosting region, LAN fan-out within each region), and reads
+    served from the nearest hosting region at that pair's egress price;
+  * **SLA**: a plan is infeasible for a resource when any region with
+    demand reads above ``sla.max_read_latency_ms`` away from its
+    nearest hosting region (the structural violation of the policy
+    scorer, applied to geography).
+
+Scoring runs over the (resources × candidates) grid through
+``repro.kernels.ops.placement_score`` — a tiled Pallas kernel with a
+bit-exact jnp twin and dense oracle, the ``policy_score`` pattern.
+``plan_placement`` argmaxes utility per resource, so the chosen plan is
+*by construction* never costlier than any candidate it considered —
+including the paper's static 4-per-DC placement — at equal SLA
+feasibility (``benchmarks/bench_geo.py --check`` gates on it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+import numpy as np
+
+from repro.core.cost_model import PAPER_PRICING, PricingScheme
+from repro.geo.topology import RegionTopology
+from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
+
+
+def enumerate_candidates(
+    n_regions: int,
+    *,
+    max_per_region: int = 4,
+    max_total: int | None = None,
+    min_total: int = 1,
+) -> np.ndarray:
+    """All (G,) replica-count vectors within the caps, as (K, G) int32.
+
+    The candidate universe the planner searches: every way to split a
+    replication factor in ``[min_total, max_total]`` across regions
+    with at most ``max_per_region`` copies each.  Deterministic
+    lexicographic order, so candidate indices are stable across runs.
+    """
+    if max_total is None:
+        max_total = max_per_region * n_regions
+    cands = [
+        c
+        for c in itertools.product(range(max_per_region + 1),
+                                   repeat=n_regions)
+        if min_total <= sum(c) <= max_total
+    ]
+    if not cands:
+        raise ValueError("no candidate satisfies the replica caps")
+    return np.asarray(cands, np.int32)
+
+
+def static_counts(
+    topology: RegionTopology, per_region: int = 4
+) -> np.ndarray:
+    """The paper's NetworkTopologyStrategy placement: k copies per region."""
+    return np.full((topology.n_regions,), per_region, np.int32)
+
+
+def candidate_tables(
+    topology: RegionTopology,
+    candidates: np.ndarray,           # (K, G) int
+    *,
+    cfg: ClusterConfig = PAPER_CLUSTER,
+    pricing: PricingScheme = PAPER_PRICING,
+    resource_gb: float | None = None,
+    months: float = 1.0,
+    min_replicas: int = 1,
+) -> dict[str, np.ndarray]:
+    """Digest candidate count vectors into the scorer's packed tables.
+
+    Per candidate ``k`` and client region ``g`` (float32 throughout):
+
+      * ``read_price[k, g]``  — $/read: one row shipped from the nearest
+        hosting region at that pair's egress price, plus the I/O request
+        and one unit of service work;
+      * ``write_price[k, g]`` — $/write under two-tier propagation:
+        upload to the coordinator (nearest hosting) region, one WAN copy
+        from there to every other hosting region, LAN fan-out to the
+        remaining in-region copies, plus per-copy I/O and service work;
+      * ``read_rtt[k, g]``    — RTT to the nearest hosting region (the
+        SLA's structural latency input);
+      * ``cand_meta[0, k]``   — $/resource storage for the hosted copies
+        over ``months``; ``cand_meta[1, k]`` — validity (total copies
+        within ``[min_replicas, n_replicas... ]`` caps — zero-copy or
+        under-replicated vectors are invalid, never chosen over a valid
+        plan).
+
+    Egress is priced at each pair's marginal-at-zero rate (the
+    conservative first tier), mirroring ``repro.policy.sla.level_table``;
+    the full-run bill integrates the tiers instead.
+    """
+    cand = np.asarray(candidates, np.int32)
+    k, g = cand.shape
+    if g != topology.n_regions:
+        raise ValueError(
+            f"candidates cover {g} regions, topology has "
+            f"{topology.n_regions}"
+        )
+    if resource_gb is None:
+        # The unreplicated dataset; callers scoring per key bucket pass
+        # their per-resource share (plan_placement does).
+        resource_gb = cfg.dataset_rows * cfg.row_bytes / 1e9
+    rtt = topology.rtt().astype(np.float64)
+    price = np.asarray(topology.egress.price_matrix(), np.float64)
+    row_gb = cfg.row_bytes / 1e9
+    io = pricing.storage_per_million_requests / 1e6
+    inst = (
+        pricing.compute_unit_per_hour / 3600.0 / cfg.node_service_rate_ops_s
+    )
+
+    read_price = np.zeros((k, g), np.float64)
+    write_price = np.zeros((k, g), np.float64)
+    read_rtt = np.zeros((k, g), np.float64)
+    store = np.zeros((k,), np.float64)
+    valid = np.zeros((k,), np.float64)
+    for ki in range(k):
+        counts = cand[ki]
+        hosting = np.flatnonzero(counts > 0)
+        total = int(counts.sum())
+        store[ki] = total * resource_gb * pricing.storage_gb_month * months
+        if total < min_replicas or hosting.size == 0:
+            # Invalid plans still get finite table rows (the scorer
+            # ranks them out via the validity flag).
+            read_rtt[ki] = 0.0
+            valid[ki] = 0.0
+            continue
+        valid[ki] = 1.0
+        # LAN fan-out within each hosting region: copies beyond the
+        # first bill at the region's intra pair price.
+        fanout = sum(
+            (counts[h] - 1) * price[h, h] for h in hosting
+        ) * row_gb
+        for gi in range(g):
+            # np.argmin keeps the first occurrence on ties → lowest
+            # hosting-region id, matching the merge attribution rule.
+            near = hosting[np.argmin(rtt[gi, hosting])]
+            read_rtt[ki, gi] = rtt[gi, near]
+            read_price[ki, gi] = price[near, gi] * row_gb + io + inst
+            coord = near
+            wan = sum(
+                price[coord, h] * row_gb for h in hosting if h != coord
+            )
+            write_price[ki, gi] = (
+                price[gi, coord] * row_gb   # client upload
+                + wan + fanout
+                + total * io + inst
+            )
+    return {
+        "read_price": read_price.astype(np.float32),
+        "write_price": write_price.astype(np.float32),
+        "read_rtt": read_rtt.astype(np.float32),
+        "cand_meta": np.stack([store, valid]).astype(np.float32),
+        "candidates": cand,
+    }
+
+
+def region_demand(
+    client: np.ndarray,
+    kind: np.ndarray,
+    resource: np.ndarray,
+    topology: RegionTopology,
+    n_resources: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(reads, writes) as (R, G) float32 counts from an op stream.
+
+    Each op is attributed to its client's *region* (the population
+    assignment, not the mobility-perturbed serving replica): placement
+    should follow where demand originates, not where the old placement
+    happened to route it.
+    """
+    creg = topology.client_region_of(np.asarray(client))
+    res = np.asarray(resource, np.int64)
+    is_w = np.asarray(kind) == 1
+    g = topology.n_regions
+    flat = res * g + creg
+    reads = np.bincount(
+        flat[~is_w], minlength=n_resources * g
+    ).reshape(n_resources, g)
+    writes = np.bincount(
+        flat[is_w], minlength=n_resources * g
+    ).reshape(n_resources, g)
+    return reads.astype(np.float32), writes.astype(np.float32)
+
+
+def fleet_topology(
+    topology: RegionTopology, counts: np.ndarray
+) -> RegionTopology:
+    """A fleet-wide placement as a replayable :class:`RegionTopology`.
+
+    Expands a ``(G,)`` replica-count vector (e.g. the planner's
+    dominant choice, or the paper's static 4-per-DC vector) into a
+    topology with one protocol replica per hosted copy over the same
+    RTT and egress matrices — the bridge from a chosen *plan* to
+    :func:`repro.storage.simulator.run_protocol_geo`, which replays
+    the workload under it.  The client population is pinned to the
+    base topology's assignment (one canonical client per base replica
+    when no explicit table exists), so changing the placement changes
+    where *replicas* are, never where *demand* comes from.
+    """
+    cnt = np.asarray(counts, np.int64)
+    if cnt.shape[0] != topology.n_regions:
+        raise ValueError(
+            f"counts cover {cnt.shape[0]} regions, topology has "
+            f"{topology.n_regions}"
+        )
+    if (cnt < 0).any() or cnt.sum() < 1:
+        raise ValueError("placement must host at least one replica")
+    replica_region = tuple(
+        int(g) for g in np.repeat(np.arange(topology.n_regions), cnt)
+    )
+    client_region = topology.client_region
+    if client_region is None:
+        client_region = tuple(int(r) for r in topology.regions())
+    return dataclasses.replace(
+        topology, replica_region=replica_region, client_region=client_region
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementResult:
+    """One planning pass over the (resources × candidates) grid."""
+
+    choice: np.ndarray        # (R,) int32 — chosen candidate per resource
+    counts: np.ndarray        # (R, G) int32 — chosen replicas per region
+    utility: np.ndarray       # (R,) f32 — utility of the chosen plan
+    feasible: np.ndarray      # (R,) bool — chosen plan meets the SLA
+    cost: np.ndarray          # (R,) f32 — analytic $ of the chosen plan
+    candidates: np.ndarray    # (K, G) int32 — the searched universe
+
+    @property
+    def total_cost(self) -> float:
+        return float(self.cost.sum())
+
+    @property
+    def n_feasible(self) -> int:
+        return int(self.feasible.sum())
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "total_cost": self.total_cost,
+            "n_feasible": self.n_feasible,
+            "n_resources": int(self.choice.shape[0]),
+            "mean_replicas": float(self.counts.sum(axis=1).mean()),
+        }
+
+
+def score_candidates(
+    reads: np.ndarray,
+    writes: np.ndarray,
+    tables: dict[str, np.ndarray],
+    sla,
+    *,
+    impl: str | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(utility, feasible) over the (R, K) grid via the kernel wrapper."""
+    from repro.kernels import ops as kernel_ops
+
+    util, feas = kernel_ops.placement_score(
+        reads, writes, tables["read_price"], tables["write_price"],
+        tables["read_rtt"], tables["cand_meta"],
+        max_latency_ms=float(sla.max_read_latency_ms), impl=impl,
+    )
+    return np.asarray(util), np.asarray(feas)
+
+
+def plan_placement(
+    topology: RegionTopology,
+    reads: np.ndarray,            # (R, G) demand
+    writes: np.ndarray,           # (R, G) demand
+    sla,
+    *,
+    candidates: np.ndarray | None = None,
+    cfg: ClusterConfig = PAPER_CLUSTER,
+    pricing: PricingScheme = PAPER_PRICING,
+    resource_gb: float | None = None,
+    months: float = 1.0,
+    min_replicas: int = 1,
+    max_per_region: int = 4,
+    impl: str | None = None,
+) -> PlacementResult:
+    """Choose, per resource, the cheapest SLA-feasible placement.
+
+    The candidate set always includes the paper's static
+    ``max_per_region``-per-region placement, so the returned plan is
+    never costlier than it whenever both are feasible (argmax of a
+    utility that strictly orders feasible-by-cost).
+    """
+    if candidates is None:
+        candidates = enumerate_candidates(
+            topology.n_regions, max_per_region=max_per_region,
+            min_total=min_replicas,
+        )
+    cand = np.asarray(candidates, np.int32)
+    static = static_counts(topology, max_per_region)[None, :]
+    if not (cand == static).all(axis=1).any():
+        cand = np.concatenate([cand, static.astype(np.int32)], axis=0)
+    if resource_gb is None:
+        # Each key bucket hosts an even share of the dataset.
+        resource_gb = (
+            cfg.dataset_rows * cfg.row_bytes / 1e9 / max(1, reads.shape[0])
+        )
+    tables = candidate_tables(
+        topology, cand, cfg=cfg, pricing=pricing, resource_gb=resource_gb,
+        months=months, min_replicas=min_replicas,
+    )
+    util, feas = score_candidates(reads, writes, tables, sla, impl=impl)
+    choice = np.argmax(util, axis=1).astype(np.int32)
+    r_idx = np.arange(choice.shape[0])
+    # Analytic cost of the chosen plan = storage + demand-priced ops
+    # (the −utility of a feasible cell; recomputed here so infeasible
+    # fallbacks report cost without the penalty term).
+    cost = (
+        tables["cand_meta"][0][choice]
+        + np.sum(reads * tables["read_price"][choice], axis=1)
+        + np.sum(writes * tables["write_price"][choice], axis=1)
+    ).astype(np.float32)
+    return PlacementResult(
+        choice=choice,
+        counts=cand[choice],
+        utility=util[r_idx, choice].astype(np.float32),
+        feasible=feas[r_idx, choice].astype(bool),
+        cost=cost,
+        candidates=cand,
+    )
+
+
+def evaluate_counts(
+    topology: RegionTopology,
+    counts: np.ndarray,           # (G,) one fleet-wide placement
+    reads: np.ndarray,
+    writes: np.ndarray,
+    sla,
+    *,
+    cfg: ClusterConfig = PAPER_CLUSTER,
+    pricing: PricingScheme = PAPER_PRICING,
+    resource_gb: float | None = None,
+    months: float = 1.0,
+    min_replicas: int = 1,
+    impl: str | None = None,
+) -> dict[str, Any]:
+    """Cost/feasibility of one fixed placement applied to every resource.
+
+    The comparison baseline for the planner (e.g. the paper's static
+    4-per-DC placement), priced through the *same* tables and scorer.
+    """
+    cand = np.asarray(counts, np.int32)[None, :]
+    if resource_gb is None:
+        resource_gb = (
+            cfg.dataset_rows * cfg.row_bytes / 1e9 / max(1, reads.shape[0])
+        )
+    tables = candidate_tables(
+        topology, cand, cfg=cfg, pricing=pricing, resource_gb=resource_gb,
+        months=months, min_replicas=min_replicas,
+    )
+    util, feas = score_candidates(reads, writes, tables, sla, impl=impl)
+    cost = (
+        tables["cand_meta"][0][0]
+        + np.sum(reads * tables["read_price"][0][None, :], axis=1)
+        + np.sum(writes * tables["write_price"][0][None, :], axis=1)
+    ).astype(np.float32)
+    return {
+        "cost": cost,
+        "total_cost": float(cost.sum()),
+        "feasible": feas[:, 0].astype(bool),
+        "n_feasible": int(feas[:, 0].sum()),
+        "utility": np.asarray(util[:, 0], np.float32),
+    }

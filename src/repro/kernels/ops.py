@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import op_ingest as _oi
+from repro.kernels import placement_score as _pls
 from repro.kernels import policy_score as _ps
 from repro.kernels import session_floor as _sf
 from repro.kernels import vclock_audit as _va
@@ -228,6 +229,66 @@ def policy_score(
         block_s=block_s, interpret=interpret,
     )
     return util[:s], feas[:s]
+
+
+def placement_score(
+    reads: jax.Array,        # (R, G) f32 — repro.geo.placement.region_demand
+    writes: jax.Array,       # (R, G) f32
+    read_price: jax.Array,   # (K, G) f32 — repro.geo.placement.candidate_tables
+    write_price: jax.Array,  # (K, G) f32
+    read_rtt: jax.Array,     # (K, G) f32
+    cand_meta: jax.Array,    # (2, K) f32 — [storage cost; validity]
+    *,
+    max_latency_ms: float,
+    impl: str | None = None,
+    block_r: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched (resources × candidate-plans) placement scoring.
+
+    Same contract as ``repro.kernels.ref.placement_score_ref``
+    (bit-exact): returns ``(utility, feasible)`` over the (R, K) grid.
+    ``impl`` selects the implementation:
+
+      * ``"pallas"`` — the tiled TPU kernel;
+      * ``"tiled"``  — the jnp ``lax.map`` twin of the kernel, the
+        fast path on CPU where Pallas runs interpreted;
+      * ``"dense"``  — the reference oracle (whole (R, K) at once);
+      * ``None``     — "pallas" on accelerators, "tiled" on CPU.
+
+    The resource axis is padded to a block multiple with zero-demand
+    rows, which are stripped before returning.
+    """
+    if impl is None or impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "tiled"
+    if impl == "dense":
+        from repro.kernels import ref as kernel_ref
+
+        return kernel_ref.placement_score_ref(
+            reads, writes, read_price, write_price, read_rtt, cand_meta,
+            max_latency_ms=max_latency_ms,
+        )
+    r = reads.shape[0]
+    block_r = max(1, min(block_r, r))
+    pad = (-r) % block_r
+    if pad:
+        reads = jnp.pad(reads, ((0, pad), (0, 0)))
+        writes = jnp.pad(writes, ((0, pad), (0, 0)))
+    if impl == "tiled":
+        util, feas = _pls.placement_score_tiled(
+            reads, writes, read_price, write_price, read_rtt, cand_meta,
+            max_latency_ms=max_latency_ms, block_r=block_r,
+        )
+    elif impl == "pallas":
+        interpret = _on_cpu() if interpret is None else interpret
+        util, feas = _pls.placement_score(
+            reads, writes, read_price, write_price, read_rtt, cand_meta,
+            max_latency_ms=max_latency_ms, block_r=block_r,
+            interpret=interpret,
+        )
+    else:
+        raise ValueError(f"unknown placement_score impl: {impl!r}")
+    return util[:r], feas[:r]
 
 
 def audit_summary(codes: jax.Array) -> dict[str, jax.Array]:

@@ -285,6 +285,73 @@ def policy_score_ref(
     return utility, feas.astype(jnp.int32)
 
 
+def placement_score_ref(
+    reads: Array,        # (R, G) f32 — reads per resource per client region
+    writes: Array,       # (R, G) f32 — writes per resource per client region
+    read_price: Array,   # (K, G) f32 — $/read issued from region g, plan k
+    write_price: Array,  # (K, G) f32 — $/write issued from region g, plan k
+    read_rtt: Array,     # (K, G) f32 — read latency ms from region g, plan k
+    cand_meta: Array,    # (2, K) f32 — row 0: $/resource storage+base cost;
+                         #              row 1: candidate validity (1.0/0.0)
+    *,
+    max_latency_ms: float,
+) -> tuple[Array, Array]:
+    """Reference (resources × candidate-plans) placement scorer.
+
+    The geo twin of :func:`policy_score_ref`: for every resource ``r``
+    and candidate placement ``k`` (a replication-factor ×
+    region-assignment choice, pre-digested by
+    ``repro.geo.placement.candidate_tables`` into per-region price and
+    latency rows),
+
+      * ``cost = store[k] + Σ_g reads[r,g]·read_price[k,g]
+                          + writes[r,g]·write_price[k,g]`` — the
+        analytic eq. 5-8 bill of serving resource ``r``'s regional
+        demand under plan ``k``;
+      * the SLA excess counts, per region *with demand*, a structural
+        violation when the plan's read latency from that region exceeds
+        ``max_latency_ms``; invalid candidate rows add one structural
+        violation so they rank below every valid plan;
+      * ``feasible = excess == 0``; ``utility = -cost - PENALTY·excess``
+        so argmax picks the cheapest SLA-feasible plan and degrades to
+        the least-violating one when none is feasible.
+
+    The region axis is reduced with an unrolled fixed-order loop —
+    ``G`` is tiny and static — so the Pallas kernel
+    (``repro.kernels.placement_score``) and its tiled jnp twin
+    reproduce this *bit-exactly* under jit (same op order, same
+    dtypes); ``tests/test_geo.py`` sweeps all three.
+    """
+    reads = jnp.asarray(reads, jnp.float32)
+    writes = jnp.asarray(writes, jnp.float32)
+    read_price = jnp.asarray(read_price, jnp.float32)
+    write_price = jnp.asarray(write_price, jnp.float32)
+    read_rtt = jnp.asarray(read_rtt, jnp.float32)
+    cand_meta = jnp.asarray(cand_meta, jnp.float32)
+
+    r, g = reads.shape
+    k = read_price.shape[0]
+    store = cand_meta[0][None, :]                    # (1, K)
+    valid = cand_meta[1][None, :] > 0.0              # (1, K)
+    max_lat = jnp.float32(max_latency_ms)
+    structural = jnp.float32(STRUCTURAL_WEIGHT)
+
+    cost = jnp.broadcast_to(store, (r, k))
+    excess = jnp.zeros((r, k), jnp.float32)
+    for gi in range(g):                              # static, fixed order
+        cost = cost + reads[:, gi:gi + 1] * read_price[None, :, gi]
+        cost = cost + writes[:, gi:gi + 1] * write_price[None, :, gi]
+        demand = (reads[:, gi:gi + 1] + writes[:, gi:gi + 1]) > 0.0
+        late = read_rtt[None, :, gi] > max_lat
+        excess = excess + structural * jnp.logical_and(
+            demand, late
+        ).astype(jnp.float32)
+    excess = excess + structural * jnp.logical_not(valid).astype(jnp.float32)
+    feas = excess == 0.0
+    utility = -cost - jnp.float32(INFEASIBLE_PENALTY) * excess
+    return utility, feas.astype(jnp.int32)
+
+
 def vclock_audit_ref(
     vc: Array,        # (M, N) int32 vector clocks
     client: Array,    # (M,) int32

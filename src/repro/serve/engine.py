@@ -76,6 +76,15 @@ class ServingEngine:
         # Replica liveness (NodeHealth-driven): down replicas are
         # inadmissible for every session and requests fail over.
         self.replica_up = np.ones(max_replicas, bool)
+        # Region-aware routing (set_topology): replica→region map, RTT
+        # matrix, per-session region assignment, per-region telemetry.
+        self._topology = None
+        self._session_region: np.ndarray | None = None
+        self._rtt_np: np.ndarray | None = None
+        self._replica_region_np: np.ndarray | None = None
+        self._region_stale: np.ndarray | None = None
+        self._region_serves: np.ndarray | None = None
+        self._region_lat_ms: np.ndarray | None = None
         # Per-session overrides of the engine default, plus per-session
         # serve telemetry (stale/violation/serve counts since the last
         # controller consultation) feeding `adapt_sessions`.
@@ -170,6 +179,108 @@ class ServingEngine:
         if not up.any():
             raise RuntimeError("no live replica to serve from")
         return up
+
+    # -- region-aware routing -------------------------------------------------------
+
+    def set_topology(self, topology, session_region=None) -> None:
+        """Make routing region-aware.
+
+        ``topology`` is a :class:`repro.geo.topology.RegionTopology`
+        whose replica map covers this engine's replica slots; sessions
+        are pinned to regions by ``session_region`` (any sequence,
+        defaulting to the topology's client-population assignment).
+        From then on a session's default target is the **nearest live
+        replica by RTT** from its region — replacing the
+        ``session_id % n`` spread — reroutes prefer the nearest
+        admissible replica, and per-region latency/staleness telemetry
+        accumulates (:meth:`region_stats`).
+        """
+        if topology.n_replicas < self.max_replicas:
+            raise ValueError(
+                f"topology places {topology.n_replicas} replicas, engine "
+                f"has max_replicas={self.max_replicas}"
+            )
+        if session_region is None:
+            reg = topology.client_region_of(np.arange(self.max_sessions))
+        else:
+            reg = np.asarray(session_region, np.int32)
+            if reg.shape[0] != self.max_sessions:
+                raise ValueError(
+                    f"session_region covers {reg.shape[0]} sessions, "
+                    f"engine has {self.max_sessions}"
+                )
+        self._topology = topology
+        self._session_region = reg.astype(np.int32)
+        # Dense views of the topology tuples, converted once: the geo
+        # routing paths argmin over these on every request.
+        self._rtt_np = np.asarray(topology.rtt_ms, np.float64)
+        self._replica_region_np = topology.regions()
+        g = topology.n_regions
+        self._region_stale = np.zeros(g, np.int64)
+        self._region_serves = np.zeros(g, np.int64)
+        self._region_lat_ms = np.zeros(g, np.float64)
+
+    def _geo_rtts(self, session_ids, n: int) -> np.ndarray:
+        """(B, n) RTT from each session's region to replicas ``0..n-1``.
+
+        One matrix gather for the whole batch — the geo routing paths
+        below are all argmins over rows of this.
+        """
+        sregs = self._session_region[np.asarray(session_ids, np.int64)]
+        return self._rtt_np[sregs][:, self._replica_region_np[:n]]
+
+    def _geo_preferred(self, session_id: int, n: int) -> int:
+        """Nearest replica by RTT from the session's region.
+
+        Deliberately liveness-*ignorant*: this is the session's natural
+        target, so a down nearest replica registers as a failover (the
+        PR-4 counting contract) before routing falls over to the
+        nearest live replica.
+        """
+        return int(np.argmin(self._geo_rtts([session_id], n)[0]))
+
+    def _geo_failover(self, session_id: int, up: np.ndarray) -> int:
+        """Nearest *live* replica by RTT from the session's region."""
+        rtts = self._geo_rtts([session_id], up.shape[0])[0]
+        return int(np.argmin(np.where(up, rtts, np.inf)))
+
+    def _geo_reroute(
+        self, session_id: int, floor: int, up: np.ndarray
+    ) -> int:
+        """Nearest live *admissible* replica; freshest live fallback."""
+        versions = np.asarray([r.version for r in self.replicas])
+        adm = up & (versions >= floor)
+        if not adm.any():
+            return _freshest_replica(self.replicas, up)
+        rtts = self._geo_rtts([session_id], up.shape[0])[0]
+        return int(np.argmin(np.where(adm, rtts, np.inf)))
+
+    def _note_serve(self, session_id: int, replica: int, stale: int) -> None:
+        """Per-region serve telemetry (no-op without a topology)."""
+        if self._topology is None:
+            return
+        sreg = int(self._session_region[session_id])
+        rreg = int(self._replica_region_np[replica])
+        self._region_serves[sreg] += 1
+        self._region_stale[sreg] += stale
+        self._region_lat_ms[sreg] += float(self._rtt_np[sreg, rreg])
+
+    def region_stats(self) -> dict[str, list[float]]:
+        """Per-region serving telemetry (requires :meth:`set_topology`).
+
+        Latency is the RTT-matrix distance between the session's region
+        and the replica that served it — the serving-side replacement
+        of the two-value ``ack_latency_ms`` step function.
+        """
+        if self._topology is None:
+            raise RuntimeError("no topology set (call set_topology)")
+        serves = np.maximum(1, self._region_serves)
+        return {
+            "serves": self._region_serves.tolist(),
+            "stale": self._region_stale.tolist(),
+            "staleness_rate": (self._region_stale / serves).tolist(),
+            "mean_latency_ms": (self._region_lat_ms / serves).tolist(),
+        }
 
     # -- per-session consistency ---------------------------------------------------
 
@@ -267,16 +378,32 @@ class ServingEngine:
         if n == 0:
             raise RuntimeError("no replicas published")
         up = self._up()
-        idx = (session.session_id if preferred is None else preferred) % n
+        if preferred is not None:
+            idx = preferred % n
+        elif self._topology is not None:
+            # Region-aware default: nearest replica by RTT.  Liveness
+            # is checked below, so a down nearest replica still counts
+            # as a failover.
+            idx = self._geo_preferred(session.session_id, n)
+        else:
+            idx = session.session_id % n
         failed_over = not up[idx]
         if failed_over:
-            idx = _freshest_replica(self.replicas, up)
+            idx = (
+                self._geo_failover(session.session_id, up)
+                if self._topology is not None
+                else _freshest_replica(self.replicas, up)
+            )
             self.failovers += 1
             self.reroutes += 1
         if self.level_for(session.session_id).is_session_guarded:
             floor = self.session_floor(session)
             if self.replicas[idx].version < floor:
-                best = _freshest_replica(self.replicas, up)
+                best = (
+                    self._geo_reroute(session.session_id, floor, up)
+                    if self._topology is not None
+                    else _freshest_replica(self.replicas, up)
+                )
                 if self.replicas[best].version < floor:
                     raise RuntimeError("no admissible replica for session")
                 # Reroute to the freshest live admissible replica
@@ -307,10 +434,21 @@ class ServingEngine:
             raise RuntimeError("no replicas published")
         up = self._up()
         sid = jnp.asarray([self._sid(s) for s in sessions], jnp.int32)
+        geo_rtts = (
+            self._geo_rtts(np.asarray(sid), n)
+            if self._topology is not None else None
+        )
         if preferred is None:
-            preferred = jnp.asarray(
-                [s.session_id % n for s in sessions], jnp.int32
-            )
+            if geo_rtts is not None:
+                # Nearest replica by RTT, liveness-ignorant — a down
+                # nearest replica counts as a failover below.
+                preferred = jnp.asarray(
+                    np.argmin(geo_rtts, axis=1), jnp.int32
+                )
+            else:
+                preferred = jnp.asarray(
+                    [s.session_id % n for s in sessions], jnp.int32
+                )
         preferred = jnp.asarray(preferred, jnp.int32) % n
         guarded = jnp.asarray(
             [self.level_for(s.session_id).is_session_guarded
@@ -342,10 +480,40 @@ class ServingEngine:
             floor = jnp.maximum(
                 self._store.session_floor(self._st, sid, 0), ext
             )
+            if geo_rtts is not None:
+                # Per-session reroute target: nearest live admissible
+                # replica (freshest live when none admits) — one
+                # masked argmin over the precomputed (B, n) RTT rows.
+                # Unguarded sessions ignore floors: their only reroute
+                # cause is a dead replica, and the target is the
+                # nearest live replica — exactly what route() picks,
+                # keeping the scalar/batch routing parity.
+                adm_at = np.asarray(up)[None, :] & (
+                    np.asarray(versions)[None, :]
+                    >= np.asarray(floor)[:, None]
+                )
+                adm_at = np.where(
+                    np.asarray(guarded)[:, None], adm_at,
+                    np.asarray(up)[None, :],
+                )
+                target = np.where(
+                    adm_at.any(axis=1),
+                    np.argmin(np.where(adm_at, geo_rtts, np.inf), axis=1),
+                    best,
+                )
+                best = jnp.asarray(target, jnp.int32)
             if bool(jnp.any(guarded & ~ok & (versions[best] < floor))):
                 raise RuntimeError("no admissible replica for session")
         else:
             ok = alive
+            if geo_rtts is not None:
+                best = jnp.asarray(
+                    np.argmin(
+                        np.where(np.asarray(up)[None, :n], geo_rtts, np.inf),
+                        axis=1,
+                    ),
+                    jnp.int32,
+                )
         replica = jnp.where(ok, preferred, best)
         self.reroutes += int(jnp.sum(~ok))
         self.failovers += int(jnp.sum(~alive))
@@ -374,6 +542,17 @@ class ServingEngine:
         np.add.at(self._sess_stale, sid_np, np.asarray(res.stale))
         np.add.at(self._sess_viol, sid_np, np.asarray(res.violation))
         np.add.at(self._sess_serves, sid_np, 1)
+        if self._topology is not None:
+            sregs = self._session_region[sid_np]
+            rregs = self._replica_region_np[np.asarray(replica)]
+            np.add.at(self._region_serves, sregs, 1)
+            np.add.at(
+                self._region_stale, sregs,
+                np.asarray(res.stale).astype(np.int64),
+            )
+            np.add.at(
+                self._region_lat_ms, sregs, self._rtt_np[sregs, rregs]
+            )
         for s, v in zip(sessions, list(res.version)):
             s.read_floor = max(s.read_floor, int(v))
         return res.version
@@ -398,6 +577,7 @@ class ServingEngine:
         self._sess_stale[sid] += int(res.stale[0])
         self._sess_viol[sid] += int(res.violation[0])
         self._sess_serves[sid] += 1
+        self._note_serve(sid, replica, int(res.stale[0]))
         session.read_floor = max(session.read_floor, int(res.version[0]))
 
     # -- compute ---------------------------------------------------------------

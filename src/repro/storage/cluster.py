@@ -9,8 +9,35 @@ node; 512 GiB storage per node.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
+
+
+@functools.lru_cache(maxsize=None)
+def _config_topology(
+    n_datacenters: int,
+    replicas_per_dc: int,
+    intra_dc_rtt_ms: float,
+    inter_dc_rtt_ms: float,
+):
+    """RegionTopology of one config's key-replica placement (cached).
+
+    Lazy import: ``repro.geo.topology`` prices pairs through the cost
+    model and must stay importable without this module (the placement
+    planner imports us), so neither side imports the other at module
+    scope.
+    """
+    from repro.geo.topology import uniform_topology
+
+    return uniform_topology(
+        tuple(
+            int(d)
+            for d in np.repeat(np.arange(n_datacenters), replicas_per_dc)
+        ),
+        intra_rtt_ms=intra_dc_rtt_ms,
+        inter_rtt_ms=inter_dc_rtt_ms,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,17 +62,46 @@ class ClusterConfig:
         per = self.replicas_per_dc
         return np.repeat(np.arange(self.n_datacenters), per)
 
+    def topology(self):
+        """This config's key replicas as a RegionTopology.
+
+        One region per DC, ``replicas_per_dc`` replicas each (the
+        NetworkTopologyStrategy placement of :meth:`replica_dcs`), LAN
+        RTT on the diagonal, WAN RTT off it.  The latency lookups below
+        derive from it, so any region-aware topology — asymmetric RTTs,
+        uneven placement — can answer the same questions; the paper's
+        two-value step function is just this matrix's degenerate shape.
+        """
+        return _config_topology(
+            self.n_datacenters, self.replicas_per_dc,
+            self.intra_dc_rtt_ms, self.inter_dc_rtt_ms,
+        )
+
     def ack_latency_ms(self, acks: int) -> float:
-        """Latency until `acks` replicas acknowledged a write, given the
-        NetworkTopologyStrategy placement (4 local, 8 remote)."""
-        if acks <= self.replicas_per_dc:
-            return self.intra_dc_rtt_ms
-        return self.inter_dc_rtt_ms
+        """Latency until `acks` replicas acknowledged a write.
+
+        RTT-matrix lookup from the client's local region: acks arrive
+        nearest-first, so this is the RTT of the ``acks``-th nearest
+        replica.  For the paper's placement (4 local, 8 remote) it
+        reproduces the old two-value step function exactly: 0.115 ms up
+        to a local quorum, 45.7 ms beyond (``tests/test_cluster.py``).
+
+        ``acks`` is clamped into the placement (the old step function
+        answered any int): a config whose ``replication_factor``
+        exceeds ``n_datacenters * replicas_per_dc`` still prices its
+        ALL-level fan-out at the slowest replica's RTT rather than
+        raising.
+        """
+        topo = self.topology()
+        return topo.ack_latency_ms(
+            0, min(max(acks, 1), topo.n_replicas)
+        )
 
     def read_latency_ms(self, consulted: int) -> float:
-        if consulted <= self.replicas_per_dc:
-            return self.intra_dc_rtt_ms
-        return self.inter_dc_rtt_ms
+        topo = self.topology()
+        return topo.read_latency_ms(
+            0, min(max(consulted, 1), topo.n_replicas)
+        )
 
 
 PAPER_CLUSTER = ClusterConfig()

@@ -145,19 +145,24 @@ def throughput_model(
 
 def _attach_clients(
     ops: dict[str, np.ndarray], n_ops: int, n_clients: int,
-    n_resources: int, seed: int,
+    n_resources: int, seed: int, n_replicas: int = 3,
 ) -> dict[str, np.ndarray]:
     """Attach the client/mobility model to a generated op stream.
 
-    Replicas = the 3 DCs; a client's home replica is its DC; reads go to
-    the *nearest* replica (home DC).  Client mobility (paper Fig. 2: Bob
-    reconnects to another server): 30% of ops hit a different DC than
-    the session's home."""
+    Replicas = the DCs (3 in the paper); a client's home replica is its
+    DC (``client % n_replicas``); reads go to the *nearest* replica
+    (home DC).  Client mobility (paper Fig. 2: Bob reconnects to
+    another server): 30% of ops hit one of the next two replicas in
+    ring order instead of the session's home.  The draws do not depend
+    on ``n_replicas``, so a geo topology with 3 protocol replicas sees
+    the byte-identical stream of the flat engine."""
     rng = np.random.default_rng(seed + 1)
     client = rng.integers(0, n_clients, n_ops).astype(np.int32)
     move = rng.random(n_ops) < 0.30
     offset = rng.integers(1, 3, n_ops)
-    home = ((client % 3 + np.where(move, offset, 0)) % 3).astype(np.int32)
+    home = (
+        (client % n_replicas + np.where(move, offset, 0)) % n_replicas
+    ).astype(np.int32)
     return {
         "client": client,
         "kind": ops["kind"].astype(np.int32),
@@ -167,14 +172,65 @@ def _attach_clients(
 
 
 def _op_stream(
-    w: Workload, n_ops: int, n_clients: int, n_resources: int, seed: int
+    w: Workload, n_ops: int, n_clients: int, n_resources: int, seed: int,
+    n_replicas: int = 3,
 ) -> dict[str, np.ndarray]:
     """The YCSB op stream shared by the batched and scalar engines."""
     ops = generate(w, n_ops=n_ops, n_keys=n_resources, seed=seed)
-    return _attach_clients(ops, n_ops, n_clients, n_resources, seed)
+    return _attach_clients(
+        ops, n_ops, n_clients, n_resources, seed, n_replicas
+    )
 
 
 _OP_COLS = ("client", "kind", "resource", "home")
+
+
+def _cadence_plan(
+    level: ConsistencyLevel, n_ops: int, batch_size: int,
+    merge_every: int, delta: int,
+) -> tuple[int, int, int, bool]:
+    """(sub, rem, n_rounds, emulate) — the per-level batching plan.
+
+    Synchronous and timed levels emulate their merge cadence inside
+    ``batch_size``-op batches; untimed causal levels batch at their
+    real merge period (see :func:`run_protocol`).  Shared by the flat
+    and geo drivers so the twins cannot drift on cadence handling.
+    """
+    sync_every, _ = merge_cadence(level, merge_every, delta)
+    emulate = sync_every == 1 or level.is_timed
+    sub = batch_size if emulate else sync_every
+    sub = max(1, min(sub, n_ops))
+    n_rounds = n_ops // sub
+    rem = n_ops - n_rounds * sub
+    return sub, rem, n_rounds, emulate
+
+
+def _batch_inputs(
+    stream: dict[str, np.ndarray], store: ReplicatedStore,
+    sub: int, n_rounds: int, rem: int, emulate: bool,
+) -> tuple[dict[str, Any], dict[str, Any]]:
+    """(batched, tail) scan inputs for one stream under one plan.
+
+    Rounds carry their first op's global index (``step0``); the
+    emulated-cadence levels also carry the precomputed apply-point
+    schedule, sliced per round.  ``rem == 0`` still builds a one-op
+    dummy tail (the jitted runner ignores it).
+    """
+    batched = {
+        k: jnp.asarray(stream[k][: n_rounds * sub].reshape(n_rounds, sub))
+        for k in _OP_COLS
+    }
+    batched["step0"] = jnp.arange(n_rounds, dtype=jnp.int32) * sub
+    tail = {k: jnp.asarray(stream[k][-max(rem, 1):]) for k in _OP_COLS}
+    if emulate and store.sync_every > 1:
+        apply_idx = store.schedule_stream(
+            stream["client"], stream["home"], stream["kind"]
+        )
+        batched["apply_idx"] = apply_idx[: n_rounds * sub].reshape(
+            n_rounds, sub
+        )
+        tail["apply_idx"] = apply_idx[-max(rem, 1):]
+    return batched, tail
 
 
 @functools.lru_cache(maxsize=None)
@@ -277,35 +333,16 @@ def run_protocol(
     ``benchmarks/bench_protocol.py``.
     """
     stream = _op_stream(w, n_ops, n_clients, n_resources, seed)
-    sync_every, _ = merge_cadence(level, merge_every, delta)
-    emulate = sync_every == 1 or level.is_timed
-    sub = batch_size if emulate else sync_every
-    sub = max(1, min(sub, n_ops))
-    n_rounds = n_ops // sub
-    rem = n_ops - n_rounds * sub
-
+    sub, rem, n_rounds, emulate = _cadence_plan(
+        level, n_ops, batch_size, merge_every, delta
+    )
     store, run = _batched_runner(
         level, n_clients, n_resources, merge_every, delta, duot_cap,
         sub, rem, emulate, ingest,
     )
-    batched = {
-        k: jnp.asarray(stream[k][: n_rounds * sub].reshape(n_rounds, sub))
-        for k in _OP_COLS
-    }
-    batched["step0"] = jnp.arange(n_rounds, dtype=jnp.int32) * sub
-    tail = {
-        k: jnp.asarray(stream[k][-max(rem, 1):]) for k in _OP_COLS
-    }
-    if emulate and store.sync_every > 1:
-        # The emulated apply schedule depends only on the op sequence and
-        # the cadence: compute it once for the stream, slice per batch.
-        apply_idx = store.schedule_stream(
-            stream["client"], stream["home"], stream["kind"]
-        )
-        batched["apply_idx"] = apply_idx[: n_rounds * sub].reshape(
-            n_rounds, sub
-        )
-        tail["apply_idx"] = apply_idx[-max(rem, 1):]
+    # The emulated apply schedule depends only on the op sequence and
+    # the cadence: _batch_inputs computes it once, slices it per batch.
+    batched, tail = _batch_inputs(stream, store, sub, n_rounds, rem, emulate)
     st, n_stale, n_viol, n_reads = run(batched, tail)
 
     severity = 0.0
@@ -319,6 +356,228 @@ def run_protocol(
         "severity": severity,
         "n_reads": int(n_reads),
         "dropped_writes": int(st.cluster.pend_dropped),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _geo_runner(
+    level: ConsistencyLevel,
+    n_clients: int,
+    n_resources: int,
+    merge_every: int,
+    delta: int,
+    duot_cap: int,
+    sub: int,
+    rem: int,
+    emulate: bool,
+    topology,
+    ingest: str = "auto",
+) -> tuple[ReplicatedStore, Any]:
+    """(store, jitted engine) for one region-aware configuration.
+
+    The geo twin of :func:`_batched_runner`: identical batching and
+    cadence emulation over ``topology.n_replicas`` replicas, but the
+    boundary merge is the two-tier :meth:`ReplicatedStore.merge_geo` —
+    same state bit-for-bit, plus the (G, G) delivery-traffic matrix —
+    and every scan step segment-sums read/staleness counts and
+    RTT-matrix latency by *client region*.  ``topology`` is hashable
+    (tuples all the way down), so it keys the cache like the level
+    does.
+    """
+    P = topology.n_replicas
+    G = topology.n_regions
+    store = ReplicatedStore(
+        P, n_clients, n_resources, level=level, merge_every=merge_every,
+        delta=delta, pending_cap=max(128, 2 * sub), duot_cap=duot_cap,
+        ingest=ingest,
+    )
+    client_reg = jnp.asarray(
+        topology.client_region_of(np.arange(n_clients)), jnp.int32
+    )
+    replica_reg = jnp.asarray(topology.regions(), jnp.int32)
+    rtt = jnp.asarray(topology.rtt(), jnp.float32)
+
+    def round_step(carry, ops, step0):
+        st, n_stale, n_viol, n_reads, traffic, reg = carry
+        st, res = store.apply_batch(
+            st, client=ops["client"], replica=ops["home"],
+            resource=ops["resource"], kind=ops["kind"],
+            op_step0=step0 if emulate else None,
+            apply_index=ops.get("apply_idx"),
+        )
+        st, _, tr = store.merge_geo(st, topology)
+        is_read = ops["kind"] == duot_lib.READ
+        creg = client_reg[ops["client"]]
+        hreg = replica_reg[ops["home"]]
+        zi = jnp.zeros((G,), jnp.int32)
+        zf = jnp.zeros((G,), jnp.float32)
+        reg = (
+            reg[0] + zi.at[creg].add(res.stale.astype(jnp.int32)),
+            reg[1] + zi.at[creg].add(is_read.astype(jnp.int32)),
+            reg[2] + zf.at[creg].add(rtt[creg, hreg]),
+            reg[3] + zi.at[creg].add(1),
+        )
+        return (
+            st,
+            n_stale + jnp.sum(res.stale.astype(jnp.int32)),
+            n_viol + jnp.sum(res.violation.astype(jnp.int32)),
+            n_reads + jnp.sum(is_read.astype(jnp.int32)),
+            traffic + tr,
+            reg,
+        )
+
+    @jax.jit
+    def run(batched, tail):
+        z = jnp.int32(0)
+        zg = lambda dt: jnp.zeros((G,), dt)                   # noqa: E731
+        carry = (
+            store.init(), z, z, z, jnp.zeros((G, G), jnp.int32),
+            (zg(jnp.int32), zg(jnp.int32), zg(jnp.float32), zg(jnp.int32)),
+        )
+        n_rounds = batched["client"].shape[0]
+
+        def step(carry, ops):
+            return round_step(carry, ops, ops["step0"]), None
+
+        carry, _ = jax.lax.scan(step, carry, batched)
+        if rem:
+            carry = round_step(carry, tail, jnp.int32(n_rounds * sub))
+        return carry
+
+    return store, run
+
+
+def run_protocol_geo(
+    level: ConsistencyLevel,
+    w: Workload,
+    *,
+    topology=None,
+    n_ops: int = 6000,
+    n_clients: int = 16,
+    n_resources: int = 24,
+    merge_every: int = 8,
+    delta: int = 24,
+    duot_cap: int = 2048,
+    seed: int = 0,
+    batch_size: int = 128,
+    audit: bool = True,
+    ingest: str = "auto",
+    cfg: ClusterConfig = PAPER_CLUSTER,
+    pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
+) -> dict[str, Any]:
+    """Run the protocol with region-aware propagation and billing.
+
+    Same batched engine and op stream as :func:`run_protocol`, but over
+    a :class:`repro.geo.topology.RegionTopology` (default: the paper's
+    3-region :data:`~repro.geo.topology.PAPER_TOPOLOGY`):
+
+      * the boundary merge is the **two-tier** region-grouped merge —
+        bit-identical state to the flat merge, with every delivery
+        attributed to a region pair (LAN fan-out on the diagonal, one
+        WAN hop per (write, newly-reached region) off it);
+      * the resulting ``(G, G)`` traffic matrix is billed **per pair**
+        through the topology's tiered egress matrix (eq. 8 generalized)
+        instead of one aggregate inter-DC scalar — the per-pair bill
+        also lands next to the scalar approximation so the gap is
+        visible;
+      * per-op latency is the **RTT-matrix lookup** between the
+        client's region and the serving replica's region (replacing the
+        two-value step function), reported per region alongside
+        per-region staleness.
+
+    On the degenerate single-region topology
+    (``repro.geo.topology.single_region(3)``) every delivery is
+    intra-region, every RTT is the LAN value, and the returned protocol
+    metrics (staleness/violations/severity/reads/drops) are
+    **bit-identical** to :func:`run_protocol` for every consistency
+    level — asserted in ``tests/test_geo.py`` and by the CI geo smoke.
+    """
+    if topology is None:
+        from repro.geo.topology import PAPER_TOPOLOGY
+
+        topology = PAPER_TOPOLOGY
+    P = topology.n_replicas
+    stream = _op_stream(w, n_ops, n_clients, n_resources, seed, P)
+    sub, rem, n_rounds, emulate = _cadence_plan(
+        level, n_ops, batch_size, merge_every, delta
+    )
+    store, run = _geo_runner(
+        level, n_clients, n_resources, merge_every, delta, duot_cap,
+        sub, rem, emulate, topology, ingest,
+    )
+    batched, tail = _batch_inputs(stream, store, sub, n_rounds, rem, emulate)
+    st, n_stale, n_viol, n_reads, traffic, reg = run(batched, tail)
+
+    severity = 0.0
+    if audit:
+        res_audit = store.audit(st, delta=store.delta if store.delta else 0)
+        severity = float(res_audit.severity)
+    n_reads_f = max(1, int(n_reads))
+    stale_rate = float(n_stale) / n_reads_f
+
+    # -- region-pair billing (eq. 8 over the measured traffic matrix) -------
+    events = np.asarray(traffic, np.int64)
+    prop_gb = events * cfg.row_bytes / 1e9
+    off = ~np.eye(topology.n_regions, dtype=bool)
+    inter_gb = float(prop_gb[off].sum())
+    intra_gb = float(np.diag(prop_gb).sum())
+    # One pricebook per run: a topology that pins a custom egress
+    # matrix wins, but the default paper-derived matrix follows a
+    # ``pricing`` override so the geo and scalar bills (and the
+    # instance/storage terms) never mix providers.
+    egress = topology.egress
+    if egress == cost_model.EgressMatrix.from_pricing(
+        topology.n_regions, cost_model.PAPER_PRICING
+    ):
+        egress = cost_model.EgressMatrix.from_pricing(
+            topology.n_regions, pricing
+        )
+    network_geo = cost_model.cost_network_matrix(
+        traffic_gb=prop_gb, egress=egress
+    )
+    network_scalar = cost_model.cost_network(
+        inter_dc_gb=inter_gb, intra_dc_gb=intra_gb, pricing=pricing
+    )
+    thr, _ = throughput_model(level, w, 64, cfg, stale_rate)
+    runtime_s = n_ops / thr
+    bill = cost_model.cost_all(
+        nb_instances=cfg.n_nodes,
+        runtime_hours=runtime_s / 3600.0,
+        hosted_gb=cfg.total_data_gb_after_replication,
+        months=runtime_s / (30 * 24 * 3600.0),
+        io_requests=float(n_ops) * level.write_acks(cfg.replication_factor),
+        inter_dc_gb=inter_gb,
+        intra_dc_gb=intra_gb,
+        pricing=pricing,
+    )
+    cost = bill.as_dict()
+    cost["network_geo"] = network_geo
+    cost["network_scalar"] = network_scalar
+    cost["total_geo"] = cost["instances"] + cost["storage"] + network_geo
+
+    reg_stale, reg_reads, reg_lat, reg_ops = (np.asarray(x) for x in reg)
+    return {
+        "staleness_rate": stale_rate,
+        "violation_rate": float(n_viol) / n_reads_f,
+        "severity": severity,
+        "n_reads": int(n_reads),
+        "dropped_writes": int(st.cluster.pend_dropped),
+        "n_regions": topology.n_regions,
+        "traffic_events": events.tolist(),
+        "propagation_gb": prop_gb.tolist(),
+        "mean_latency_ms": float(reg_lat.sum() / max(1, reg_ops.sum())),
+        "per_region": {
+            "reads": reg_reads.tolist(),
+            "stale": reg_stale.tolist(),
+            "ops": reg_ops.tolist(),
+            "staleness_rate": (
+                reg_stale / np.maximum(1, reg_reads)
+            ).tolist(),
+            "mean_latency_ms": (
+                reg_lat / np.maximum(1, reg_ops)
+            ).tolist(),
+        },
+        "cost": cost,
     }
 
 

@@ -1,0 +1,55 @@
+"""Regression tests for the shared benchmark plumbing.
+
+``BENCH_PROTOCOL.json`` is the cross-PR perf trajectory: a standalone
+bench run must merge into it, not wipe every other suite's rows (the
+old ``write_json`` wrote only the current process's ``RESULTS``).
+"""
+
+import json
+
+import pytest
+
+from benchmarks import common
+
+
+@pytest.fixture
+def fresh_results(monkeypatch):
+    monkeypatch.setattr(common, "RESULTS", {})
+    return common.RESULTS
+
+
+def test_write_json_merges_with_existing_rows(tmp_path, fresh_results):
+    path = tmp_path / "BENCH.json"
+    path.write_text(json.dumps({
+        "protocol_X_STCC": {"us_per_call": 1.0, "derived": "keep-me"},
+        "geo_old": {"us_per_call": 2.0, "derived": "stale"},
+    }))
+    common.emit("geo_old", 9.0, "fresh")
+    common.emit("geo_new", 3.0, "new-row")
+    out = json.loads(common.write_json(path).read_text())
+    # Other suites' rows survive a standalone run...
+    assert out["protocol_X_STCC"]["derived"] == "keep-me"
+    # ... rows re-emitted by this process override their stale versions...
+    assert out["geo_old"]["derived"] == "fresh"
+    assert out["geo_old"]["us_per_call"] == 9.0
+    # ... and new rows land.
+    assert out["geo_new"]["derived"] == "new-row"
+
+
+def test_write_json_handles_missing_and_corrupt_files(tmp_path, fresh_results):
+    common.emit("row", 1.0, "x")
+    # Missing file: plain write.
+    path = common.write_json(tmp_path / "missing.json")
+    assert json.loads(path.read_text()) == {
+        "row": {"us_per_call": 1.0, "derived": "x"}
+    }
+    # Corrupt file: treated as empty, not fatal.
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    out = json.loads(common.write_json(bad).read_text())
+    assert out["row"]["derived"] == "x"
+    # Non-dict JSON (a list) is ignored too.
+    lst = tmp_path / "list.json"
+    lst.write_text("[1, 2]")
+    out = json.loads(common.write_json(lst).read_text())
+    assert out == {"row": {"us_per_call": 1.0, "derived": "x"}}

@@ -72,3 +72,33 @@ def test_level_fanout_within_topology(level):
 def test_inter_dc_slower_than_intra():
     cfg = PAPER_CLUSTER
     assert cfg.inter_dc_rtt_ms > cfg.intra_dc_rtt_ms
+
+
+def test_latency_lookups_derive_from_rtt_matrix():
+    """The step functions are now RTT-matrix lookups — and reproduce
+    the paper's exact values (0.115 ms intra, 45.7 ms inter) for the
+    3-DC instance, acks/consulted by acks/consulted."""
+    cfg = PAPER_CLUSTER
+    topo = cfg.topology()
+    assert topo.n_regions == cfg.n_datacenters
+    assert topo.n_replicas == cfg.replication_factor
+    assert topo.regions().tolist() == cfg.replica_dcs().tolist()
+    for acks in range(1, cfg.replication_factor + 1):
+        expect = (
+            0.115 if acks <= cfg.replicas_per_dc else 45.7
+        )
+        assert cfg.ack_latency_ms(acks) == expect          # exact float
+        assert cfg.read_latency_ms(acks) == expect
+        assert topo.ack_latency_ms(0, acks) == expect
+    # A non-paper topology answers through the same lookup: with 2
+    # replicas per DC the local plateau shrinks accordingly.
+    small = ClusterConfig(n_datacenters=5, replicas_per_dc=2,
+                          replication_factor=10)
+    assert small.ack_latency_ms(2) == small.intra_dc_rtt_ms
+    assert small.ack_latency_ms(3) == small.inter_dc_rtt_ms
+    # Out-of-placement fan-outs clamp like the old step function did
+    # (a 2-DC config keeps the default replication_factor=12 but only
+    # places 8 replicas — ALL must still price, not raise).
+    two_dc = ClusterConfig(n_datacenters=2)
+    assert two_dc.ack_latency_ms(12) == two_dc.inter_dc_rtt_ms
+    assert two_dc.ack_latency_ms(0) == two_dc.intra_dc_rtt_ms

@@ -1,0 +1,642 @@
+"""Geo-replication subsystem: topology, two-tier merge, planner, serving.
+
+The acceptance bars of the geo layer:
+
+  * ``run_protocol_geo`` is bit-identical to ``run_protocol`` on the
+    degenerate single-region topology for every policy level;
+  * the two-tier merge's *state* is bit-identical to the flat merge on
+    any topology (only accounting changes), and its (G, G) traffic
+    attribution is conservative (every delivery counted exactly once,
+    one WAN hop per newly-reached region);
+  * ``ops.placement_score`` is bit-exact across the Pallas kernel, its
+    tiled jnp twin, and the dense oracle under jit;
+  * the placement planner never returns a plan costlier than the
+    paper's static 4-per-DC placement at equal SLA feasibility.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.core.consistency import ConsistencyLevel
+from repro.core.replicated_store import ReplicatedStore
+from repro.geo import placement as placement_lib
+from repro.geo.topology import (
+    PAPER_TOPOLOGY,
+    RegionTopology,
+    single_region,
+    uniform_topology,
+)
+from repro.policy.sla import SLA, SLA_RELAXED
+from repro.storage.simulator import run_protocol, run_protocol_geo
+from repro.storage.ycsb import WORKLOAD_A
+
+POLICY_LEVELS = (
+    ConsistencyLevel.ONE,
+    ConsistencyLevel.CAUSAL,
+    ConsistencyLevel.TCC,
+    ConsistencyLevel.X_STCC,
+    ConsistencyLevel.QUORUM,
+    ConsistencyLevel.ALL,
+)
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+
+def test_paper_topology_shape():
+    t = PAPER_TOPOLOGY
+    assert t.n_regions == 3
+    assert t.n_replicas == 3
+    assert t.region_counts().tolist() == [1, 1, 1]
+    rtt = t.rtt()
+    assert np.allclose(np.diag(rtt), np.float32(0.115))
+    off = rtt[~np.eye(3, dtype=bool)]
+    assert np.allclose(off, np.float32(45.7))
+
+
+def test_topology_latency_lookups_reproduce_paper_values():
+    # The 12-key-replica placement (4 per DC): the RTT-matrix lookup
+    # reproduces the old step function exactly.
+    t = uniform_topology(
+        (0,) * 4 + (1,) * 4 + (2,) * 4,
+        intra_rtt_ms=0.115, inter_rtt_ms=45.7,
+    )
+    for acks in range(1, 5):
+        assert t.ack_latency_ms(0, acks) == 0.115
+    for acks in range(5, 13):
+        assert t.ack_latency_ms(0, acks) == 45.7
+    with pytest.raises(ValueError, match="acks"):
+        t.ack_latency_ms(0, 13)
+    with pytest.raises(ValueError, match="acks"):
+        t.ack_latency_ms(0, 0)
+
+
+def test_topology_nearest_replica_and_client_regions():
+    t = uniform_topology((0, 0, 1, 1), intra_rtt_ms=0.1, inter_rtt_ms=40.0)
+    assert t.nearest_replica(0) == 0      # tie within region -> lowest id
+    assert t.nearest_replica(1) == 2
+    # Liveness restricts the choice; no live replica raises.
+    assert t.nearest_replica(0, up=[False, True, True, True]) == 1
+    assert t.nearest_replica(0, up=[False, False, True, True]) == 2
+    with pytest.raises(ValueError, match="live"):
+        t.nearest_replica(0, up=[False] * 4)
+    # Default population: region of the home replica (client % P).
+    assert t.client_region_of([0, 1, 2, 3, 4]).tolist() == [0, 0, 1, 1, 0]
+    skewed = dataclasses.replace(t, client_region=(1,))
+    assert skewed.client_region_of([0, 7]).tolist() == [1, 1]
+    # Intra-region link mask is block-diagonal.
+    assert t.intra_link().tolist() == [
+        [True, True, False, False],
+        [True, True, False, False],
+        [False, False, True, True],
+        [False, False, True, True],
+    ]
+
+
+def test_topology_validation():
+    eg = cost_model.EgressMatrix.from_pricing(2, cost_model.PAPER_PRICING)
+    with pytest.raises(ValueError, match="square"):
+        RegionTopology((0,), ((0.1, 1.0),), eg)
+    with pytest.raises(ValueError, match="out of range"):
+        RegionTopology((2,), ((0.1, 1.0), (1.0, 0.1)), eg)
+    with pytest.raises(ValueError, match="egress"):
+        RegionTopology(
+            (0,), ((0.1,),),
+            cost_model.EgressMatrix.from_pricing(2, cost_model.PAPER_PRICING),
+        )
+    with pytest.raises(ValueError, match="client region"):
+        RegionTopology((0, 1), ((0.1, 1.0), (1.0, 0.1)), eg,
+                       client_region=(5,))
+
+
+# ---------------------------------------------------------------------------
+# Two-tier merge: state identity + traffic attribution
+# ---------------------------------------------------------------------------
+
+
+def _random_store_state(topology, level, seed=0, n_batches=3, b=32):
+    store = ReplicatedStore(
+        topology.n_replicas, 8, 12, level=level, pending_cap=256,
+        delta=1 << 20, merge_every=1 << 20,  # keep writes pending
+    )
+    rng = np.random.default_rng(seed)
+    st = store.init()
+    for _ in range(n_batches):
+        st, _ = store.apply_batch(
+            st,
+            client=rng.integers(0, 8, b),
+            replica=rng.integers(0, topology.n_replicas, b),
+            resource=rng.integers(0, 12, b),
+            kind=rng.integers(0, 2, b),
+        )
+    return store, st
+
+
+@pytest.mark.parametrize("level", [
+    ConsistencyLevel.X_STCC, ConsistencyLevel.CAUSAL, ConsistencyLevel.ONE,
+])
+def test_merge_geo_state_bit_identical_to_flat_merge(level):
+    topo = uniform_topology(
+        (0, 0, 1, 1, 2), intra_rtt_ms=0.1, inter_rtt_ms=40.0
+    )
+    store, st = _random_store_state(topo, level, seed=3)
+    flat, _ = store.merge(st, delta=0)
+    geo, _, traffic = store.merge_geo(st, topo, delta=0)
+    for a, b_ in zip(jax.tree.leaves(flat), jax.tree.leaves(geo)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    # Conservation: every (write, replica) delivery of the merge is
+    # attributed to exactly one region pair.
+    newly = np.asarray(geo.cluster.pend_applied) & ~np.asarray(
+        st.cluster.pend_applied
+    )
+    assert int(np.asarray(traffic).sum()) == int(newly.sum())
+
+
+def test_merge_geo_traffic_attribution_two_tier():
+    # One write committed at replica 0 (region 0); the fleet spans
+    # regions {0: [0, 1], 1: [2, 3], 2: [4]}.  The merge ships exactly
+    # one WAN copy into each empty region plus LAN fan-out at home and
+    # within region 1.
+    topo = uniform_topology(
+        (0, 0, 1, 1, 2), intra_rtt_ms=0.1, inter_rtt_ms=40.0
+    )
+    store = ReplicatedStore(5, 4, 4, level=ConsistencyLevel.X_STCC,
+                            pending_cap=16)
+    st = store.init()
+    st, _ = store.apply_batch(
+        st, client=np.array([0]), replica=np.array([0]),
+        resource=np.array([1]), kind=np.array([1]),
+    )
+    st2, _, traffic = store.merge_geo(st, topo, delta=0)
+    tr = np.asarray(traffic)
+    # 4 deliveries: replica 1 (LAN 0->0), replicas 2,3 (one WAN 0->1 +
+    # one LAN 1->1), replica 4 (one WAN 0->2).
+    assert tr.tolist() == [
+        [1, 1, 1],
+        [0, 1, 0],
+        [0, 0, 0],
+    ]
+    assert not bool(np.asarray(st2.cluster.pend_live).any())
+
+
+def test_merge_geo_wan_source_is_nearest_holder_region():
+    # Asymmetric RTTs: region 2 is near region 1 and far from region 0.
+    rtt = (
+        (0.1, 30.0, 80.0),
+        (30.0, 0.1, 5.0),
+        (80.0, 5.0, 0.1),
+    )
+    topo = RegionTopology(
+        (0, 1, 2), rtt,
+        cost_model.EgressMatrix.from_pricing(3, cost_model.PAPER_PRICING),
+    )
+    store = ReplicatedStore(3, 4, 4, level=ConsistencyLevel.X_STCC,
+                            pending_cap=16)
+    st = store.init()
+    st, _ = store.apply_batch(
+        st, client=np.array([0]), replica=np.array([0]),
+        resource=np.array([0]), kind=np.array([1]),
+    )
+    # First merge restricted to {0, 1}: region 2 unreachable.
+    up = np.array([True, True, False])
+    link = np.ones((3, 3), bool)
+    st, _, tr1 = store.merge_geo(st, topo, delta=0, up=up, link=link)
+    assert np.asarray(tr1).tolist() == [
+        [0, 1, 0], [0, 0, 0], [0, 0, 0],
+    ]
+    # Heal: the copy into region 2 ships from region 1 (5 ms), not the
+    # coordinator region 0 (80 ms) — nearest-holder attribution.
+    st, _, tr2 = store.merge_geo(st, topo, delta=0)
+    assert np.asarray(tr2).tolist() == [
+        [0, 0, 0], [0, 0, 1], [0, 0, 0],
+    ]
+
+
+def test_merge_geo_partition_stops_inter_region_traffic():
+    # Severing the WAN (links only within regions) must keep all
+    # traffic on the diagonal and leave remote regions unserved.
+    topo = uniform_topology(
+        (0, 0, 1, 1), intra_rtt_ms=0.1, inter_rtt_ms=40.0
+    )
+    store = ReplicatedStore(4, 4, 4, level=ConsistencyLevel.X_STCC,
+                            pending_cap=16)
+    st = store.init()
+    st, _ = store.apply_batch(
+        st, client=np.array([0]), replica=np.array([0]),
+        resource=np.array([0]), kind=np.array([1]),
+    )
+    up = np.ones(4, bool)
+    st2, _, tr = store.merge_geo(
+        st, topo, delta=0, up=up, link=topo.intra_link()
+    )
+    tr = np.asarray(tr)
+    assert tr[0, 0] == 1 and tr.sum() == 1   # LAN fan-out only
+    assert bool(np.asarray(st2.cluster.pend_live)[0])  # still pending
+    # Healing the WAN delivers the remote region in one pass.
+    st3, _, tr2 = store.merge_geo(st2, topo, delta=0)
+    tr2 = np.asarray(tr2)
+    assert tr2[0, 1] == 1 and tr2[1, 1] == 1 and tr2.sum() == 2
+
+
+def test_merge_geo_rejects_mismatched_topology():
+    store = ReplicatedStore(3, 4, 4, level=ConsistencyLevel.X_STCC)
+    st = store.init()
+    with pytest.raises(ValueError, match="replicas"):
+        store.merge_geo(st, single_region(5))
+
+
+# ---------------------------------------------------------------------------
+# run_protocol_geo
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("level", POLICY_LEVELS,
+                         ids=[lv.value for lv in POLICY_LEVELS])
+def test_run_protocol_geo_single_region_bit_identical(level):
+    kw = dict(n_ops=768, n_clients=8, n_resources=12, batch_size=128,
+              seed=1)
+    base = run_protocol(level, WORKLOAD_A, **kw)
+    geo = run_protocol_geo(
+        level, WORKLOAD_A, topology=single_region(3), **kw
+    )
+    for k in ("staleness_rate", "violation_rate", "severity", "n_reads",
+              "dropped_writes"):
+        assert base[k] == geo[k], (level, k)
+    # Degenerate topology: every delivery is intra-region.
+    tr = np.asarray(geo["traffic_events"])
+    assert tr.shape == (1, 1)
+    assert geo["cost"]["network_geo"] == 0.0  # intra is free in Table 2
+
+
+def test_run_protocol_geo_paper_topology_meters_wan_traffic():
+    out = run_protocol_geo(
+        ConsistencyLevel.X_STCC, WORKLOAD_A, n_ops=768, n_clients=8,
+        n_resources=12, batch_size=128, audit=False,
+    )
+    tr = np.asarray(out["traffic_events"])
+    assert tr.shape == (3, 3)
+    assert np.diag(tr).sum() == 0      # one replica per region: no LAN
+    assert tr.sum() > 0                # propagation happened
+    assert out["cost"]["network_geo"] > 0.0
+    # Flat paper pricing: per-pair billing of the matrix equals the
+    # scalar bill of its aggregate (no volume tiers to diverge on).
+    assert out["cost"]["network_geo"] == pytest.approx(
+        out["cost"]["network_scalar"])
+    # Per-region telemetry covers every op and every read.
+    assert sum(out["per_region"]["ops"]) == 768
+    assert sum(out["per_region"]["reads"]) == out["n_reads"]
+    assert out["mean_latency_ms"] > 0.0
+
+
+def test_run_protocol_geo_pricing_override_uses_one_pricebook():
+    # A `pricing` override re-derives the default egress matrix, so the
+    # per-pair and scalar bills (and instance/storage terms) never mix
+    # providers; a topology that pins a custom matrix keeps it.
+    out = run_protocol_geo(
+        ConsistencyLevel.X_STCC, WORKLOAD_A, n_ops=512, n_clients=8,
+        n_resources=12, batch_size=128, audit=False,
+        pricing=cost_model.GCP_PRICING,
+    )
+    # Flat first-tier volumes: per-pair == scalar within one pricebook
+    # (GCP's first tier is $0.12/GB; the paper book would say $0.01).
+    assert out["cost"]["network_geo"] == pytest.approx(
+        out["cost"]["network_scalar"])
+    wan_gb = sum(
+        out["propagation_gb"][g][h]
+        for g in range(3) for h in range(3) if g != h
+    )
+    assert out["cost"]["network_geo"] == pytest.approx(0.12 * wan_gb)
+    custom = dataclasses.replace(
+        PAPER_TOPOLOGY,
+        egress=cost_model.EgressMatrix(
+            pair_class=((0, 1, 1), (1, 0, 1), (1, 1, 0)),
+            class_per_gb=(0.0, 1.0),
+        ),
+    )
+    out2 = run_protocol_geo(
+        ConsistencyLevel.X_STCC, WORKLOAD_A, n_ops=512, n_clients=8,
+        n_resources=12, batch_size=128, audit=False, topology=custom,
+        pricing=cost_model.GCP_PRICING,
+    )
+    wan_gb2 = sum(
+        out2["propagation_gb"][g][h]
+        for g in range(3) for h in range(3) if g != h
+    )
+    assert out2["cost"]["network_geo"] == pytest.approx(1.0 * wan_gb2)
+
+
+def test_run_protocol_geo_skew_shifts_latency():
+    kw = dict(n_ops=768, n_clients=8, n_resources=12, batch_size=128,
+              audit=False)
+    base = run_protocol_geo(ConsistencyLevel.X_STCC, WORKLOAD_A, **kw)
+    hot = run_protocol_geo(
+        ConsistencyLevel.X_STCC, WORKLOAD_A,
+        topology=dataclasses.replace(PAPER_TOPOLOGY, client_region=(0,)),
+        **kw,
+    )
+    # With every client in region 0 but replicas spread, most serves
+    # cross the WAN: mean latency rises above the uniform population's.
+    assert hot["mean_latency_ms"] > base["mean_latency_ms"]
+    assert hot["per_region"]["ops"][0] == 768
+
+
+# ---------------------------------------------------------------------------
+# Placement scorer kernel (bit-exactness) + planner
+# ---------------------------------------------------------------------------
+
+
+def _score_inputs(seed=0, r=37, g=3, k=11):
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(0, 40, (r, g)).astype(np.float32)
+    writes = rng.integers(0, 15, (r, g)).astype(np.float32)
+    reads[rng.random((r, g)) < 0.3] = 0.0   # zero-demand cells
+    read_price = rng.random((k, g), np.float32) * 1e-5
+    write_price = rng.random((k, g), np.float32) * 1e-4
+    read_rtt = rng.choice(
+        np.asarray([0.115, 5.0, 45.7], np.float32), (k, g))
+    meta = np.stack([
+        rng.random(k).astype(np.float32) * 1e-3,
+        (rng.random(k) > 0.2).astype(np.float32),
+    ])
+    return reads, writes, read_price, write_price, read_rtt, meta
+
+
+def test_placement_score_bit_exact_across_impls_under_jit():
+    from repro.kernels import ops as kernel_ops
+
+    args = tuple(jnp.asarray(a) for a in _score_inputs())
+    outs = {}
+    for impl in ("dense", "tiled", "pallas"):
+        fn = jax.jit(
+            lambda *a, impl=impl: kernel_ops.placement_score(
+                *a, max_latency_ms=10.0, impl=impl
+            )
+        )
+        outs[impl] = jax.tree.map(np.asarray, fn(*args))
+    for impl in ("tiled", "pallas"):
+        np.testing.assert_array_equal(outs[impl][0], outs["dense"][0])
+        np.testing.assert_array_equal(outs[impl][1], outs["dense"][1])
+    with pytest.raises(ValueError, match="impl"):
+        kernel_ops.placement_score(
+            *args, max_latency_ms=10.0, impl="bogus"
+        )
+
+
+def test_placement_score_semantics():
+    from repro.kernels.ref import (
+        INFEASIBLE_PENALTY,
+        STRUCTURAL_WEIGHT,
+        placement_score_ref,
+    )
+
+    reads = np.array([[10.0, 0.0]], np.float32)
+    writes = np.zeros((1, 2), np.float32)
+    read_price = np.array([[1e-6, 1e-6], [2e-6, 2e-6]], np.float32)
+    write_price = np.zeros((2, 2), np.float32)
+    # Candidate 0 serves region 0 across the WAN; candidate 1 locally.
+    read_rtt = np.array([[45.7, 0.1], [0.1, 0.1]], np.float32)
+    meta = np.array([[1e-5, 1e-5], [1.0, 1.0]], np.float32)
+    util, feas = placement_score_ref(
+        reads, writes, read_price, write_price, read_rtt, meta,
+        max_latency_ms=10.0,
+    )
+    util, feas = np.asarray(util), np.asarray(feas)
+    # Candidate 0 is infeasible (latency violation in a demanded
+    # region) despite being cheaper; candidate 1 wins the argmax.
+    assert feas.tolist() == [[0, 1]]
+    assert util[0, 1] > util[0, 0]
+    assert util[0, 0] == pytest.approx(
+        -(1e-5 + 10.0 * 1e-6) - INFEASIBLE_PENALTY * STRUCTURAL_WEIGHT,
+        rel=1e-5,
+    )
+    # Zero-demand region 1's WAN latency never counts against a plan.
+    read_rtt2 = np.array([[0.1, 45.7], [0.1, 0.1]], np.float32)
+    _, feas2 = placement_score_ref(
+        reads, writes, read_price, write_price, read_rtt2, meta,
+        max_latency_ms=10.0,
+    )
+    assert np.asarray(feas2).tolist() == [[1, 1]]
+
+
+def test_enumerate_candidates_and_static():
+    cand = placement_lib.enumerate_candidates(
+        3, max_per_region=2, min_total=1
+    )
+    assert cand.shape == (26, 3)                 # 3^3 - 1 zero vector
+    assert (cand.sum(axis=1) >= 1).all()
+    assert (cand <= 2).all()
+    capped = placement_lib.enumerate_candidates(
+        3, max_per_region=2, max_total=3
+    )
+    assert (capped.sum(axis=1) <= 3).all()
+    with pytest.raises(ValueError, match="candidate"):
+        placement_lib.enumerate_candidates(2, max_per_region=1, min_total=5)
+    assert placement_lib.static_counts(PAPER_TOPOLOGY, 4).tolist() == [
+        4, 4, 4,
+    ]
+
+
+def test_planner_never_costlier_than_static_at_equal_feasibility():
+    rng = np.random.default_rng(7)
+    reads = rng.integers(0, 60, (24, 3)).astype(np.float32)
+    writes = rng.integers(0, 25, (24, 3)).astype(np.float32)
+    for sla in (SLA_RELAXED, SLA(name="lat", max_read_latency_ms=1.0)):
+        plan = placement_lib.plan_placement(
+            PAPER_TOPOLOGY, reads, writes, sla
+        )
+        static = placement_lib.evaluate_counts(
+            PAPER_TOPOLOGY, placement_lib.static_counts(PAPER_TOPOLOGY, 4),
+            reads, writes, sla,
+        )
+        assert plan.total_cost <= static["total_cost"] * (1 + 1e-6)
+        assert plan.n_feasible >= static["n_feasible"]
+        # The planner's utilities dominate the static plan's per
+        # resource (static is in the candidate set).
+        assert (plan.utility >= static["utility"] - 1e-6).all()
+
+
+def test_planner_places_replicas_where_demand_is():
+    # All demand in region 0 under a latency SLA tighter than the WAN:
+    # every feasible plan must host in region 0, and the cheapest such
+    # plan is a single local replica.
+    reads = np.zeros((6, 3), np.float32)
+    reads[:, 0] = 100.0
+    writes = np.zeros((6, 3), np.float32)
+    sla = SLA(name="local", max_read_latency_ms=1.0)
+    plan = placement_lib.plan_placement(PAPER_TOPOLOGY, reads, writes, sla)
+    assert plan.feasible.all()
+    assert (plan.counts[:, 0] >= 1).all()
+    assert (plan.counts.sum(axis=1) == 1).all()
+    # Durability floor forces extra copies but keeps region 0 hosted.
+    plan2 = placement_lib.plan_placement(
+        PAPER_TOPOLOGY, reads, writes, sla, min_replicas=3
+    )
+    assert plan2.feasible.all()
+    assert (plan2.counts[:, 0] >= 1).all()
+    assert (plan2.counts.sum(axis=1) >= 3).all()
+    assert plan2.total_cost >= plan.total_cost
+
+
+def test_fleet_topology_replays_a_plan():
+    # A planner-style placement (2 copies in region 0, 1 in region 2)
+    # becomes a replayable topology: same matrices, expanded fleet,
+    # demand pinned to the base population.
+    fleet = placement_lib.fleet_topology(PAPER_TOPOLOGY, (2, 0, 1))
+    assert fleet.replica_region == (0, 0, 2)
+    assert fleet.client_region == (0, 1, 2)
+    assert fleet.rtt_ms == PAPER_TOPOLOGY.rtt_ms
+    out = run_protocol_geo(
+        ConsistencyLevel.X_STCC, WORKLOAD_A, topology=fleet,
+        n_ops=512, n_clients=8, n_resources=12, batch_size=128,
+        audit=False,
+    )
+    tr = np.asarray(out["traffic_events"])
+    assert tr.shape == (3, 3)
+    assert tr[1].sum() == 0 and tr[:, 1].sum() == 0  # region 1 hosts none
+    assert tr[0, 0] > 0                              # LAN fan-out at home
+    with pytest.raises(ValueError, match="regions"):
+        placement_lib.fleet_topology(PAPER_TOPOLOGY, (1, 1))
+    with pytest.raises(ValueError, match="at least one"):
+        placement_lib.fleet_topology(PAPER_TOPOLOGY, (0, 0, 0))
+
+
+def test_region_demand_attribution():
+    topo = dataclasses.replace(PAPER_TOPOLOGY, client_region=(0, 1))
+    client = np.array([0, 1, 2, 3, 0])
+    kind = np.array([0, 1, 0, 1, 1])     # reads at 0,2; writes at 1,3,4
+    resource = np.array([0, 0, 1, 1, 0])
+    reads, writes = placement_lib.region_demand(
+        client, kind, resource, topo, n_resources=2
+    )
+    # Clients alternate regions 0/1 via the population table.
+    assert reads.tolist() == [[1.0, 0.0, 0.0], [1.0, 0.0, 0.0]]
+    assert writes.tolist() == [[1.0, 1.0, 0.0], [0.0, 1.0, 0.0]]
+
+
+# ---------------------------------------------------------------------------
+# Geo-aware serving
+# ---------------------------------------------------------------------------
+
+
+class _NullModel:
+    def prefill(self, params, batch):
+        return None, None
+
+    def decode_step(self, params, cache, tokens):
+        return None, None
+
+
+def _geo_engine(level=ConsistencyLevel.X_STCC):
+    from repro.serve.engine import ServingEngine
+
+    topo = uniform_topology(
+        (0, 0, 1, 1), intra_rtt_ms=0.1, inter_rtt_ms=40.0
+    )
+    eng = ServingEngine(
+        _NullModel(), level, jit=False, max_replicas=4, max_sessions=8
+    )
+    for i in range(4):
+        eng.publish(object(), version=1, replica=i)
+    eng.set_topology(topo, session_region=[0, 1] * 4)
+    return eng, topo
+
+
+def test_serving_routes_to_nearest_region_replica():
+    from repro.serve.engine import ServeSession
+
+    eng, _ = _geo_engine()
+    assert eng.route(ServeSession(0)) == 0   # region 0 -> replica 0
+    assert eng.route(ServeSession(1)) == 2   # region 1 -> replica 2
+    # Down nearest replica: next-nearest in-region replica takes over.
+    eng.fail_replica(0)
+    assert eng.route(ServeSession(0)) == 1
+    eng.heal_replica(0)
+
+
+def test_serving_geo_failover_is_counted():
+    # A down nearest replica is still the session's natural target, so
+    # routing around it must count as a failover (the PR-4 contract) —
+    # not silently resolve to the nearest live replica.
+    from repro.serve.engine import ServeSession
+
+    eng, _ = _geo_engine(ConsistencyLevel.ONE)
+    eng.fail_replica(0)
+    assert eng.route(ServeSession(0)) == 1       # next-nearest in-region
+    assert eng.failovers == 1 and eng.reroutes == 1
+    replica, _ = eng.route_batch([ServeSession(0), ServeSession(1)])
+    assert np.asarray(replica).tolist() == [1, 2]
+    assert eng.failovers == 2                    # batch counted it too
+    eng.heal_replica(0)
+    eng.route(ServeSession(0))
+    assert eng.failovers == 2                    # healed: no new failover
+
+
+def test_serving_reroutes_to_nearest_admissible_replica():
+    from repro.serve.engine import ServeSession
+
+    eng, _ = _geo_engine()
+    # v2 lands only on replica 2 (region 1); session 0 (region 0)
+    # observes it there, then its floor forces the cross-region serve.
+    eng.publish(object(), version=2, replica=2)
+    s = ServeSession(0)
+    eng._observe(s, eng.route(s, preferred=2))
+    assert eng.route(s) == 2
+    replica, served = eng.route_batch([s, ServeSession(1)])
+    assert np.asarray(replica).tolist() == [2, 2]
+    assert np.asarray(served).tolist() == [2, 2]
+
+
+def test_serving_geo_scalar_batch_parity_for_unguarded_failover():
+    # An unguarded session rerouting around a dead replica ignores
+    # floors in route(); the batched path must pick the identical
+    # target even when the batch also contains guarded sessions (whose
+    # branch computes floor-admissible targets).
+    from repro.serve.engine import ServeSession
+
+    eng, _ = _geo_engine()                     # engine default: X_STCC
+    eng.set_session_level(2, ConsistencyLevel.ONE)
+    eng.publish(object(), version=2, replica=3)   # only replica 3 has v2
+    eng.fail_replica(0)
+    s0 = ServeSession(0)                       # guarded, region 0
+    s2 = ServeSession(2, read_floor=2)         # unguarded, region 0,
+    s2_batch = ServeSession(2, read_floor=2)   # floor above nearest live
+    scalar = eng.route(s2)
+    assert scalar == 1                         # nearest live, floor ignored
+    replica, _ = eng.route_batch([s0, s2_batch])
+    assert int(np.asarray(replica)[1]) == scalar
+    eng.heal_replica(0)
+
+
+def test_serving_region_stats_accumulate_rtt_latency():
+    from repro.serve.engine import ServeSession
+
+    eng, topo = _geo_engine(ConsistencyLevel.ONE)
+    s0, s1 = ServeSession(0), ServeSession(1)
+    eng._observe(s0, eng.route(s0))          # in-region: 0.1 ms
+    eng._observe(s1, eng.route(s1, preferred=0))   # cross-region: 40 ms
+    stats = eng.region_stats()
+    assert stats["serves"] == [1, 1]
+    assert stats["mean_latency_ms"][0] == pytest.approx(0.1)
+    assert stats["mean_latency_ms"][1] == pytest.approx(40.0)
+
+
+def test_serving_topology_validation():
+    from repro.serve.engine import ServingEngine
+
+    eng = ServingEngine(
+        _NullModel(), ConsistencyLevel.ONE, jit=False, max_replicas=4,
+        max_sessions=8,
+    )
+    with pytest.raises(ValueError, match="replicas"):
+        eng.set_topology(single_region(2))
+    with pytest.raises(ValueError, match="session_region"):
+        eng.set_topology(single_region(4), session_region=[0, 0])
+    with pytest.raises(RuntimeError, match="topology"):
+        eng.region_stats()

@@ -129,3 +129,138 @@ def test_cost_network_uses_tiers():
     )
     assert gcp == pytest.approx(1024.0 * 0.12 + 1024.0 * 0.11)
     assert set(cost_model.PRICING_PRESETS) == {"paper", "gcp", "tpu"}
+
+
+# ---------------------------------------------------------------------------
+# Tiered egress billing over (G, G) traffic matrices
+# ---------------------------------------------------------------------------
+
+# Three regions, two WAN classes: 0<->1 are same-continent (cheap,
+# tiered), anything touching region 2 is cross-continent (pricier,
+# tiered).  Class 0 is the free intra-region diagonal.
+_GEO_EGRESS = cost_model.EgressMatrix(
+    pair_class=((0, 1, 2), (1, 0, 2), (2, 2, 0)),
+    class_per_gb=(0.0, 0.05, 0.12),
+    class_tiers=(
+        (),
+        ((100.0, 0.05), (1000.0, 0.03)),
+        ((100.0, 0.12), (1000.0, 0.08)),
+    ),
+)
+
+
+def test_egress_matrix_pair_billing():
+    e = _GEO_EGRESS
+    assert e.n_regions == 3
+    # Intra pairs are free; each WAN pair bills its own class tiers.
+    assert e.pair_cost(0, 0, 500.0) == 0.0
+    assert e.pair_cost(0, 1, 50.0) == pytest.approx(50.0 * 0.05)
+    assert e.pair_cost(0, 1, 150.0) == pytest.approx(
+        100.0 * 0.05 + 50.0 * 0.03)
+    assert e.pair_cost(0, 2, 150.0) == pytest.approx(
+        100.0 * 0.12 + 50.0 * 0.08)
+    traffic = [[0.0, 50.0, 10.0], [20.0, 0.0, 0.0], [0.0, 5.0, 0.0]]
+    total = cost_model.cost_network_matrix(
+        traffic_gb=traffic, egress=e
+    )
+    assert total == pytest.approx(
+        50.0 * 0.05 + 10.0 * 0.12 + 20.0 * 0.05 + 5.0 * 0.12)
+
+
+def test_egress_matrix_per_pair_vs_aggregate_scalar_ordering():
+    """Per-pair billing never undercuts aggregate-scalar billing.
+
+    Volume tiers are concave (price non-increasing in volume), so
+    splitting a WAN volume across pairs — each starting from the
+    expensive first tier — costs at least as much as pushing the
+    aggregate through one scalar tier list.  This is exactly the gap
+    the old two-scalar model hid.
+    """
+    tiers = ((100.0, 0.12), (1000.0, 0.08))
+    e = cost_model.EgressMatrix(
+        pair_class=((0, 1, 1), (1, 0, 1), (1, 1, 0)),
+        class_per_gb=(0.0, 0.12),
+        class_tiers=((), tiers),
+    )
+    scalar = cost_model.PricingScheme(inter_dc_tiers=tiers)
+    rngs = [
+        [[0.0, 80.0, 80.0], [40.0, 0.0, 20.0], [60.0, 30.0, 0.0]],
+        [[0.0, 500.0, 0.0], [0.0, 0.0, 0.0], [0.0, 0.0, 0.0]],
+        [[0.0, 1.0, 1.0], [1.0, 0.0, 1.0], [1.0, 1.0, 0.0]],
+    ]
+    for traffic in rngs:
+        agg = sum(
+            traffic[g][h] for g in range(3) for h in range(3) if g != h
+        )
+        per_pair = cost_model.cost_network_matrix(
+            traffic_gb=traffic, egress=e
+        )
+        assert per_pair >= scalar.inter_dc_cost(agg) - 1e-9
+    # Single-pair traffic is the equality case: one pair walks the
+    # same tier list as the aggregate.
+    one_pair = [[0.0, 500.0, 0.0], [0.0, 0.0, 0.0], [0.0, 0.0, 0.0]]
+    assert cost_model.cost_network_matrix(
+        traffic_gb=one_pair, egress=e
+    ) == pytest.approx(scalar.inter_dc_cost(500.0))
+
+
+def test_egress_matrix_tier_boundary_continuity():
+    e = _GEO_EGRESS
+    for g, h in ((0, 1), (0, 2), (2, 1)):
+        for boundary in (100.0, 1000.0):
+            eps = 1e-6
+            below = e.pair_cost(g, h, boundary - eps)
+            at = e.pair_cost(g, h, boundary)
+            above = e.pair_cost(g, h, boundary + eps)
+            assert at - below == pytest.approx(0.0, abs=1e-6)
+            assert above - at == pytest.approx(0.0, abs=1e-6)
+        # Monotone across the whole range incl. past the last tier.
+        grid = np.linspace(0.0, 3000.0, 301)
+        costs = np.array([e.pair_cost(g, h, x) for x in grid])
+        assert (np.diff(costs) >= -1e-12).all()
+        # Marginal price at a boundary is the next byte's tier.
+        assert e.pair_marginal(g, h, 100.0) == e.pair_marginal(g, h, 500.0)
+        assert e.pair_marginal(g, h, 0.0) >= e.pair_marginal(g, h, 1e6)
+
+
+def test_egress_matrix_zero_traffic_pairs_cost_exactly_zero():
+    e = _GEO_EGRESS
+    assert cost_model.cost_network_matrix(
+        traffic_gb=np.zeros((3, 3)), egress=e
+    ) == 0.0
+    # A zero pair contributes exactly nothing even when other pairs
+    # carry volume deep into their tiers.
+    traffic = np.zeros((3, 3))
+    traffic[0, 1] = 2000.0
+    only = cost_model.cost_network_matrix(traffic_gb=traffic, egress=e)
+    traffic2 = traffic.copy()
+    traffic2[2, 0] = 0.0
+    assert cost_model.cost_network_matrix(
+        traffic_gb=traffic2, egress=e
+    ) == only
+    assert e.pair_cost(0, 2, 0.0) == 0.0
+
+
+def test_egress_matrix_from_pricing_embeds_scalar_world():
+    e = cost_model.EgressMatrix.from_pricing(3, cost_model.GCP_PRICING)
+    # Off-diagonal pairs reproduce the scalar scheme's tiered integral,
+    # the diagonal the intra price.
+    for gb in (0.0, 100.0, 2048.0, 20480.0):
+        assert e.pair_cost(0, 1, gb) == pytest.approx(
+            cost_model.GCP_PRICING.inter_dc_cost(gb))
+    assert e.pair_cost(1, 1, 1000.0) == 0.0
+    assert e.pair_marginal(0, 2, 5000.0) == 0.11
+    assert np.asarray(e.price_matrix()).tolist() == [
+        [0.0, 0.12, 0.12], [0.12, 0.0, 0.12], [0.12, 0.12, 0.0],
+    ]
+
+
+def test_egress_matrix_validation():
+    with pytest.raises(ValueError, match="square"):
+        cost_model.EgressMatrix(((0, 1),), (0.0, 0.1))
+    with pytest.raises(ValueError, match="out of range"):
+        cost_model.EgressMatrix(((0, 5), (1, 0)), (0.0, 0.1))
+    with pytest.raises(ValueError, match="class_tiers"):
+        cost_model.EgressMatrix(
+            ((0, 1), (1, 0)), (0.0, 0.1), class_tiers=((),)
+        )
