@@ -1,0 +1,193 @@
+"""Gossip anti-entropy: cadence × outage rate × level.
+
+Runs ``run_protocol_faulty`` under the bench_faults outage/partition
+grid with the gossip subsystem at several cadences (plus hinted
+handoff) and lands the staleness-vs-network-cost trade surface in
+``BENCH_PROTOCOL.json`` — the paper's eq. 8 term as a *knob*: tighter
+cadence ships more digest + repair traffic and serves fresher reads.
+
+Rows (name, us_per_call, derived):
+  gossip_identity_<LEVEL>            derived = gossip-disabled run ==
+                                     plain faulty run (bit-identity)
+  gossip_<LEVEL>_c<C>_o<R>           derived = staleness rate at cadence
+                                     C under outage rate R
+  gossip_gb_<LEVEL>_c<C>_o<R>        derived = digest + repair GB
+  gossip_cost_<LEVEL>_c<C>_o<R>      derived = total bill incl. the
+                                     gossip network term
+  gossip_repair_<LEVEL>_c<C>_o<R>    derived = repair deliveries (incl.
+                                     drained hints)
+
+``REPRO_BENCH_NOPS`` scales the stream (default 3072; CI smoke uses a
+short one).  ``--check`` gates on: metric bit-identity between
+``gossip=None`` and ``GossipConfig(cadence=0)`` for every level, a
+*strict* staleness decrease at the tightest finite cadence for every
+faulty scenario (coarser cadences may fire too late in a short smoke
+run to repair anything — they must still never increase staleness),
+total cost staying within ``COST_OVERHEAD_MAX`` of the gossip-off
+bill, and a valid JSON round-trip.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+from benchmarks.common import emit, time_call, write_json
+
+N_OPS = int(os.environ.get("REPRO_BENCH_NOPS", "3072"))
+BATCH = 128
+LEVELS = ("X_STCC", "CAUSAL", "ONE")
+CADENCES = (0, 2, 8)            # merge epochs between exchanges (0 = off)
+OUTAGE_RATES = (0.25, 0.5)      # fraction of the run replica 1 is down
+HINT_CAP = 64
+# Finite-cadence repair traffic may not exceed this multiple of the
+# gossip-off total bill (the "bounded overhead" acceptance gate).
+COST_OVERHEAD_MAX = 1.25
+
+
+def _strip_gossip(result):
+    import copy
+
+    r = copy.deepcopy(result)
+    r.pop("gossip", None)
+    r.get("cost", {}).pop("gossip_network", None)
+    return r
+
+
+def _schedules():
+    """[(outage_rate, FaultSchedule)] — outage + healed 2|1 split."""
+    from repro.core import availability as av
+
+    n_ops = max(N_OPS, 4 * BATCH)
+    t = n_ops // BATCH
+    grid = []
+    for rate in OUTAGE_RATES:
+        o_start = max(1, t // 6)
+        o_dur = max(1, round(rate * max(0, t - o_start - 1)))
+        p_start = t // 2
+        p_dur = max(1, round(0.33 * max(0, t - p_start - 1)))
+        sched = av.replica_outage(t, 3, 1, o_start, o_start + o_dur)
+        sched = sched & av.partition(
+            t, 3, [[0, 1], [2]], p_start, p_start + p_dur)
+        grid.append((rate, sched))
+    return n_ops, grid
+
+
+def run() -> dict:
+    from repro.core.consistency import ConsistencyLevel
+    from repro.gossip import GossipConfig
+    from repro.storage.simulator import run_protocol_faulty
+    from repro.storage.ycsb import WORKLOAD_A
+
+    n_ops, grid = _schedules()
+    results = {"identity": {}, "scenarios": []}
+
+    # Bit-identity: a present-but-disabled gossip config must not move
+    # a single metric of the heal-only path.
+    _, sched0 = grid[0]
+    for name in LEVELS:
+        level = ConsistencyLevel[name]
+        base = run_protocol_faulty(
+            level, WORKLOAD_A, n_ops=n_ops, batch_size=BATCH,
+            schedule=sched0, schedule_unit=BATCH, audit=False)
+        us, off = time_call(
+            run_protocol_faulty, level, WORKLOAD_A, n_ops=n_ops,
+            batch_size=BATCH, schedule=sched0, schedule_unit=BATCH,
+            audit=False, gossip=GossipConfig(cadence=0),
+        )
+        same = _strip_gossip(off) == base
+        results["identity"][name] = same
+        emit(f"gossip_identity_{name}", us, same)
+
+    for rate, sched in grid:
+        for name in LEVELS:
+            level = ConsistencyLevel[name]
+            for cad in CADENCES:
+                gossip = GossipConfig(
+                    cadence=cad, hint_cap=HINT_CAP if cad else 0)
+                us, out = time_call(
+                    run_protocol_faulty, level, WORKLOAD_A, n_ops=n_ops,
+                    batch_size=BATCH, schedule=sched, schedule_unit=BATCH,
+                    audit=False, gossip=gossip,
+                )
+                g = out.get("gossip") or {}
+                gb = g.get("digest_gb", 0.0) + g.get("repair_gb", 0.0)
+                tag = f"{name}_c{cad}_o{rate}"
+                emit(f"gossip_{tag}", us, f"{out['staleness_rate']:.4f}")
+                emit(f"gossip_gb_{tag}", 0.0, f"{gb:.3e}")
+                emit(f"gossip_cost_{tag}", 0.0,
+                     f"{out['cost']['total']:.4e}")
+                emit(f"gossip_repair_{tag}", 0.0,
+                     g.get("repair_events", 0))
+                results["scenarios"].append(dict(
+                    level=name, cadence=cad, outage=rate,
+                    staleness_rate=out["staleness_rate"],
+                    violation_rate=out["violation_rate"],
+                    gossip_gb=gb,
+                    repair_events=g.get("repair_events", 0),
+                    cost_total=out["cost"]["total"],
+                ))
+    return results
+
+
+def check() -> int:
+    """CI smoke: run, persist JSON, gate on the gossip semantics."""
+    import json
+
+    results = run()
+    path = write_json()
+    json.loads(path.read_text())   # must round-trip
+    bad = []
+    for name, same in results["identity"].items():
+        if not same:
+            bad.append(
+                f"gossip-disabled run diverges from heal-only path "
+                f"for {name}")
+    by_key = {
+        (s["level"], s["outage"], s["cadence"]): s
+        for s in results["scenarios"]
+    }
+    tightest = min(c for c in CADENCES if c > 0)
+    for (name, rate, cad), s in by_key.items():
+        if cad == 0:
+            continue
+        off = by_key[(name, rate, 0)]
+        # Strong levels are never stale — nothing for gossip to repair.
+        # Only the tightest cadence must *strictly* decrease staleness;
+        # coarse cadences can fire too late in a short smoke run, but
+        # repair must never make reads staler.
+        if off["staleness_rate"] > 0:
+            strict = cad == tightest
+            ok = (
+                s["staleness_rate"] < off["staleness_rate"]
+                if strict else
+                s["staleness_rate"] <= off["staleness_rate"]
+            )
+            if not ok:
+                bad.append(
+                    f"{name} c{cad} o{rate}: staleness "
+                    f"{s['staleness_rate']:.4f} did not "
+                    f"{'decrease' if strict else 'stay below'} "
+                    f"{off['staleness_rate']:.4f}")
+        if s["cost_total"] > COST_OVERHEAD_MAX * off["cost_total"]:
+            bad.append(
+                f"{name} c{cad} o{rate}: cost {s['cost_total']:.3e} "
+                f"exceeds {COST_OVERHEAD_MAX}x the gossip-off bill "
+                f"{off['cost_total']:.3e}")
+        if s["repair_events"] == 0:
+            bad.append(f"{name} c{cad} o{rate}: finite cadence shipped "
+                       "no repairs under faults")
+    if bad:
+        for b in bad:
+            print(b, file=sys.stderr)
+        return 1
+    print(f"check OK: {len(results['scenarios'])} scenarios -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        sys.exit(check())
+    print("name,us_per_call,derived")
+    run()
+    write_json()

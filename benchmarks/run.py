@@ -31,6 +31,7 @@ def main() -> None:
     from benchmarks import (
         bench_faults,
         bench_geo,
+        bench_gossip,
         bench_kernels,
         bench_policy,
         bench_protocol,
@@ -45,6 +46,7 @@ def main() -> None:
         ("protocol", bench_protocol),
         ("faults", bench_faults),
         ("geo", bench_geo),
+        ("gossip", bench_gossip),
         ("policy", bench_policy),
         ("sync_cost", bench_sync_cost),
         ("kernels", bench_kernels),

@@ -113,17 +113,48 @@ def _stream_scheduler(sync_every: int, delta: int, n_clients: int,
     return sched
 
 
+class HintState(NamedTuple):
+    """Bounded per-replica hinted-handoff queues, as pure arrays.
+
+    Queue ``d`` holds hints for writes that could not reach replica
+    ``d`` when they committed (down, or partitioned from the
+    coordinator): the pending-ring slot plus the committed version —
+    the version guards against slot recycling, so a stale hint whose
+    slot was reused by a newer write validates to nothing instead of
+    delivering the wrong payload.  ``count[d]`` entries are live (queue
+    order = enqueue order); past-capacity hints bump ``dropped`` and
+    fall back to digest repair / anti-entropy."""
+
+    slot: Array      # (P, H) int32 — pending-ring slot per hint
+    version: Array   # (P, H) int32 — version committed for that slot
+    count: Array     # (P,) int32 — live hints per destination queue
+    dropped: Array   # () int32 — overflowed hints (handled by gossip)
+
+
+def make_hints(n_replicas: int, hint_cap: int) -> HintState:
+    return HintState(
+        slot=jnp.zeros((n_replicas, hint_cap), jnp.int32),
+        version=jnp.zeros((n_replicas, hint_cap), jnp.int32),
+        count=jnp.zeros((n_replicas,), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
 class StoreState(NamedTuple):
     """Protocol state + op log, as one pytree.
 
     ``pend_apply`` shadows the pending ring with each in-flight write's
     emulated sequential apply op-index (see
     ``ReplicatedStore.apply_batch``), carrying the merge-cadence
-    emulation across batch boundaries."""
+    emulation across batch boundaries.  ``hints`` holds the
+    hinted-handoff queues when the store was built with a nonzero
+    ``hint_cap`` — ``None`` otherwise, which keeps the pytree (and
+    every jitted trace over it) identical to a handoff-free store."""
 
     cluster: xstcc.ClusterState
     duot: duot_lib.Duot
     pend_apply: Array     # (Q,) int32
+    hints: HintState | None = None
 
 
 class ReplicatedStore:
@@ -147,6 +178,7 @@ class ReplicatedStore:
         pending_cap: int = 128,
         duot_cap: int = 1024,
         ingest: str = "auto",
+        hint_cap: int = 0,
     ):
         self.n_replicas = n_replicas
         self.n_clients = n_clients
@@ -154,6 +186,7 @@ class ReplicatedStore:
         self.level = level
         self.pending_cap = pending_cap
         self.duot_cap = duot_cap
+        self.hint_cap = hint_cap
         self.sync_every, self.delta = merge_cadence(level, merge_every, delta)
         self.enforce_sessions = level.is_session_guarded
         # Op-ingestion implementation (repro.kernels.ops.op_ingest):
@@ -181,6 +214,10 @@ class ReplicatedStore:
         return StoreState(
             cluster=cluster, duot=duot,
             pend_apply=jnp.zeros((q,), jnp.int32),
+            hints=(
+                make_hints(self.n_replicas, self.hint_cap)
+                if self.hint_cap > 0 else None
+            ),
         )
 
     # -- merge-cadence emulation -------------------------------------------------
@@ -349,7 +386,8 @@ class ReplicatedStore:
                 },
             )
         return (
-            StoreState(cluster=res.state, duot=duot, pend_apply=pend_apply),
+            StoreState(cluster=res.state, duot=duot,
+                       pend_apply=pend_apply, hints=state.hints),
             res,
         )
 
@@ -475,9 +513,248 @@ class ReplicatedStore:
         a re-joined partition side) converges in one pass.  Returns
         ``(state, events)`` with ``events`` the deliveries performed,
         charged as anti-entropy traffic by the failure drivers.
+
+        **Idempotent**: reconciliation is a background pass, not a
+        protocol step, so the logical clock is restored afterwards —
+        the merge's per-call clock tick otherwise advanced Δ-overdue
+        points purely by *re-invoking* anti-entropy, making repeated
+        passes at the same epoch observable (and double-billable: a
+        later pass could ship writes the clock drift newly aged past
+        Δ).  With the clock restored a second call at the same masks
+        is a fixpoint: identical state, zero deliveries
+        (``tests/test_faults.py::test_anti_entropy_idempotent``).
         """
         new, _, events = self.merge_faulty(state, up=up, link=link, delta=0)
+        new = new._replace(
+            cluster=new.cluster._replace(clock=state.cluster.clock)
+        )
         return new, events
+
+    # -- gossip anti-entropy / hinted handoff -------------------------------------
+
+    def gossip_round(
+        self,
+        state: StoreState,
+        *,
+        pairs: Array,        # (M, 2) int32 — ordered (replica, peer) pairs
+        up: Array,           # (P,) bool
+        link: Array,         # (P, P) bool — closed connectivity
+        n_ranges: int,
+        impl: str | None = None,
+    ) -> tuple[StoreState, dict[str, Array]]:
+        """One digest-exchange pass: diff, then repair stale ranges.
+
+        Each scheduled pair ``(a, b)`` (see
+        ``repro.gossip.scheduler.gossip_pairs``) exchanges per-range
+        version digests (``repro.gossip.digest.range_digests``), diffs
+        them through ``repro.kernels.ops.digest_compare``, and repairs
+        the ranges that differ with a *range-restricted* Δ=0 pair
+        merge: the pending ring is temporarily masked to live writes
+        whose resource falls in a stale range, and the link mask to the
+        ``a``–``b`` edge — so only targeted deliveries between the two
+        peers happen, metered exactly like ``merge_faulty``.  Pairs
+        that are down, disconnected, or self-loops are invalid and
+        repair nothing.  Like :meth:`anti_entropy` the pass is
+        clock-neutral (idempotent: a second identical round finds no
+        differing live ranges to ship and delivers zero).
+
+        Returns ``(state, telemetry)`` with ``telemetry`` a dict of
+        arrays: ``valid`` (M,) bool, ``ranges`` (M,) int32 stale
+        ranges per pair, ``growth`` (M, P) int32 deliveries per pair
+        by receiving replica, and ``gap_repaired`` () int32 — the
+        drop in total version staleness ``Σ max(0, global − replica)``
+        achieved by the round.
+        """
+        from repro.gossip import digest as digest_lib
+        from repro.kernels import ops as kernel_ops
+
+        cl = state.cluster
+        p = self.n_replicas
+        r = self.n_resources
+        pairs = jnp.asarray(pairs, jnp.int32)
+        u = jnp.asarray(up, bool)
+        ln = jnp.asarray(link, bool)
+        a_idx, b_idx = pairs[:, 0], pairs[:, 1]
+        valid = (
+            u[a_idx] & u[b_idx] & ln[a_idx, b_idx] & (a_idx != b_idx)
+        )
+        dig = digest_lib.range_digests(cl.replica_version, n_ranges)
+        differ, _, _ = kernel_ops.digest_compare(
+            dig[a_idx], dig[b_idx], impl=impl
+        )                                                   # (M, K)
+        stale = differ & valid[:, None]
+        rid = digest_lib.range_of_resource(r, n_ranges)     # (R,)
+        gap = lambda c: jnp.sum(jnp.maximum(                # noqa: E731
+            c.global_version[None, :] - c.replica_version, 0
+        ))
+        gap_before = gap(cl)
+        eye = jnp.eye(p, dtype=bool)
+        rows = jnp.arange(p, dtype=jnp.int32)
+
+        def step(cluster, inp):
+            a, b, stale_k, v = inp
+            res_rid = rid[jnp.clip(cluster.pend_resource, 0, r - 1)]
+            in_stale = stale_k[res_rid] & v                 # (Q,)
+            saved_live = cluster.pend_live
+            saved_clock = cluster.clock
+            ia, ib = rows == a, rows == b
+            pair_ln = (
+                eye | (ia[:, None] & ib[None, :]) | (ib[:, None] & ia[None, :])
+            )
+            masked = cluster._replace(
+                pend_live=saved_live & in_stale
+            )
+            before = masked.pend_applied.astype(jnp.int32)
+            merged, _ = xstcc.server_merge(
+                masked, delta=0, level=self.level, up=u, link=pair_ln
+            )
+            growth = jnp.sum(
+                merged.pend_applied.astype(jnp.int32) - before, axis=0
+            )                                               # (P,)
+            cluster = merged._replace(
+                pend_live=saved_live & ~jnp.all(merged.pend_applied, axis=1),
+                clock=saved_clock,
+            )
+            return cluster, growth
+
+        cluster, growth = jax.lax.scan(
+            step, cl, (a_idx, b_idx, stale, valid)
+        )
+        telemetry = {
+            "valid": valid,
+            "ranges": jnp.sum(stale.astype(jnp.int32), axis=1),
+            "growth": growth,
+            "gap_repaired": gap_before - gap(cluster),
+        }
+        return state._replace(cluster=cluster), telemetry
+
+    def enqueue_hints(
+        self,
+        state: StoreState,
+        *,
+        slot: Array,      # (B,) int32 — pending-ring slot per op
+        version: Array,   # (B,) int32 — committed version per op
+        kind: Array,      # (B,) int32
+        home: Array,      # (B,) int32 — coordinator replica per op
+        conn: Array,      # (P, P) bool — closed connectivity this epoch
+    ) -> tuple[StoreState, Array, Array]:
+        """Queue hints for the replicas a batch's writes could not reach.
+
+        A write whose coordinator cannot reach replica ``d`` this epoch
+        (``~conn[home, d]`` — down or partitioned) enqueues ``(slot,
+        version)`` on ``d``'s bounded hint queue; on heal,
+        :meth:`drain_hints` re-validates and delivers them ahead of the
+        full anti-entropy pass.  Overflow beyond ``hint_cap`` is
+        counted in ``hints.dropped`` and left to digest repair.
+        Returns ``(state, n_enqueued, n_dropped)``.
+        """
+        hints = state.hints
+        h = self.hint_cap
+        is_w = jnp.asarray(kind, jnp.int32) == xstcc.WRITE
+        miss = is_w[None, :] & ~jnp.asarray(conn, bool)[
+            jnp.asarray(home, jnp.int32)
+        ].T                                                 # (P, B)
+        rank = jnp.cumsum(miss.astype(jnp.int32), axis=1) - 1
+        pos = hints.count[:, None] + rank                   # (P, B)
+        ok = miss & (pos < h)
+        posc = jnp.where(ok, pos, h)        # h = out-of-bounds → dropped
+        d_grid = jnp.broadcast_to(
+            jnp.arange(self.n_replicas, dtype=jnp.int32)[:, None], posc.shape
+        )
+        slot_b = jnp.broadcast_to(
+            jnp.asarray(slot, jnp.int32)[None, :], posc.shape
+        )
+        ver_b = jnp.broadcast_to(
+            jnp.asarray(version, jnp.int32)[None, :], posc.shape
+        )
+        n_enq = jnp.sum(ok.astype(jnp.int32))
+        n_drop = jnp.sum((miss & ~ok).astype(jnp.int32))
+        new_hints = HintState(
+            slot=hints.slot.at[d_grid, posc].set(slot_b, mode="drop"),
+            version=hints.version.at[d_grid, posc].set(ver_b, mode="drop"),
+            count=hints.count + jnp.sum(ok.astype(jnp.int32), axis=1),
+            dropped=hints.dropped + n_drop,
+        )
+        return state._replace(hints=new_hints), n_enq, n_drop
+
+    def drain_hints(
+        self, state: StoreState, *, up: Array, link: Array
+    ) -> tuple[StoreState, Array]:
+        """Deliver queued hints along the now-live links (heal path).
+
+        For every destination replica the queue is re-validated against
+        the pending ring — a hint whose slot was recycled (version
+        mismatch) or whose write already retired is discarded — and the
+        surviving hinted writes are pushed by a Δ=0 merge restricted to
+        links touching the destination, the targeted front-run of the
+        full anti-entropy pass.  Hints that delivered (or invalidated)
+        leave the queue; hints whose holders are still unreachable stay
+        queued.  Clock-neutral like :meth:`anti_entropy`.  Returns
+        ``(state, deliveries)``.
+        """
+        hints = state.hints
+        h = self.hint_cap
+        p = self.n_replicas
+        q = state.cluster.pend_live.shape[0]
+        u = jnp.asarray(up, bool)
+        ln = jnp.asarray(link, bool)
+        eye = jnp.eye(p, dtype=bool)
+        rows = jnp.arange(p, dtype=jnp.int32)
+        hpos = jnp.arange(h, dtype=jnp.int32)
+
+        def step(carry, d):
+            cluster, hints, delivered = carry
+            qslots = jnp.clip(hints.slot[d], 0, q - 1)
+            in_q = hpos < hints.count[d]
+            hint_ok = (
+                in_q
+                & cluster.pend_live[qslots]
+                & (cluster.pend_version[qslots] == hints.version[d])
+            )
+            marked = (
+                jnp.zeros((q,), bool).at[qslots].max(hint_ok, mode="drop")
+            )
+            saved_live = cluster.pend_live
+            saved_clock = cluster.clock
+            touch_d = (rows == d)[:, None] | (rows == d)[None, :]
+            masked = cluster._replace(pend_live=saved_live & marked)
+            before = masked.pend_applied.astype(jnp.int32)
+            merged, _ = xstcc.server_merge(
+                masked, delta=0, level=self.level,
+                up=u, link=(eye | touch_d) & ln,
+            )
+            ev = jnp.sum(
+                merged.pend_applied.astype(jnp.int32) - before
+            )
+            cluster = merged._replace(
+                pend_live=saved_live & ~jnp.all(merged.pend_applied, axis=1),
+                clock=saved_clock,
+            )
+            # Compact: keep valid hints still undelivered at d.
+            keep = hint_ok & ~merged.pend_applied[qslots, d]
+            kpos = jnp.where(
+                keep, jnp.cumsum(keep.astype(jnp.int32)) - 1, h
+            )
+            hints = HintState(
+                slot=hints.slot.at[d].set(
+                    jnp.zeros((h,), jnp.int32)
+                    .at[kpos].set(hints.slot[d], mode="drop")
+                ),
+                version=hints.version.at[d].set(
+                    jnp.zeros((h,), jnp.int32)
+                    .at[kpos].set(hints.version[d], mode="drop")
+                ),
+                count=hints.count.at[d].set(
+                    jnp.sum(keep.astype(jnp.int32))
+                ),
+                dropped=hints.dropped,
+            )
+            return (cluster, hints, delivered + ev), None
+
+        (cluster, hints, delivered), _ = jax.lax.scan(
+            step, (state.cluster, hints, jnp.int32(0)), rows
+        )
+        return state._replace(cluster=cluster, hints=hints), delivered
 
     def install(
         self,

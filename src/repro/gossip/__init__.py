@@ -1,0 +1,51 @@
+"""Continuous gossip anti-entropy + hinted handoff.
+
+Between failures the replicated fleet only reconciled at heal time
+(PR 4); this subsystem makes convergence *proactive*, the way the
+paper's eq. 8 network-cost term trades against its staleness metrics:
+
+  * :mod:`repro.gossip.digest` — per-resource-range version summaries
+    (wrapping SUM / MAX / weighted CHK / nonzero CNT over the store's
+    ``replica_version`` table), compact enough that a digest exchange
+    ships ``K · DIGEST_BYTES`` instead of full state;
+  * ``repro.kernels.digest_compare`` — the tiled Pallas kernel (plus
+    bit-exact jnp twin and dense oracle behind
+    ``repro.kernels.ops.digest_compare``) that diffs two replicas'
+    digests and emits the stale-range mask;
+  * :mod:`repro.gossip.scheduler` — :class:`GossipConfig` (cadence in
+    merge epochs, peer selection, hint-queue bounds) and the host-side
+    peer-pair schedules (round-robin, or nearest-by-RTT over a
+    ``repro.geo.topology.RegionTopology``);
+  * hinted handoff — bounded per-replica hint queues on
+    ``repro.core.replicated_store.ReplicatedStore`` (``enqueue_hints``
+    / ``drain_hints``) that front-run the heal-time anti-entropy pass
+    with targeted deliveries, overflow falling back to digest repair.
+
+The data-plane integration lives in
+``repro.storage.simulator.run_protocol_faulty`` /
+``run_protocol_geo`` (per-round repair telemetry, eq. 8 + egress-matrix
+billing) and the cadence policy knob in
+``repro.policy.controller.CadenceController``.  With gossip disabled
+(``GossipConfig(cadence=0)`` or no config at all) every run is
+bit-identical to the heal-only path — gated by
+``benchmarks/bench_gossip.py --check``.
+"""
+
+from repro.gossip.digest import (
+    DIGEST_BYTES,
+    N_COMPONENTS,
+    checksum_weights,
+    range_digests,
+    range_of_resource,
+)
+from repro.gossip.scheduler import GossipConfig, gossip_pairs
+
+__all__ = [
+    "DIGEST_BYTES",
+    "N_COMPONENTS",
+    "GossipConfig",
+    "checksum_weights",
+    "gossip_pairs",
+    "range_digests",
+    "range_of_resource",
+]

@@ -1,0 +1,129 @@
+"""Gossip cadence configuration and peer-pair schedules.
+
+The digest-exchange pass is *scheduled*, not reactive: every
+``cadence`` merge epochs each replica contacts one peer, diffs range
+digests, and repairs the stale ranges (see
+``ReplicatedStore.gossip_round``).  This module owns the two host-side
+ingredients the jitted drivers consume as plain scan inputs:
+
+  * :class:`GossipConfig` — the frozen, hashable knob bundle (cadence
+    in merge epochs, digest range count, peer-selection policy, hint
+    queue bound, compare-kernel impl).  Hashable on purpose: it keys
+    the ``lru_cache``'d runners in ``repro.storage.simulator`` exactly
+    like the consistency level does.  ``cadence=0`` disables gossip
+    outright — the drivers then build the byte-identical heal-only
+    trace (no gossip inputs, no extra carry), which is what the CI
+    bit-identity gate checks.
+  * :func:`gossip_pairs` — the precomputed ``(T, P, 2)`` peer-pair
+    schedule plus the ``(T,)`` active mask, like the availability masks
+    of ``FaultSchedule``: closed-form over the epoch index, never
+    derived inside the trace.
+
+Peer selection:
+
+  * ``"round_robin"`` — exchange ``n`` pairs replica ``p`` with
+    ``(p + 1 + (n-1) mod (P-1)) mod P``: every ordered pair recurs
+    every ``P-1`` exchanges, so the fleet's exchange graph cycles
+    through all neighbors;
+  * ``"nearest"`` — peers ordered by RTT ascending (ties by replica
+    id) over a ``repro.geo.topology.RegionTopology``: cheap LAN peers
+    first, the WAN peers on the long cycle — Okapi-style
+    locality-aware stabilization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    """Knobs of the continuous anti-entropy pass (hashable, static).
+
+    ``cadence`` — merge epochs between digest exchanges; ``0`` disables
+    gossip entirely (the bit-identity baseline).  ``n_ranges`` — digest
+    ranges per replica (the repair granularity).  ``peer`` —
+    ``"round_robin"`` or ``"nearest"`` (needs a topology).
+    ``hint_cap`` — hinted-handoff queue bound per destination replica;
+    ``0`` disables handoff.  ``impl`` — ``repro.kernels.ops.
+    digest_compare`` implementation override (``None`` = auto).
+    """
+
+    cadence: int = 0
+    n_ranges: int = 8
+    peer: str = "round_robin"
+    hint_cap: int = 0
+    impl: str | None = None
+
+    def __post_init__(self):
+        if self.cadence < 0 or self.n_ranges < 1 or self.hint_cap < 0:
+            raise ValueError(
+                f"invalid gossip config: cadence={self.cadence}, "
+                f"n_ranges={self.n_ranges}, hint_cap={self.hint_cap}"
+            )
+        if self.peer not in ("round_robin", "nearest"):
+            raise ValueError(f"unknown peer policy: {self.peer!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.cadence > 0
+
+    @property
+    def handoff(self) -> bool:
+        return self.hint_cap > 0
+
+
+def _peer_order(n_replicas: int, topology) -> np.ndarray:
+    """(P, P-1) int32 — each replica's peers in exchange order."""
+    p = n_replicas
+    if topology is None:
+        # Ring offsets 1..P-1: the round-robin cycle.
+        return np.stack(
+            [(np.arange(1, p) + i) % p for i in range(p)]
+        ).astype(np.int32)
+    reg = np.asarray(topology.regions())
+    rtt_g = np.asarray(topology.rtt(), np.float64)
+    rtt = rtt_g[reg[:, None], reg[None, :]]     # replica-pair RTT
+    order = []
+    for i in range(p):
+        others = np.array([j for j in range(p) if j != i])
+        key = np.lexsort((others, rtt[i, others]))
+        order.append(others[key])
+    return np.stack(order).astype(np.int32)
+
+
+def gossip_pairs(
+    n_replicas: int,
+    n_epochs: int,
+    cfg: GossipConfig,
+    topology=None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(active, pairs) — the schedule's per-epoch exchange plan.
+
+    ``active`` is ``(T,)`` bool (epoch ends with a digest exchange —
+    every ``cadence``-th epoch); ``pairs`` is ``(T, P, 2)`` int32, row
+    ``p`` of epoch ``t`` being the ordered ``(p, peer)`` exchange.  On
+    inactive epochs pairs are self-loops ``(p, p)`` — the repair merge
+    treats them as invalid, so the arrays stay shape-static.
+    ``peer="nearest"`` requires ``topology`` (its region RTT matrix
+    orders the peers); round-robin ignores it.
+    """
+    p = n_replicas
+    t = n_epochs
+    active = np.zeros(t, bool)
+    me = np.arange(p, dtype=np.int32)
+    pairs = np.stack([me, me], axis=1)[None].repeat(t, axis=0)
+    if not cfg.enabled or p < 2:
+        return active, pairs.astype(np.int32)
+    if cfg.peer == "nearest" and topology is None:
+        raise ValueError('peer="nearest" needs a RegionTopology')
+    order = _peer_order(p, topology if cfg.peer == "nearest" else None)
+    epochs = np.arange(t)
+    active = (epochs + 1) % cfg.cadence == 0
+    nth = (epochs + 1) // cfg.cadence - 1      # 0-based exchange counter
+    col = nth % (p - 1)
+    for ti in np.flatnonzero(active):
+        pairs[ti, :, 1] = order[:, col[ti]]
+    return active, pairs.astype(np.int32)

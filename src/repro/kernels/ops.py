@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import digest_compare as _dc
 from repro.kernels import flash_attention as _fa
 from repro.kernels import op_ingest as _oi
 from repro.kernels import placement_score as _pls
@@ -92,6 +93,57 @@ def op_ingest(
         interpret = _on_cpu() if interpret is None else interpret
         return _oi.op_ingest_pallas(packed, block=block, interpret=interpret)
     raise ValueError(f"unknown op_ingest impl: {impl!r}")
+
+
+def digest_compare(
+    a: jax.Array,  # (..., 4) int32 — side-A digests (SUM, MAX, CHK, CNT)
+    b: jax.Array,  # (..., 4) int32 — side-B digests
+    *,
+    impl: str | None = None,
+    block: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Diff two sides' range digests; ``(differ, a_behind, b_behind)``.
+
+    Same contract as ``repro.kernels.ref.digest_compare_ref``
+    (bit-exact): bool masks over the leading axes — ``differ`` is the
+    stale-range mask the gossip scheduler turns into repair merges.
+    Leading axes (e.g. ``(pairs, ranges)``) are flattened into packed
+    rows for the tiled paths.  ``impl`` selects the implementation:
+
+      * ``"pallas"`` — the tiled TPU kernel (O(rows·block) memory);
+      * ``"tiled"``  — the jnp ``lax.map`` twin of the kernel, the
+        fast path on CPU where Pallas runs interpreted;
+      * ``"dense"``  — the whole-array oracle;
+      * ``None``     — "pallas" on accelerators, "tiled" on CPU.
+    """
+    if impl is None or impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "tiled"
+    if impl == "dense":
+        from repro.kernels import ref as kernel_ref
+
+        return kernel_ref.digest_compare_ref(a, b)
+    lead = a.shape[:-1]
+    a2 = jnp.asarray(a, jnp.int32).reshape(-1, a.shape[-1])
+    b2 = jnp.asarray(b, jnp.int32).reshape(-1, b.shape[-1])
+    m = a2.shape[0]
+    block = max(1, min(block, m))
+    packed = _dc.pack_digests(a2, b2, block=block)
+    if impl == "tiled":
+        out = _dc.digest_compare_tiled(packed, block=block)
+    elif impl == "pallas":
+        interpret = _on_cpu() if interpret is None else interpret
+        out = _dc.digest_compare_pallas(
+            packed, block=block, interpret=interpret
+        )
+    else:
+        raise ValueError(f"unknown digest_compare impl: {impl!r}")
+    out = out[:m]
+    return (
+        out[:, _dc.DIFFER].astype(bool).reshape(lead),
+        out[:, _dc.A_BEHIND].astype(bool).reshape(lead),
+        out[:, _dc.B_BEHIND].astype(bool).reshape(lead),
+    )
 
 
 def flash_attention(

@@ -406,3 +406,33 @@ def vclock_audit_ref(
         (delta > 0) & base & (ki == 1) & (kj == 0) & (gap > delta) & (vj < vi)
     )
     return phase | (viol.astype(jnp.int32) << 8) | (timed.astype(jnp.int32) << 9)
+
+
+def digest_compare_ref(
+    a: Array,  # (M, 4) int32 — side-A digest components (SUM, MAX, CHK, CNT)
+    b: Array,  # (M, 4) int32 — side-B digest components
+) -> tuple[Array, Array, Array]:
+    """Dense oracle of the gossip digest compare.
+
+    Whole-array re-derivation of ``kernels.digest_compare.compare_tile``
+    over unpacked component rows: returns ``(differ, a_behind,
+    b_behind)`` bool ``(M,)`` masks.  ``differ`` is the stale-range
+    mask (any component disagrees); the behind flags order the sides by
+    (MAX, then SUM), with a full tie that still differs (CHK/CNT
+    disagree) marking *both* sides — divergence within the range.
+    Integer-only math, bit-exact with the Pallas kernel and its jnp
+    twin (``tests/test_gossip.py``).
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    d = a - b
+    differ = jnp.any(d != 0, axis=-1)
+    d_sum, d_max = d[..., 0], d[..., 1]
+    tie = (d_max == 0) & (d_sum == 0)
+    a_behind = differ & (
+        (d_max < 0) | ((d_max == 0) & (d_sum < 0)) | tie
+    )
+    b_behind = differ & (
+        (d_max > 0) | ((d_max == 0) & (d_sum > 0)) | tie
+    )
+    return differ, a_behind, b_behind

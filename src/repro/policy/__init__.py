@@ -9,7 +9,12 @@ integrations live in ``repro.storage.simulator.run_protocol_adaptive``
 and ``repro.serve.engine``.
 """
 
-from repro.policy.controller import AdaptiveController, ControllerState
+from repro.policy.controller import (
+    AdaptiveController,
+    CadenceController,
+    CadenceState,
+    ControllerState,
+)
 from repro.policy.sla import (
     POLICY_LEVELS,
     SLA,
@@ -27,6 +32,8 @@ __all__ = [
     "SLA_STRICT",
     "POLICY_LEVELS",
     "AdaptiveController",
+    "CadenceController",
+    "CadenceState",
     "ControllerState",
     "epoch_cost",
     "level_table",

@@ -269,3 +269,183 @@ class AdaptiveController:
             length=e,
         )
         return state, trace
+
+
+class CadenceState(NamedTuple):
+    """Gossip-cadence bandit state — a pure-array pytree.
+
+    Same ring-buffer scheme as :class:`ControllerState`, one arm per
+    candidate cadence: the window holds per-epoch repair-traffic GB and
+    staleness *counts* for the arm played that epoch (all other arms
+    zeroed, so stale evidence ages out).
+    """
+
+    gb_win: Array      # (W, A) f32 — repair + digest GB observed
+    stale_win: Array   # (W, A) f32 — stale reads observed
+    reads_win: Array   # (W, A) f32 — reads observed
+    played_win: Array  # (W, A) f32 — 1 where the arm was played
+    ptr: Array         # () int32 — next ring slot
+    epoch: Array       # () int32 — epochs observed so far
+
+
+class CadenceController:
+    """ε-greedy selection of the gossip cadence under churn.
+
+    The cadence knob trades the paper's eq. 8 network-cost term against
+    its staleness metrics: gossiping every epoch repairs divergence
+    fastest but ships the most digest + repair traffic; never gossiping
+    (cadence 0) is free but leaves weak levels stale until the next
+    heal.  This controller closes the loop the way
+    :class:`AdaptiveController` does for consistency levels — utility
+    per arm is
+
+        −(repair GB/epoch · gb_price  +  stale rate · stale_penalty)
+
+    with unobserved arms scored optimistically (utility 0, the maximum,
+    so greedy selection probes every cadence once before settling) and
+    an ε-decayed uniform exploration arm on top.  ``gb_price`` defaults
+    to the pricing scheme's marginal inter-DC rate, so "cost" here is
+    the same eq. 8 dollars the drivers bill.
+
+    Dynamic state is the :class:`CadenceState` pytree; every method is
+    jit/scan-safe (see :meth:`run_scan`).
+    """
+
+    def __init__(
+        self,
+        cadences: tuple[int, ...] = (0, 1, 2, 4, 8),
+        *,
+        window: int = 8,
+        eps0: float = 0.1,
+        eps_decay: float = 0.9,
+        gb_price: float | None = None,
+        stale_penalty: float = 0.05,
+        pricing: PricingScheme = PAPER_PRICING,
+    ):
+        if not cadences or any(c < 0 for c in cadences):
+            raise ValueError(f"invalid cadence arms: {cadences}")
+        self.cadences = tuple(cadences)
+        self.n_arms = len(self.cadences)
+        self.window = window
+        self.eps0 = eps0
+        self.eps_decay = eps_decay
+        self.stale_penalty = stale_penalty
+        if gb_price is None:
+            gb_price = pricing.marginal_inter_dc_per_gb()
+        self.gb_price = float(gb_price)
+
+    # -- state ----------------------------------------------------------------
+
+    def init(self) -> CadenceState:
+        shape = (self.window, self.n_arms)
+        z = jnp.zeros(shape, jnp.float32)
+        return CadenceState(
+            gb_win=z, stale_win=z, reads_win=z, played_win=z,
+            ptr=jnp.int32(0), epoch=jnp.int32(0),
+        )
+
+    # -- telemetry ------------------------------------------------------------
+
+    def observe(
+        self,
+        state: CadenceState,
+        *,
+        arm: Array,     # () int32 — the cadence arm played this epoch
+        gb: Array,      # () f32 — gossip repair + digest GB shipped
+        stale: Array,   # () f32 — stale reads this epoch
+        reads: Array,   # () f32 — reads this epoch
+    ) -> CadenceState:
+        """Fold one epoch of fleet telemetry into the ring (bandit
+        feedback: only the played arm's cell gets the sample)."""
+        onehot = jax.nn.one_hot(
+            jnp.asarray(arm, jnp.int32), self.n_arms, dtype=jnp.float32
+        )
+        slot = state.ptr % self.window
+        return CadenceState(
+            gb_win=state.gb_win.at[slot].set(
+                onehot * jnp.asarray(gb, jnp.float32)
+            ),
+            stale_win=state.stale_win.at[slot].set(
+                onehot * jnp.asarray(stale, jnp.float32)
+            ),
+            reads_win=state.reads_win.at[slot].set(
+                onehot * jnp.asarray(reads, jnp.float32)
+            ),
+            played_win=state.played_win.at[slot].set(onehot),
+            ptr=state.ptr + 1,
+            epoch=state.epoch + 1,
+        )
+
+    # -- selection ------------------------------------------------------------
+
+    def epsilon(self, state: CadenceState) -> Array:
+        return jnp.float32(self.eps0) * jnp.float32(self.eps_decay) ** (
+            state.epoch.astype(jnp.float32)
+        )
+
+    def utilities(self, state: CadenceState) -> Array:
+        """(A,) f32 — negative cost-plus-staleness score per arm.
+
+        Observed arms score strictly below zero whenever they shipped
+        traffic or served stale reads; unobserved arms score exactly
+        zero (the optimum), so greedy argmax probes them first."""
+        plays = jnp.sum(state.played_win, axis=0)
+        gb_rate = jnp.sum(state.gb_win, axis=0) / jnp.maximum(plays, 1.0)
+        stale_rate = jnp.sum(state.stale_win, axis=0) / jnp.maximum(
+            jnp.sum(state.reads_win, axis=0), 1.0
+        )
+        u = -(gb_rate * self.gb_price + stale_rate * self.stale_penalty)
+        return jnp.where(plays > 0, u, jnp.float32(0.0))
+
+    def select(self, state: CadenceState, key: Array) -> Array:
+        """The cadence arm index for the next epoch, () int32."""
+        greedy = jnp.argmax(self.utilities(state)).astype(jnp.int32)
+        k_explore, k_arm = jax.random.split(key)
+        explore = jax.random.uniform(k_explore, ()) < self.epsilon(state)
+        arm = jax.random.randint(k_arm, (), 0, self.n_arms, jnp.int32)
+        return jnp.where(explore, arm, greedy)
+
+    # -- convenience ----------------------------------------------------------
+
+    def cadence_of(self, idx: int) -> int:
+        return self.cadences[idx]
+
+    def run_scan(
+        self,
+        key: Array,
+        telemetry: dict[str, Array],
+    ) -> tuple[CadenceState, dict[str, Array]]:
+        """Scan the cadence control loop over per-arm telemetry.
+
+        ``telemetry`` holds (E, A) arrays ``gb``/``stale`` and an (E,)
+        array ``reads`` — the counterfactual per-cadence measurements of
+        each epoch (e.g. from ``run_protocol_faulty`` sweeps under the
+        same fault schedule).  Each step selects an arm from the current
+        window, plays it by gathering that arm's column, and observes
+        the result — one compiled ``lax.scan``.  Returns the final
+        state and the per-epoch trace (chosen arm, realized GB/stale).
+        """
+        e = telemetry["gb"].shape[0]
+
+        def step(carry, inp):
+            state, key = carry
+            key, sub = jax.random.split(key)
+            arm = self.select(state, sub)
+            gb = inp["gb"][arm]
+            stale = inp["stale"][arm]
+            state = self.observe(
+                state, arm=arm, gb=gb, stale=stale, reads=inp["reads"],
+            )
+            return (state, key), {"arm": arm, "gb": gb, "stale": stale}
+
+        (state, _), trace = jax.lax.scan(
+            step,
+            (self.init(), key),
+            {
+                "gb": telemetry["gb"].astype(jnp.float32),
+                "stale": telemetry["stale"].astype(jnp.float32),
+                "reads": telemetry["reads"].astype(jnp.float32),
+            },
+            length=e,
+        )
+        return state, trace

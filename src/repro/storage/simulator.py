@@ -37,6 +37,8 @@ from repro.core import duot as duot_lib
 from repro.core import audit as audit_lib
 from repro.core.consistency import ConsistencyLevel
 from repro.core.replicated_store import ReplicatedStore, merge_cadence
+from repro.gossip import DIGEST_BYTES
+from repro.gossip.scheduler import GossipConfig, gossip_pairs
 from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
 from repro.storage.ycsb import PhasedWorkload, Workload, generate, generate_phased
 
@@ -372,6 +374,7 @@ def _geo_runner(
     emulate: bool,
     topology,
     ingest: str = "auto",
+    gossip: GossipConfig | None = None,
 ) -> tuple[ReplicatedStore, Any]:
     """(store, jitted engine) for one region-aware configuration.
 
@@ -383,9 +386,18 @@ def _geo_runner(
     RTT-matrix latency by *client region*.  ``topology`` is hashable
     (tuples all the way down), so it keys the cache like the level
     does.
+
+    With ``gossip`` set (and ``cadence > 0``) the scheduled digest
+    exchange runs after the boundary merge; its repair deliveries and
+    digest payloads are attributed to *region pairs* (the exchanging
+    replicas' regions) so ``run_protocol_geo`` can bill them through
+    the egress matrix.  Hinted handoff is a fault-path feature and does
+    not apply here (the geo driver is all-up).  ``gossip=None``
+    compiles the exact pre-gossip trace.
     """
     P = topology.n_replicas
     G = topology.n_regions
+    g_on = gossip is not None and gossip.enabled
     store = ReplicatedStore(
         P, n_clients, n_resources, level=level, merge_every=merge_every,
         delta=delta, pending_cap=max(128, 2 * sub), duot_cap=duot_cap,
@@ -396,9 +408,15 @@ def _geo_runner(
     )
     replica_reg = jnp.asarray(topology.regions(), jnp.int32)
     rtt = jnp.asarray(topology.rtt(), jnp.float32)
+    all_up = jnp.ones((P,), bool)
+    all_conn = jnp.ones((P, P), bool)
 
     def round_step(carry, ops, step0):
-        st, n_stale, n_viol, n_reads, traffic, reg = carry
+        if g_on:
+            st, n_stale, n_viol, n_reads, traffic, reg, gx = carry
+            g_traffic, g_digest, g_ranges, g_gap = gx
+        else:
+            st, n_stale, n_viol, n_reads, traffic, reg = carry
         st, res = store.apply_batch(
             st, client=ops["client"], replica=ops["home"],
             resource=ops["resource"], kind=ops["kind"],
@@ -406,6 +424,34 @@ def _geo_runner(
             apply_index=ops.get("apply_idx"),
         )
         st, _, tr = store.merge_geo(st, topology)
+        if g_on:
+            # Digest exchange between replica pairs, repair deliveries
+            # and digest payloads attributed to their region pair.
+            def do_gossip(s):
+                s2, tel = store.gossip_round(
+                    s, pairs=ops["pairs"], up=all_up, link=all_conn,
+                    n_ranges=gossip.n_ranges, impl=gossip.impl,
+                )
+                a, b = ops["pairs"][:, 0], ops["pairs"][:, 1]
+                ra, rb = replica_reg[a], replica_reg[b]
+                mi = jnp.arange(a.shape[0])
+                growth = tel["growth"]
+                v = tel["valid"].astype(jnp.int32)
+                zgg = jnp.zeros((G, G), jnp.int32)
+                gt = zgg.at[ra, rb].add(growth[mi, b])
+                gt = gt.at[rb, ra].add(growth[mi, a])
+                dg = zgg.at[ra, rb].add(v).at[rb, ra].add(v)
+                return s2, (gt, dg, jnp.sum(tel["ranges"]),
+                            tel["gap_repaired"])
+
+            def no_gossip(s):
+                zgg = jnp.zeros((G, G), jnp.int32)
+                return s, (zgg, zgg, jnp.int32(0), jnp.int32(0))
+
+            st, (gt, dg, gr, gg) = jax.lax.cond(
+                ops["gossip"], do_gossip, no_gossip, st
+            )
+            gx = (g_traffic + gt, g_digest + dg, g_ranges + gr, g_gap + gg)
         is_read = ops["kind"] == duot_lib.READ
         creg = client_reg[ops["client"]]
         hreg = replica_reg[ops["home"]]
@@ -417,7 +463,7 @@ def _geo_runner(
             reg[2] + zf.at[creg].add(rtt[creg, hreg]),
             reg[3] + zi.at[creg].add(1),
         )
-        return (
+        out = (
             st,
             n_stale + jnp.sum(res.stale.astype(jnp.int32)),
             n_viol + jnp.sum(res.violation.astype(jnp.int32)),
@@ -425,6 +471,7 @@ def _geo_runner(
             traffic + tr,
             reg,
         )
+        return out + (gx,) if g_on else out
 
     @jax.jit
     def run(batched, tail):
@@ -434,6 +481,9 @@ def _geo_runner(
             store.init(), z, z, z, jnp.zeros((G, G), jnp.int32),
             (zg(jnp.int32), zg(jnp.int32), zg(jnp.float32), zg(jnp.int32)),
         )
+        if g_on:
+            zgg = jnp.zeros((G, G), jnp.int32)
+            carry = carry + ((zgg, zgg, z, z),)
         n_rounds = batched["client"].shape[0]
 
         def step(carry, ops):
@@ -462,6 +512,7 @@ def run_protocol_geo(
     batch_size: int = 128,
     audit: bool = True,
     ingest: str = "auto",
+    gossip: GossipConfig | None = None,
     cfg: ClusterConfig = PAPER_CLUSTER,
     pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
 ) -> dict[str, Any]:
@@ -491,22 +542,44 @@ def run_protocol_geo(
     metrics (staleness/violations/severity/reads/drops) are
     **bit-identical** to :func:`run_protocol` for every consistency
     level — asserted in ``tests/test_geo.py`` and by the CI geo smoke.
+
+    ``gossip`` enables the scheduled digest-exchange repair pass
+    (``repro.gossip``); ``peer="nearest"`` orders each replica's peers
+    by the topology's region RTT.  Gossip repair deliveries and digest
+    payloads are attributed to the exchanging replicas' *region pair*
+    and billed through the same egress matrix as propagation
+    (``cost["gossip_network_geo"]``, added into ``cost["total_geo"]``);
+    the result gains a ``"gossip"`` block with the (G, G) repair
+    matrix.  Hinted handoff does not apply (this driver is all-up).
     """
     if topology is None:
         from repro.geo.topology import PAPER_TOPOLOGY
 
         topology = PAPER_TOPOLOGY
     P = topology.n_replicas
+    g_on = gossip is not None and gossip.enabled
     stream = _op_stream(w, n_ops, n_clients, n_resources, seed, P)
     sub, rem, n_rounds, emulate = _cadence_plan(
         level, n_ops, batch_size, merge_every, delta
     )
     store, run = _geo_runner(
         level, n_clients, n_resources, merge_every, delta, duot_cap,
-        sub, rem, emulate, topology, ingest,
+        sub, rem, emulate, topology, ingest, gossip,
     )
     batched, tail = _batch_inputs(stream, store, sub, n_rounds, rem, emulate)
-    st, n_stale, n_viol, n_reads, traffic, reg = run(batched, tail)
+    if g_on:
+        n_epochs_total = n_rounds + (1 if rem else 0)
+        g_active, g_pairs = gossip_pairs(
+            P, n_epochs_total, gossip,
+            topology if gossip.peer == "nearest" else None,
+        )
+        batched["gossip"] = jnp.asarray(g_active[:n_rounds])
+        batched["pairs"] = jnp.asarray(g_pairs[:n_rounds])
+        tail["gossip"] = jnp.asarray(g_active[n_epochs_total - 1])
+        tail["pairs"] = jnp.asarray(g_pairs[n_epochs_total - 1])
+        st, n_stale, n_viol, n_reads, traffic, reg, gx = run(batched, tail)
+    else:
+        st, n_stale, n_viol, n_reads, traffic, reg = run(batched, tail)
 
     severity = 0.0
     if audit:
@@ -555,8 +628,31 @@ def run_protocol_geo(
     cost["network_scalar"] = network_scalar
     cost["total_geo"] = cost["instances"] + cost["storage"] + network_geo
 
+    gossip_info = None
+    if g_on:
+        g_traffic, g_digest, g_ranges, g_gap = (np.asarray(x) for x in gx)
+        k_eff = max(1, min(gossip.n_ranges, n_resources))
+        repair_mat_gb = g_traffic.astype(np.float64) * cfg.row_bytes / 1e9
+        digest_mat_gb = (
+            g_digest.astype(np.float64) * k_eff * DIGEST_BYTES / 1e9
+        )
+        gossip_network_geo = cost_model.cost_network_matrix(
+            traffic_gb=repair_mat_gb + digest_mat_gb, egress=egress
+        )
+        cost["gossip_network_geo"] = gossip_network_geo
+        cost["total_geo"] += gossip_network_geo
+        gossip_info = {
+            "cadence": gossip.cadence,
+            "repair_events": g_traffic.tolist(),
+            "repair_gb": float(repair_mat_gb.sum()),
+            "digest_gb": float(digest_mat_gb.sum()),
+            "ranges_diffed": int(g_ranges),
+            "gap_repaired": int(g_gap),
+            "peer": gossip.peer,
+        }
+
     reg_stale, reg_reads, reg_lat, reg_ops = (np.asarray(x) for x in reg)
-    return {
+    result = {
         "staleness_rate": stale_rate,
         "violation_rate": float(n_viol) / n_reads_f,
         "severity": severity,
@@ -579,6 +675,9 @@ def run_protocol_geo(
         },
         "cost": cost,
     }
+    if gossip_info is not None:
+        result["gossip"] = gossip_info
+    return result
 
 
 def run_protocol_sharded(
@@ -714,6 +813,7 @@ def _faulty_runner(
     emulate: bool,
     pending_cap: int,
     ingest: str = "auto",
+    gossip: GossipConfig | None = None,
 ) -> tuple[ReplicatedStore, Any]:
     """(store, jitted engine) for one failure-scenario configuration.
 
@@ -725,6 +825,14 @@ def _faulty_runner(
     With an all-up schedule every one of those is the identity, so the
     run is bit-identical to :func:`run_protocol`.
 
+    ``gossip`` (a hashable :class:`repro.gossip.GossipConfig`) layers
+    the continuous anti-entropy pass on top: hinted-handoff enqueue on
+    faulty epochs / drain on heal (``hint_cap > 0``) and the scheduled
+    digest-exchange repair round (``cadence > 0``), each metered into an
+    extra gossip carry.  ``gossip=None`` compiles the exact pre-gossip
+    trace — none of the gossip branches exist in the jaxpr, which is
+    what the CI bit-identity gate leans on.
+
     Kept as a deliberate twin rather than folding :func:`run_protocol`
     into it: the all-up driver is the throughput benchmark's hot path
     (``bench_protocol``) and must stay free of mask plumbing, cond'd
@@ -733,15 +841,32 @@ def _faulty_runner(
     ``test_faulty_all_up_bit_identical_to_run_protocol`` police the
     twins against drifting apart.
     """
+    g_on = gossip is not None and gossip.enabled
+    h_on = gossip is not None and gossip.handoff
     store = ReplicatedStore(
         3, n_clients, n_resources, level=level, merge_every=merge_every,
         delta=delta, pending_cap=pending_cap, duot_cap=duot_cap,
-        ingest=ingest,
+        ingest=ingest, hint_cap=gossip.hint_cap if gossip else 0,
     )
 
     def round_step(carry, ops, step0, width):
-        st, n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = carry
+        if gossip is not None:
+            st, n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail, gx = carry
+            (g_deliv, g_ranges, g_pairs, g_gap,
+             h_enq, h_drop, h_deliv) = gx
+        else:
+            st, n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = carry
         up, conn = ops["up"], ops["conn"]
+        if h_on:
+            # Heal epoch: targeted hint deliveries front-run the full
+            # anti-entropy pass — drained hints shrink its backlog.
+            st, hd = jax.lax.cond(
+                ops["heal"],
+                lambda s: store.drain_hints(s, up=up, link=conn),
+                lambda s: (s, jnp.int32(0)),
+                st,
+            )
+            h_deliv = h_deliv + hd
         # Heal epoch: reconcile the backlog along the newly-available
         # links (Δ=0 full catch-up) before serving this epoch's ops.
         st, ev = jax.lax.cond(
@@ -768,30 +893,80 @@ def _faulty_runner(
             op_step0=step0 if emulate else None,
             apply_index=ops.get("apply_idx"),
         )
+        if h_on:
+            # Writes served during a fault leave hints for the replicas
+            # the coordinator could not reach this epoch.
+            def enq(s):
+                return store.enqueue_hints(
+                    s, slot=res.slot, version=res.version,
+                    kind=ops["kind"], home=home, conn=conn,
+                )
+
+            z = jnp.int32(0)
+            st, ne, nd = jax.lax.cond(
+                ops["faulty"], enq, lambda s: (s, z, z), st
+            )
+            h_enq = h_enq + ne
+            h_drop = h_drop + nd
         st, _, ev = store.merge_faulty(st, up=up, link=conn)
         prop_ev = prop_ev + ev
+        if g_on:
+            # Scheduled digest exchange: diff range digests with the
+            # epoch's peers, repair only the stale ranges.
+            def do_gossip(s):
+                s2, tel = store.gossip_round(
+                    s, pairs=ops["pairs"], up=up, link=conn,
+                    n_ranges=gossip.n_ranges, impl=gossip.impl,
+                )
+                return s2, (
+                    jnp.sum(tel["growth"]),
+                    jnp.sum(tel["ranges"]),
+                    jnp.sum(tel["valid"].astype(jnp.int32)),
+                    tel["gap_repaired"],
+                )
+
+            def no_gossip(s):
+                z = jnp.int32(0)
+                return s, (z, z, z, z)
+
+            st, (gd, gr, gp, gg) = jax.lax.cond(
+                ops["gossip"], do_gossip, no_gossip, st
+            )
+            g_deliv = g_deliv + gd
+            g_ranges = g_ranges + gr
+            g_pairs = g_pairs + gp
+            g_gap = g_gap + gg
         is_read = ops["kind"] == duot_lib.READ
-        return (
+        out = (
             st,
             n_stale + jnp.sum(res.stale.astype(jnp.int32)),
             n_viol + jnp.sum(res.violation.astype(jnp.int32)),
             n_reads + jnp.sum(is_read.astype(jnp.int32)),
             ae_ev, prop_ev, n_fail,
         )
+        if gossip is not None:
+            gx = (g_deliv, g_ranges, g_pairs, g_gap, h_enq, h_drop, h_deliv)
+            # Per-round repair telemetry rides the scan's ys.
+            return out + (gx,), (gd if g_on else jnp.int32(0),
+                                 gr if g_on else jnp.int32(0),
+                                 gg if g_on else jnp.int32(0))
+        return out, None
 
     @jax.jit
     def run(batched, tail):
         z = jnp.int32(0)
         carry = (store.init(), z, z, z, z, z, z)
+        if gossip is not None:
+            carry = carry + ((z, z, z, z, z, z, z),)
         n_rounds = batched["client"].shape[0]
 
         def step(carry, ops):
-            return round_step(carry, ops, ops["step0"], sub), None
+            return round_step(carry, ops, ops["step0"], sub)
 
-        carry, _ = jax.lax.scan(step, carry, batched)
+        carry, per_round = jax.lax.scan(step, carry, batched)
         if rem:
-            carry = round_step(carry, tail, jnp.int32(n_rounds * sub), rem)
-        return carry
+            carry, _ = round_step(carry, tail, jnp.int32(n_rounds * sub), rem)
+        return (carry, per_round) if gossip is not None else carry
 
     return store, run
 
@@ -851,6 +1026,7 @@ def run_protocol_faulty(
     pending_cap: int | None = None,
     n_shards: int = 1,
     schedule_unit: int | None = None,
+    gossip: GossipConfig | None = None,
     cfg: ClusterConfig = PAPER_CLUSTER,
     pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
 ) -> dict[str, Any]:
@@ -887,6 +1063,19 @@ def run_protocol_faulty(
     live until every replica has it), so ``pending_cap`` defaults to a
     generous ``max(256, 2·sub, n_writes expected)``; ``dropped_writes``
     in the result reports any overflow.
+
+    ``gossip`` (a :class:`repro.gossip.GossipConfig`) enables the
+    continuous anti-entropy subsystem: every ``cadence``-th merge epoch
+    each replica diffs range digests with one peer and repairs only the
+    stale ranges; with ``hint_cap > 0``, writes that miss a partitioned
+    replica also leave bounded hints that drain at heal time.  Repair
+    deliveries are metered like anti-entropy traffic and the digest
+    payloads (``2·K·DIGEST_BYTES`` per exchange) join them in the eq. 8
+    bill (``cost["gossip_network"]``); the result gains a ``"gossip"``
+    telemetry block with per-round repair traces.  ``gossip=None`` (the
+    default) and ``GossipConfig(cadence=0, hint_cap=0)`` both produce
+    metrics bit-identical to the heal-only path — the CI gossip smoke
+    gates on it.
     """
     if n_clients % n_shards or n_resources % n_shards or n_ops % n_shards:
         raise ValueError(
@@ -922,10 +1111,17 @@ def run_protocol_faulty(
             schedule.up[idx], schedule.link[idx]
         )
     schedule, masks, tail_masks = _fault_epoch_inputs(schedule, n_rounds, rem)
+    if gossip is not None:
+        n_epochs_total = n_rounds + (1 if rem else 0)
+        g_active, g_pairs = gossip_pairs(3, n_epochs_total, gossip)
+        masks["gossip"] = g_active[:n_rounds]
+        masks["pairs"] = g_pairs[:n_rounds]
+        tail_masks["gossip"] = g_active[n_epochs_total - 1]
+        tail_masks["pairs"] = g_pairs[n_epochs_total - 1]
 
     store, run = _faulty_runner(
         level, s_clients, s_resources, merge_every, delta, duot_cap,
-        sub, rem, emulate, pending_cap, ingest,
+        sub, rem, emulate, pending_cap, ingest, gossip,
     )
 
     batched_shards, tail_shards = [], []
@@ -965,21 +1161,32 @@ def run_protocol_faulty(
         k: jnp.asarray(np.stack([d[k] for d in dicts]))
         for k in dicts[0]
     }
+    gx = per_round = None
     if n_shards > 1:
         batched_s, tail_s = stack(batched_shards), stack(tail_shards)
         out = jax.vmap(run)(batched_s, tail_s)
+        if gossip is not None:
+            out, per_round = out
+            gx = tuple(int(jnp.sum(x)) for x in out[7])
+            per_round = tuple(
+                np.asarray(jnp.sum(x, axis=0)) for x in per_round
+            )
         st = out[0]
         n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = (
-            int(jnp.sum(x)) for x in out[1:]
+            int(jnp.sum(x)) for x in out[1:7]
         )
         dropped = int(jnp.sum(st.cluster.pend_dropped))
     else:
         b = {k: jnp.asarray(v) for k, v in batched_shards[0].items()}
         t = {k: jnp.asarray(v) for k, v in tail_shards[0].items()}
         out = run(b, t)
+        if gossip is not None:
+            out, per_round = out
+            gx = tuple(int(x) for x in out[7])
+            per_round = tuple(np.asarray(x) for x in per_round)
         st = out[0]
         n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = (
-            int(x) for x in out[1:]
+            int(x) for x in out[1:7]
         )
         dropped = int(st.cluster.pend_dropped)
 
@@ -1005,6 +1212,13 @@ def run_protocol_faulty(
     row = cfg.row_bytes
     anti_entropy_gb = ae_ev * row / 1e9
     propagation_gb = prop_ev * row / 1e9
+    gossip_gb = 0.0
+    if gossip is not None:
+        (g_deliv, g_ranges, g_pair_n, g_gap, h_enq, h_drop, h_deliv) = gx
+        k_eff = max(1, min(gossip.n_ranges, s_resources))
+        digest_gb = g_pair_n * 2 * k_eff * DIGEST_BYTES / 1e9
+        repair_gb = (g_deliv + h_deliv) * row / 1e9
+        gossip_gb = digest_gb + repair_gb
     thr, _ = throughput_model(level, w, 64, cfg, stale_rate)
     runtime_s = n_ops / thr
     inter_gb, intra_gb = traffic_gb(level, w, n_ops, cfg, stale_rate)
@@ -1014,7 +1228,7 @@ def run_protocol_faulty(
         hosted_gb=cfg.total_data_gb_after_replication,
         months=runtime_s / (30 * 24 * 3600.0),
         io_requests=float(n_ops) * level.write_acks(cfg.replication_factor),
-        inter_dc_gb=inter_gb + anti_entropy_gb,
+        inter_dc_gb=inter_gb + anti_entropy_gb + gossip_gb,
         intra_dc_gb=intra_gb,
         pricing=pricing,
     )
@@ -1022,7 +1236,7 @@ def run_protocol_faulty(
     cost["anti_entropy_network"] = cost_model.cost_network(
         inter_dc_gb=anti_entropy_gb, intra_dc_gb=0.0, pricing=pricing
     )
-    return {
+    result: dict[str, Any] = {
         "staleness_rate": stale_rate,
         "violation_rate": viol_rate,
         "severity": severity,
@@ -1039,6 +1253,33 @@ def run_protocol_faulty(
         "n_shards": n_shards,
         "cost": cost,
     }
+    if gossip is not None:
+        cost["gossip_network"] = cost_model.cost_network(
+            inter_dc_gb=gossip_gb, intra_dc_gb=0.0, pricing=pricing
+        )
+        pr_deliv, pr_ranges, pr_gap = per_round
+        result["gossip"] = {
+            "cadence": gossip.cadence,
+            "rounds": int(np.asarray(masks["gossip"]).sum())
+            + (int(bool(tail_masks["gossip"])) if rem else 0),
+            "pairs_exchanged": g_pair_n,
+            "ranges_diffed": g_ranges,
+            "repair_events": g_deliv + h_deliv,
+            "gap_repaired": g_gap,
+            "digest_gb": digest_gb,
+            "repair_gb": repair_gb,
+            "hints": {
+                "enqueued": h_enq,
+                "dropped": h_drop,
+                "delivered": h_deliv,
+            },
+            "per_round": {
+                "deliveries": pr_deliv.tolist(),
+                "ranges_diffed": pr_ranges.tolist(),
+                "gap_repaired": pr_gap.tolist(),
+            },
+        }
+    return result
 
 
 def run_protocol_scalar(

@@ -1,0 +1,373 @@
+"""Gossip anti-entropy: digests, the compare kernel, peer schedules,
+range-restricted repair rounds, hinted handoff, the driver integration
+(gossip-off bit-identity, staleness reduction), and the cadence
+bandit."""
+
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import availability as av
+from repro.core.consistency import ConsistencyLevel
+from repro.core.replicated_store import ReplicatedStore
+from repro.gossip import (
+    DIGEST_BYTES,
+    GossipConfig,
+    gossip_pairs,
+    range_digests,
+    range_of_resource,
+)
+from repro.kernels import ops as kernel_ops
+from repro.policy import CadenceController
+from repro.storage.simulator import run_protocol_faulty, run_protocol_geo
+from repro.storage.ycsb import WORKLOAD_A
+
+R3 = np.ones((3, 3), bool)
+UP3 = jnp.ones(3, bool)
+
+# ---------------------------------------------------------------------------
+# Digests
+# ---------------------------------------------------------------------------
+
+
+def test_range_of_resource_contiguous_cover():
+    rid = np.asarray(range_of_resource(10, 3))
+    assert rid.tolist() == [0, 0, 0, 0, 1, 1, 1, 1, 2, 2]
+    assert np.asarray(range_of_resource(5, 64)).tolist() == [0, 1, 2, 3, 4]
+    assert np.asarray(range_of_resource(5, 1)).tolist() == [0] * 5
+
+
+def test_range_digests_components():
+    v = jnp.asarray([[1, 2, 0, 4], [0, 0, 0, 0]], jnp.int32)
+    d = np.asarray(range_digests(v, 2))            # (P=2, K=2, 4)
+    assert d.shape == (2, 2, 4)
+    assert d[0, 0, 0] == 3 and d[0, 1, 0] == 4     # SUM per range
+    assert d[0, 0, 1] == 2 and d[0, 1, 1] == 4     # MAX per range
+    assert d[0, 0, 3] == 2 and d[0, 1, 3] == 1     # CNT: written resources
+    assert (d[1] == 0).all()                       # empty replica
+    # 1-D row input squeezes to (K, 4).
+    assert np.asarray(range_digests(v[0], 2)).shape == (2, 4)
+
+
+def test_checksum_catches_permuted_histories():
+    # Same SUM/MAX/CNT, different assignment: only CHK separates them.
+    a = jnp.asarray([3, 1, 1, 3], jnp.int32)
+    b = jnp.asarray([1, 3, 3, 1], jnp.int32)
+    da, db = range_digests(a, 1), range_digests(b, 1)
+    assert da[0, 0] == db[0, 0] and da[0, 1] == db[0, 1]
+    assert da[0, 2] != db[0, 2]
+    differ, _, _ = kernel_ops.digest_compare(da, db, impl="dense")
+    assert bool(differ[0])
+
+
+# ---------------------------------------------------------------------------
+# digest_compare: kernel vs twin vs oracle, bit-exact
+# ---------------------------------------------------------------------------
+
+
+def _digest_pair(rng, n_resources, n_ranges, mode="random"):
+    va = rng.integers(0, 5, (n_resources,)).astype(np.int32)
+    if mode == "equal":
+        vb = va.copy()
+    elif mode == "empty":
+        va = np.zeros(n_resources, np.int32)
+        vb = np.zeros(n_resources, np.int32)
+    elif mode == "fully_stale":
+        vb = np.zeros(n_resources, np.int32)
+        va = va + 1                                # every range written
+    else:
+        vb = rng.integers(0, 5, (n_resources,)).astype(np.int32)
+    return (
+        range_digests(jnp.asarray(va), n_ranges),
+        range_digests(jnp.asarray(vb), n_ranges),
+    )
+
+
+@pytest.mark.parametrize("n_ranges", [1, 3, 8, 64])
+@pytest.mark.parametrize("block", [4, 32, 128])
+def test_digest_compare_impls_bit_exact(n_ranges, block):
+    rng = np.random.default_rng(n_ranges * 1000 + block)
+    for mode in ("random", "equal", "empty", "fully_stale"):
+        a, b = _digest_pair(rng, 96, n_ranges, mode)
+        ref = kernel_ops.digest_compare(a, b, impl="dense")
+        for impl in ("tiled", "pallas"):
+            got = kernel_ops.digest_compare(
+                a, b, impl=impl, block=block, interpret=True
+            )
+            for r, g in zip(ref, got):
+                np.testing.assert_array_equal(
+                    np.asarray(r), np.asarray(g), err_msg=f"{impl} {mode}"
+                )
+
+
+def test_digest_compare_modes_semantics():
+    rng = np.random.default_rng(0)
+    a, b = _digest_pair(rng, 48, 8, "equal")
+    differ, ab, bb = kernel_ops.digest_compare(a, b, impl="tiled")
+    assert not bool(jnp.any(differ))
+    a, b = _digest_pair(rng, 48, 8, "empty")
+    differ, _, _ = kernel_ops.digest_compare(a, b, impl="tiled")
+    assert not bool(jnp.any(differ))
+    a, b = _digest_pair(rng, 48, 8, "fully_stale")
+    differ, ab, bb = kernel_ops.digest_compare(a, b, impl="tiled")
+    assert bool(jnp.all(differ))
+    assert bool(jnp.all(bb)) and not bool(jnp.any(ab))  # B strictly behind
+
+
+def test_digest_compare_leading_axes():
+    # (pairs, ranges, 4) inputs keep their leading shape in the masks.
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.integers(0, 9, (5, 8, 4)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 9, (5, 8, 4)), jnp.int32)
+    differ, ab, bb = kernel_ops.digest_compare(a, b, impl="tiled", block=8)
+    ref = kernel_ops.digest_compare(a, b, impl="dense")
+    assert differ.shape == (5, 8)
+    np.testing.assert_array_equal(np.asarray(differ), np.asarray(ref[0]))
+
+
+# ---------------------------------------------------------------------------
+# Peer schedules
+# ---------------------------------------------------------------------------
+
+
+def test_gossip_pairs_cadence_and_round_robin():
+    cfg = GossipConfig(cadence=2)
+    active, pairs = gossip_pairs(3, 8, cfg)
+    assert active.tolist() == [0, 1, 0, 1, 0, 1, 0, 1]
+    assert pairs.shape == (8, 3, 2)
+    # Inactive epochs are self-loops; active epochs never are.
+    assert (pairs[0, :, 0] == pairs[0, :, 1]).all()
+    assert (pairs[1, :, 0] != pairs[1, :, 1]).all()
+    # Round-robin: consecutive exchanges rotate the peer column.
+    assert pairs[1, 0, 1] != pairs[3, 0, 1]
+    # Every replica eventually exchanges with every other replica.
+    seen = {
+        (int(p), int(q))
+        for t in np.flatnonzero(active)
+        for p, q in pairs[t]
+    }
+    assert seen == {(p, q) for p in range(3) for q in range(3) if p != q}
+
+
+def test_gossip_pairs_disabled_and_validation():
+    active, pairs = gossip_pairs(3, 4, GossipConfig(cadence=0))
+    assert not active.any()
+    assert (pairs[..., 0] == pairs[..., 1]).all()
+    with pytest.raises(ValueError, match="invalid gossip config"):
+        GossipConfig(cadence=-1)
+    with pytest.raises(ValueError, match="peer policy"):
+        GossipConfig(peer="both")
+    with pytest.raises(ValueError, match="needs a RegionTopology"):
+        gossip_pairs(3, 4, GossipConfig(cadence=1, peer="nearest"))
+
+
+def test_gossip_pairs_nearest_prefers_lan_peer():
+    from repro.geo.topology import PAPER_TOPOLOGY
+
+    topo = PAPER_TOPOLOGY
+    reg = np.asarray(topo.regions())
+    rtt = np.asarray(topo.rtt())
+    active, pairs = gossip_pairs(
+        topo.n_replicas, topo.n_replicas,
+        GossipConfig(cadence=1, peer="nearest"), topo,
+    )
+    # First exchange of each replica goes to its RTT-nearest peer.
+    first = pairs[np.flatnonzero(active)[0]]
+    for p, q in first:
+        others = [j for j in range(topo.n_replicas) if j != p]
+        best = min(others, key=lambda j: (rtt[reg[p], reg[j]], j))
+        assert int(q) == best
+
+
+# ---------------------------------------------------------------------------
+# Store-level gossip round + hinted handoff
+# ---------------------------------------------------------------------------
+
+
+def _partitioned_store(level=ConsistencyLevel.X_STCC, hint_cap=0):
+    """3-replica store with writes merged under a 2|1 split."""
+    store = ReplicatedStore(
+        3, 4, 6, level=level, merge_every=4, delta=8, hint_cap=hint_cap
+    )
+    st = store.init()
+    st, _ = store.write_batch(
+        st, client=jnp.asarray([0, 1, 2]), replica=jnp.asarray([0, 1, 0]),
+        resource=jnp.asarray([0, 2, 4]))
+    split = jnp.asarray(
+        np.array([[1, 1, 0], [1, 1, 0], [0, 0, 1]], bool))
+    st, _, _ = store.merge_faulty(st, up=UP3, link=split, delta=0)
+    return store, st
+
+
+def test_gossip_round_repairs_stale_ranges():
+    store, st = _partitioned_store()
+    assert np.asarray(st.cluster.replica_version)[2].sum() == 0
+    pairs = jnp.asarray([[0, 1], [1, 2], [2, 0]], jnp.int32)
+    st2, tel = store.gossip_round(
+        st, pairs=pairs, up=UP3, link=jnp.asarray(R3), n_ranges=3)
+    rv2 = np.asarray(st2.cluster.replica_version)
+    assert rv2[2].sum() > 0                   # replica 2 repaired
+    assert int(tel["gap_repaired"]) > 0
+    assert int(np.asarray(tel["ranges"]).sum()) > 0
+    # Converged fleet: a second round diffs nothing and changes nothing.
+    st3, tel3 = store.gossip_round(
+        st2, pairs=pairs, up=UP3, link=jnp.asarray(R3), n_ranges=3)
+    assert int(np.asarray(tel3["growth"]).sum()) == 0
+    for x, y in zip(jax.tree.leaves(st2), jax.tree.leaves(st3)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_gossip_round_respects_partition():
+    store, st = _partitioned_store()
+    split = jnp.asarray(np.array([[1, 1, 0], [1, 1, 0], [0, 0, 1]], bool))
+    pairs = jnp.asarray([[0, 1], [1, 2], [2, 0]], jnp.int32)
+    st2, tel = store.gossip_round(
+        st, pairs=pairs, up=UP3, link=split, n_ranges=3)
+    # Cross-split pairs are invalid: replica 2 stays unrepaired.
+    assert np.asarray(st2.cluster.replica_version)[2].sum() == 0
+    v = np.asarray(tel["valid"])
+    assert v.tolist() == [True, False, False]
+
+
+def test_hints_enqueue_drain_and_overflow():
+    store, st = _partitioned_store(hint_cap=8)
+    conn = jnp.asarray(np.array([[1, 1, 0], [1, 1, 0], [0, 0, 1]], bool))
+    # Writes at replica 0 while 2 is unreachable leave hints for 2.
+    st, res = store.write_batch(
+        st, client=jnp.asarray([0, 1]), replica=jnp.asarray([0, 1]),
+        resource=jnp.asarray([1, 3]))
+    st, n_enq, n_drop = store.enqueue_hints(
+        st, slot=res.slot, version=res.version,
+        kind=jnp.full((2,), 1, jnp.int32),
+        home=jnp.asarray([0, 1]), conn=conn)
+    assert int(n_enq) == 2 and int(n_drop) == 0
+    assert int(st.hints.count[2]) == 2
+    # Heal: draining delivers the hinted writes to replica 2.
+    st2, deliv = store.drain_hints(st, up=UP3, link=jnp.asarray(R3))
+    assert int(deliv) > 0
+    assert int(st2.hints.count[2]) == 0
+    rv = np.asarray(st2.cluster.replica_version)
+    assert rv[2, 1] >= 1 and rv[2, 3] >= 1
+    # Overflow: a tiny queue drops the excess and reports it.
+    store_s, st_s = _partitioned_store(hint_cap=1)
+    st_s, res_s = store_s.write_batch(
+        st_s, client=jnp.asarray([0, 1, 2]), replica=jnp.asarray([0, 0, 1]),
+        resource=jnp.asarray([1, 3, 5]))
+    st_s, n_enq, n_drop = store_s.enqueue_hints(
+        st_s, slot=res_s.slot, version=res_s.version,
+        kind=jnp.full((3,), 1, jnp.int32),
+        home=jnp.asarray([0, 0, 1]), conn=conn)
+    assert int(n_enq) == 1 and int(n_drop) == 2
+    assert int(st_s.hints.dropped) == 2
+
+
+# ---------------------------------------------------------------------------
+# Driver integration
+# ---------------------------------------------------------------------------
+
+
+def _strip_gossip(result):
+    r = copy.deepcopy(result)
+    r.pop("gossip", None)
+    r.get("cost", {}).pop("gossip_network", None)
+    r.get("cost", {}).pop("gossip_network_geo", None)
+    return r
+
+
+def _fault_grid():
+    return av.replica_outage(40, 3, 1, 6, 24) & av.partition(
+        40, 3, [[0, 1], [2]], 20, 30)
+
+
+@pytest.mark.parametrize("name", ["X_STCC", "CAUSAL", "ONE"])
+def test_faulty_gossip_off_bit_identical(name):
+    level = ConsistencyLevel[name]
+    kw = dict(schedule=_fault_grid(), n_ops=768, batch_size=32,
+              audit=False, seed=5)
+    base = run_protocol_faulty(level, WORKLOAD_A, **kw)
+    off = run_protocol_faulty(
+        level, WORKLOAD_A, gossip=GossipConfig(cadence=0), **kw)
+    assert _strip_gossip(off) == base
+
+
+def test_faulty_gossip_reduces_staleness_and_bills():
+    kw = dict(schedule=_fault_grid(), n_ops=1024, batch_size=32,
+              audit=False, seed=3)
+    base = run_protocol_faulty(ConsistencyLevel.ONE, WORKLOAD_A, **kw)
+    on = run_protocol_faulty(
+        ConsistencyLevel.ONE, WORKLOAD_A,
+        gossip=GossipConfig(cadence=2, hint_cap=64), **kw)
+    assert on["staleness_rate"] < base["staleness_rate"]
+    g = on["gossip"]
+    assert g["repair_events"] > 0 and g["pairs_exchanged"] > 0
+    # Billing: digest bytes follow the wire format exactly.
+    k_eff = min(GossipConfig(cadence=2).n_ranges, 24)
+    assert g["digest_gb"] == pytest.approx(
+        g["pairs_exchanged"] * 2 * k_eff * DIGEST_BYTES / 1e9)
+    assert on["cost"]["gossip_network"] > 0.0
+    assert on["cost"]["total"] > base["cost"]["total"]
+    # Per-round traces cover the batched rounds.
+    pr = g["per_round"]
+    assert len(pr["deliveries"]) == len(pr["ranges_diffed"]) > 0
+    assert sum(pr["ranges_diffed"]) <= g["ranges_diffed"]
+
+
+def test_geo_gossip_off_identical_and_on_reduces():
+    kw = dict(n_ops=512, batch_size=32, audit=False, seed=1)
+    base = run_protocol_geo(ConsistencyLevel.ONE, WORKLOAD_A, **kw)
+    off = run_protocol_geo(
+        ConsistencyLevel.ONE, WORKLOAD_A,
+        gossip=GossipConfig(cadence=0), **kw)
+    assert off == base                         # cadence 0 adds nothing
+    on = run_protocol_geo(
+        ConsistencyLevel.ONE, WORKLOAD_A,
+        gossip=GossipConfig(cadence=2, peer="nearest"), **kw)
+    assert on["staleness_rate"] < base["staleness_rate"]
+    mat = np.asarray(on["gossip"]["repair_events"])
+    assert mat.shape == (base["n_regions"], base["n_regions"])
+    assert mat.sum() > 0 and np.diag(mat).sum() == 0
+    assert on["cost"]["gossip_network_geo"] > 0.0
+    assert on["cost"]["total_geo"] > base["cost"]["total_geo"]
+
+
+# ---------------------------------------------------------------------------
+# Cadence bandit
+# ---------------------------------------------------------------------------
+
+
+def test_cadence_controller_converges_to_best_arm():
+    ctl = CadenceController(cadences=(0, 2, 8), eps0=0.0)
+    E = 40
+    stale = np.stack(
+        [np.full(E, 80.0), np.full(E, 10.0), np.full(E, 40.0)], 1)
+    gb = np.stack(
+        [np.zeros(E), np.full(E, 1e-3), np.full(E, 3e-4)], 1)
+    state, trace = ctl.run_scan(
+        jax.random.PRNGKey(0),
+        {"gb": jnp.asarray(gb), "stale": jnp.asarray(stale),
+         "reads": jnp.full((E,), 100.0)},
+    )
+    arms = np.asarray(trace["arm"])
+    # Greedy settles on the staleness-crushing cadence (arm 1); the
+    # optimistic re-probes as evidence ages keep visiting the others.
+    assert np.bincount(arms[-16:], minlength=3).argmax() == 1
+    u = np.asarray(ctl.utilities(state))
+    assert u[1] == u.max()
+    assert ctl.cadence_of(int(np.argmax(u))) == 2
+
+
+def test_cadence_controller_prefers_free_arm_when_staleness_ties():
+    ctl = CadenceController(cadences=(0, 1), eps0=0.0)
+    E = 24
+    stale = np.full((E, 2), 5.0)               # gossip buys nothing
+    gb = np.stack([np.zeros(E), np.full(E, 1e-2)], 1)
+    _, trace = ctl.run_scan(
+        jax.random.PRNGKey(1),
+        {"gb": jnp.asarray(gb), "stale": jnp.asarray(stale),
+         "reads": jnp.full((E,), 100.0)},
+    )
+    arms = np.asarray(trace["arm"])
+    assert np.bincount(arms[-8:], minlength=2).argmax() == 0
