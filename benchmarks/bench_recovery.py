@@ -1,0 +1,196 @@
+"""Crash recovery: snapshot cadence × crash rate × level.
+
+Runs ``run_protocol_faulty`` with the durability layer (snapshot
+markers + WAL journaling) under crash schedules of increasing rate and
+lands the recovery-traffic-vs-durability-bill trade surface in
+``BENCH_PROTOCOL.json`` — eq. 8 with the crash path priced in: tighter
+snapshot cadence pays more marker I/O and replays less journal; rarer
+markers lose more state and rebuild more from peers.  A seeded chaos
+suite (``repro.chaos``) rides along as the correctness surface.
+
+Rows (name, us_per_call, derived):
+  recovery_identity_<LEVEL>          derived = durability-on no-crash
+                                     run == plain faulty run (metrics)
+  recovery_<LEVEL>_s<SE>_x<N>        derived = staleness rate at
+                                     snapshot cadence SE under N crashes
+  recovery_gb_<LEVEL>_s<SE>_x<N>     derived = crash-triggered GB
+                                     (bootstrap + replay)
+  recovery_cost_<LEVEL>_s<SE>_x<N>   derived = total bill incl. the
+                                     durability terms
+  recovery_replay_<LEVEL>_s<SE>_x<N> derived = WAL records replayed
+  chaos_seed_<S>                     derived = seeded nemesis verdict
+                                     (breaches=0 and bit-exact
+                                     convergence to the crash-free twin)
+
+``REPRO_BENCH_NOPS`` scales the stream (default 3072; CI smoke uses a
+short one).  ``--check`` gates on: metric bit-identity between the
+durability-on no-crash run and the plain faulty run for every level,
+zero X-STCC violations in every crash scenario, crash-triggered
+recovery traffic strictly positive exactly when the schedule crashed,
+a clean chaos suite (zero invariant breaches, zero diverged fleets)
+across ``CHAOS_SEEDS`` seeds, and a valid JSON round-trip.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+from benchmarks.common import emit, time_call, write_json
+
+N_OPS = int(os.environ.get("REPRO_BENCH_NOPS", "3072"))
+BATCH = 128
+LEVELS = ("X_STCC", "CAUSAL", "ONE")
+SNAPSHOT_EVERY = (2, 8)        # merge epochs between markers
+N_CRASHES = (0, 1, 2)          # crashes over the run (the "rate" axis)
+CHAOS_SEEDS = range(5)
+
+_METRIC_KEYS = ("staleness_rate", "violation_rate", "n_reads",
+                "dropped_writes", "failovers")
+
+
+def _crash_schedule(t: int, n: int):
+    """FaultSchedule with ``n`` single-epoch crashes spread over ``t``.
+
+    Crashes alternate between replicas 1 and 2 at evenly spaced epochs,
+    leaving epoch 0 and a quiet tail crash-free so every replica
+    rejoins and converges before the run ends.
+    """
+    from repro.core import availability as av
+
+    sched = av.all_up(t, 3)
+    if n == 0:
+        return sched
+    span = max(1, t - 3)
+    for i in range(n):
+        epoch = 1 + (i * span) // n
+        sched = sched & av.replica_crash(
+            t, 3, replica=1 + i % 2, epoch=min(epoch, t - 3), down_for=1)
+    return sched
+
+
+def run() -> dict:
+    import copy
+
+    from repro.core.consistency import ConsistencyLevel
+    from repro.core.replicated_store import DurabilityConfig
+    from repro.storage.simulator import run_protocol_faulty
+    from repro.storage.ycsb import WORKLOAD_A
+
+    n_ops = max(N_OPS, 4 * BATCH)
+    t = n_ops // BATCH
+    results = {"identity": {}, "scenarios": [], "chaos": None}
+
+    # Bit-identity: durability on, no crash — every protocol metric of
+    # the plain faulty path must be untouched; only the bill moves.
+    for name in LEVELS:
+        level = ConsistencyLevel[name]
+        base = run_protocol_faulty(
+            level, WORKLOAD_A, n_ops=n_ops, batch_size=BATCH, audit=False)
+        us, dur = time_call(
+            run_protocol_faulty, level, WORKLOAD_A, n_ops=n_ops,
+            batch_size=BATCH, audit=False,
+            recovery=DurabilityConfig(snapshot_every=4, wal=True),
+        )
+        same = (
+            all(base[k] == dur[k] for k in _METRIC_KEYS)
+            and dur["recovery"]["recovery_gb"] == 0.0
+        )
+        results["identity"][name] = same
+        emit(f"recovery_identity_{name}", us, same)
+
+    for n_crash in N_CRASHES:
+        sched = _crash_schedule(t, n_crash)
+        for name in LEVELS:
+            level = ConsistencyLevel[name]
+            for se in SNAPSHOT_EVERY:
+                us, out = time_call(
+                    run_protocol_faulty, level, WORKLOAD_A, n_ops=n_ops,
+                    batch_size=BATCH, schedule=sched, audit=False,
+                    recovery=DurabilityConfig(snapshot_every=se, wal=True),
+                )
+                rec = out.get("recovery") or {}
+                tag = f"{name}_s{se}_x{n_crash}"
+                emit(f"recovery_{tag}", us, f"{out['staleness_rate']:.4f}")
+                emit(f"recovery_gb_{tag}", 0.0,
+                     f"{rec.get('recovery_gb', 0.0):.3e}")
+                emit(f"recovery_cost_{tag}", 0.0,
+                     f"{out['cost']['total']:.4e}")
+                emit(f"recovery_replay_{tag}", 0.0,
+                     rec.get("wal_replayed", 0))
+                results["scenarios"].append(dict(
+                    level=name, snapshot_every=se, n_crashes=n_crash,
+                    staleness_rate=out["staleness_rate"],
+                    violation_rate=out["violation_rate"],
+                    recovery_gb=rec.get("recovery_gb", 0.0),
+                    wal_replayed=rec.get("wal_replayed", 0),
+                    rows_lost=rec.get("rows_lost", 0),
+                    cost_total=out["cost"]["total"],
+                ))
+
+    # Seeded chaos: randomized nemesis schedules, post-run invariant
+    # checks, and bit-exact convergence to the never-crashed twin.
+    from repro.chaos import run_chaos_suite
+
+    suite = run_chaos_suite(seeds=CHAOS_SEEDS, n_ops=n_ops,
+                            batch_size=BATCH)
+    for r in suite["runs"]:
+        emit(f"chaos_seed_{r['seed']}", 0.0,
+             "ok" if r["ok"] else
+             f"breaches={len(r['breaches'])},converged={r['converged']}")
+    slim = copy.deepcopy(suite)
+    for r in slim["runs"]:
+        r.pop("metrics", None)
+    results["chaos"] = slim
+    return results
+
+
+def check() -> int:
+    """CI smoke: run, persist JSON, gate on the recovery semantics."""
+    import json
+
+    results = run()
+    path = write_json()
+    json.loads(path.read_text())   # must round-trip
+    bad = []
+    for name, same in results["identity"].items():
+        if not same:
+            bad.append(
+                f"durability-on no-crash run diverges from the plain "
+                f"faulty path for {name}")
+    for s in results["scenarios"]:
+        tag = (f"{s['level']} s{s['snapshot_every']} "
+               f"x{s['n_crashes']}")
+        if s["level"] == "X_STCC" and s["violation_rate"] > 0:
+            bad.append(f"{tag}: violation_rate={s['violation_rate']} "
+                       "(crash recovery broke X-STCC)")
+        if s["n_crashes"] > 0 and s["recovery_gb"] <= 0:
+            bad.append(f"{tag}: crashed but recovery_gb="
+                       f"{s['recovery_gb']}")
+        if s["n_crashes"] == 0 and s["recovery_gb"] > 0:
+            bad.append(f"{tag}: recovery_gb={s['recovery_gb']} "
+                       "without a crash")
+    chaos = results["chaos"]
+    if chaos["n_breaches"] > 0 or chaos["n_diverged"] > 0 \
+            or not chaos["ok"]:
+        for r in chaos["runs"]:
+            if not r["ok"]:
+                bad.append(
+                    f"chaos seed {r['seed']}: breaches={r['breaches']} "
+                    f"converged={r['converged']} "
+                    f"diverged_fields={r.get('diverged_fields')}")
+    if bad:
+        for b in bad:
+            print(b, file=sys.stderr)
+        return 1
+    print(f"check OK: {len(results['scenarios'])} scenarios, "
+          f"{chaos['n_seeds']} chaos seeds -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        sys.exit(check())
+    print("name,us_per_call,derived")
+    run()
+    write_json()

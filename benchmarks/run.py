@@ -9,6 +9,9 @@
   geo       — region-aware topology (region skew × placement plan ×
               level): WAN traffic matrix, per-pair egress bill, and the
               placement planner vs the paper's static 4-per-DC plan.
+  recovery  — crash recovery (snapshot cadence × crash rate × level):
+              durability bill, replay/bootstrap traffic, and the seeded
+              chaos-suite verdicts.
   policy    — adaptive consistency control plane vs every static level
               on phase-shifting workloads (cost/SLA frontier).
   sync_cost — the technique applied to multi-pod training (traffic +
@@ -35,6 +38,7 @@ def main() -> None:
         bench_kernels,
         bench_policy,
         bench_protocol,
+        bench_recovery,
         bench_roofline,
         bench_storage,
         bench_sync_cost,
@@ -47,6 +51,7 @@ def main() -> None:
         ("faults", bench_faults),
         ("geo", bench_geo),
         ("gossip", bench_gossip),
+        ("recovery", bench_recovery),
         ("policy", bench_policy),
         ("sync_cost", bench_sync_cost),
         ("kernels", bench_kernels),

@@ -1,0 +1,117 @@
+"""Crash recovery end to end: durability ladder, retries, chaos.
+
+Crashes replica 1 mid-run and walks the durability ladder — amnesiac
+(peers rebuild everything), snapshot-only (roll back to the last
+marker), snapshot+WAL (exact restore) — printing what each rung loses,
+what it replays, what the peer bootstrap ships, and what the extra
+durability I/O costs through eq. 8.  Then shows the serving engine's
+client-side story (retry/backoff, degraded admission while the home
+replica rebuilds) and finishes with a seeded chaos run: randomized
+crashes/outages/partitions, post-run invariant checks, and bit-exact
+convergence to a never-crashed twin.
+
+Run:  PYTHONPATH=src python examples/crash_recovery.py
+"""
+
+import numpy as np
+
+from repro.chaos import run_chaos
+from repro.core import availability as av
+from repro.core.consistency import ConsistencyLevel
+from repro.core.replicated_store import DurabilityConfig
+from repro.storage.simulator import run_protocol_faulty
+from repro.storage.ycsb import WORKLOAD_A
+
+N_OPS, BATCH = 1024, 128
+T = N_OPS // BATCH
+X = ConsistencyLevel.X_STCC
+# Replica 1 crashes at epoch 3 and rejoins two epochs later.
+SCHED = av.replica_crash(T, 3, replica=1, epoch=3, down_for=2)
+
+LADDER = (
+    ("amnesiac", DurabilityConfig(snapshot_every=0, wal=False)),
+    ("snapshot", DurabilityConfig(snapshot_every=2, wal=False)),
+    ("snap+wal", DurabilityConfig(snapshot_every=2, wal=True)),
+)
+
+
+def durability_ladder():
+    print(f"=== X-STCC, {N_OPS} ops, crash@3 rejoin@5: durability ladder")
+    print(f"{'mode':>9s} {'lost':>5s} {'replay':>7s} {'boot':>6s} "
+          f"{'recovery GB':>12s} {'durab $':>10s} {'viol':>5s}")
+    for name, cfg in LADDER:
+        out = run_protocol_faulty(
+            X, WORKLOAD_A, n_ops=N_OPS, batch_size=BATCH,
+            schedule=SCHED, audit=False,
+            recovery=cfg if cfg.enabled else None)
+        rec = out["recovery"]
+        bill = out["cost"].get("durability_storage", 0.0)
+        print(f"{name:>9s} {rec['rows_lost']:5d} "
+              f"{rec['wal_replayed']:7d} {rec['bootstrap_cells']:6d} "
+              f"{rec['recovery_gb']:12.3e} {bill:10.3e} "
+              f"{out['violation_rate']:5.2f}")
+    print("A crash is a data-movement problem, not a correctness one:\n"
+          "every rung reports zero X-STCC violations; the ladder only\n"
+          "moves where the rebuild bytes come from (peers vs media).\n")
+
+
+def retry_demo():
+    from repro.serve import (
+        RetryPolicy, ServeSession, ServeTimeout, ServingEngine,
+    )
+
+    class _M:
+        def prefill(self, params, batch):  # pragma: no cover
+            raise NotImplementedError
+
+        def decode_step(self, params, cache, tokens):
+            return "logits", "cache"
+
+    print("=== serving: retry/backoff + degraded admission")
+    eng = ServingEngine(_M(), X, jit=False, max_replicas=3,
+                        max_sessions=4)
+    for v in (1, 1, 1):
+        eng.publish(None, v)
+    s = ServeSession(session_id=0)
+    print(f"all-up serve -> replica {eng.serve_with_retry(s)}")
+    # Replica 0 takes a fresh version, the session reads it (raising
+    # its monotonic-reads floor above 1), then 0 starts rebuilding:
+    # the floor is now unmet at every routable replica.
+    eng.publish(None, 5, replica=0)
+    eng.serve_with_retry(s, preferred=0)
+    eng.mark_rebuilding(0)
+    policy = RetryPolicy(max_retries=2, base_backoff_ms=4.0, degrade=True)
+    r = eng.serve_with_retry(s, policy=policy)
+    print(f"home rebuilding -> degraded serve from replica {r}; "
+          f"retries={eng.retries} downgrades={eng.downgrades} "
+          f"waited={eng.retry_wait_ms:.1f}ms")
+    try:
+        eng.serve_with_retry(
+            s, policy=RetryPolicy(max_retries=1, degrade=False))
+    except ServeTimeout as e:
+        print(f"no-degrade policy times out: {e}")
+    eng.finish_rebuilding(0)
+    print(f"rebuilt -> replica {eng.serve_with_retry(s)} serves the "
+          f"floor again\n")
+
+
+def chaos_demo():
+    print("=== seeded chaos: nemesis + invariants + convergence")
+    verdict = run_chaos(seed=1, n_ops=N_OPS, batch_size=BATCH)
+    print(f"seed=1: crashes={verdict['crashes']} "
+          f"outage_epochs={verdict['outage_epochs']} "
+          f"partitions={verdict['partitions']}")
+    print(f"breaches={verdict['breaches'] or 'none'} "
+          f"converged={verdict['converged']} ok={verdict['ok']}")
+    rec = verdict["recovery"]
+    if rec:
+        print(f"recovery: replay={rec['wal_replayed']} "
+              f"bootstrap={rec['bootstrap_cells']} cells, "
+              f"{rec['recovery_gb']:.3e} GB")
+
+
+if __name__ == "__main__":
+    np.set_printoptions(precision=3, suppress=True)
+    durability_ladder()
+    retry_demo()
+    chaos_demo()

@@ -1,0 +1,21 @@
+"""Seeded chaos harness: nemesis schedules + causal-invariant checks.
+
+The robustness proof of the crash-recovery engine: randomized
+crash/outage/partition/gossip compositions (:mod:`~repro.chaos.nemesis`)
+run through the faulty driver, post-checked for causal invariants
+(:mod:`~repro.chaos.invariants`) and for bit-exact convergence to the
+never-crashed twin (:mod:`~repro.chaos.harness`).
+"""
+
+from repro.chaos.harness import DEFAULT_RECOVERY, run_chaos, run_chaos_suite
+from repro.chaos.invariants import check_invariants
+from repro.chaos.nemesis import random_gossip, random_schedule
+
+__all__ = [
+    "DEFAULT_RECOVERY",
+    "check_invariants",
+    "random_gossip",
+    "random_schedule",
+    "run_chaos",
+    "run_chaos_suite",
+]

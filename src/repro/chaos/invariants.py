@@ -1,0 +1,75 @@
+"""Post-run causal-invariant checks over a chaos run's result.
+
+Built on the same telemetry the drivers already emit (``core/audit``
+severity, per-run violation counts, the recovery/cost blocks): a chaos
+run *passes* when every invariant below holds.  Checks return a list of
+human-readable breach strings — empty means clean — so the harness and
+the bench ``--check`` gate can aggregate them across seeds.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.consistency import ConsistencyLevel
+
+__all__ = ["check_invariants"]
+
+
+def check_invariants(
+    result: dict[str, Any],
+    level: ConsistencyLevel,
+    *,
+    crashed: bool,
+) -> list[str]:
+    """All causal/accounting invariants a chaos run must satisfy.
+
+    * **No protocol violations under guarded levels** — X-STCC (and any
+      session-guarded or timed level) must report a zero violation rate
+      no matter what the nemesis did: a crash may cost staleness and
+      traffic, never correctness.  (DUOT audit *severity* is a graded
+      [0, 1] measure that is small-but-nonzero even on a clean all-up
+      run, so it is reported, not gated on zero.)
+    * **Recovery traffic iff a crash happened** — the recovery block's
+      crash-triggered bytes (``recovery_gb``) must be positive exactly
+      when the schedule contained a crash, and the crash/rejoin
+      counters must agree with it.
+    * **Sane accounting** — rates in ``[0, 1]``, non-negative cost
+      lines.
+    """
+    breaches: list[str] = []
+    guarded = level.is_session_guarded or level.is_timed
+
+    viol = float(result.get("violation_rate", 0.0))
+    if guarded and viol > 0:
+        breaches.append(
+            f"{level.value}: violation_rate={viol} (expected 0)"
+        )
+
+    stale = float(result.get("staleness_rate", 0.0))
+    if not 0.0 <= stale <= 1.0:
+        breaches.append(f"staleness_rate={stale} out of [0, 1]")
+
+    rec = result.get("recovery")
+    if crashed:
+        if rec is None:
+            breaches.append("schedule crashed but result has no recovery block")
+        else:
+            if rec["crashes"] < 1:
+                breaches.append(f"crashes={rec['crashes']} (expected >= 1)")
+            if rec["rejoins"] < 1:
+                breaches.append(f"rejoins={rec['rejoins']} (expected >= 1)")
+            if rec["recovery_gb"] <= 0.0:
+                breaches.append(
+                    f"recovery_gb={rec['recovery_gb']} (expected > 0 "
+                    "after a crash)"
+                )
+    elif rec is not None and rec["recovery_gb"] > 0.0:
+        breaches.append(
+            f"recovery_gb={rec['recovery_gb']} > 0 without a crash"
+        )
+
+    for key, value in result.get("cost", {}).items():
+        if isinstance(value, (int, float)) and value < 0:
+            breaches.append(f"cost[{key}]={value} negative")
+    return breaches

@@ -5,10 +5,16 @@ is a vectorized availability timeline over ``T`` epochs (an epoch is
 one merge round of the batched engine — see
 ``repro.storage.simulator.run_protocol_faulty``) and ``R`` replicas:
 
-  * ``up``   — ``(T, R)`` bool, replica liveness per epoch;
-  * ``link`` — ``(T, R, R)`` bool, symmetric pairwise connectivity
+  * ``up``    — ``(T, R)`` bool, replica liveness per epoch;
+  * ``link``  — ``(T, R, R)`` bool, symmetric pairwise connectivity
     (``link[t, i, j]`` = the network lets ``i`` and ``j`` exchange
-    merge traffic during epoch ``t``).
+    merge traffic during epoch ``t``);
+  * ``crash`` — ``(T, R)`` bool crash *events* (default none).  An
+    outage silences a replica; a crash additionally destroys its
+    volatile state, so on rejoin it restores from its durability layer
+    (snapshot + WAL) and peer bootstrap — see
+    ``repro.core.replicated_store.DurabilityConfig``.  Events compose
+    by union under ``&`` and never repeat when a schedule is extended.
 
 Everything downstream consumes the *closed* effective connectivity
 :meth:`closure`: ``conn[t, i, j]`` is True iff a version held at a live
@@ -53,6 +59,7 @@ class FaultSchedule:
 
     up: np.ndarray    # (T, R) bool
     link: np.ndarray  # (T, R, R) bool, symmetric, True diagonal
+    crash: np.ndarray | None = None  # (T, R) bool crash *events*
 
     def __post_init__(self):
         up = np.asarray(self.up, bool)
@@ -71,8 +78,23 @@ class FaultSchedule:
                 "schedule leaves no replica up in some epoch; clients "
                 "would have nowhere to route"
             )
+        crash = (
+            np.zeros_like(up)
+            if self.crash is None
+            else np.asarray(self.crash, bool)
+        )
+        if crash.shape != up.shape:
+            raise ValueError(
+                f"crash must match up's shape {up.shape}; got {crash.shape}"
+            )
+        if (crash & up).any():
+            raise ValueError(
+                "a crash event implies the replica is down that epoch; "
+                "crash & up must be empty"
+            )
         object.__setattr__(self, "up", up)
         object.__setattr__(self, "link", link)
+        object.__setattr__(self, "crash", crash)
 
     # -- shape ----------------------------------------------------------------
 
@@ -85,14 +107,25 @@ class FaultSchedule:
         return self.up.shape[1]
 
     def slice(self, n_epochs: int) -> "FaultSchedule":
-        """First ``n_epochs`` epochs (extending with the last epoch)."""
+        """First ``n_epochs`` epochs (extending with the last epoch).
+
+        ``up``/``link`` are *states* and repeat the final epoch when the
+        schedule is extended; ``crash`` is an *event* timeline, so the
+        extension never replays a crash — the pad is all-False.
+        """
         t = self.n_epochs
         if n_epochs <= t:
-            return FaultSchedule(self.up[:n_epochs], self.link[:n_epochs])
+            return FaultSchedule(
+                self.up[:n_epochs],
+                self.link[:n_epochs],
+                crash=self.crash[:n_epochs],
+            )
         pad = n_epochs - t
         return FaultSchedule(
             np.concatenate([self.up, np.repeat(self.up[-1:], pad, 0)]),
             np.concatenate([self.link, np.repeat(self.link[-1:], pad, 0)]),
+            crash=np.concatenate(
+                [self.crash, np.zeros((pad, self.n_replicas), bool)]),
         )
 
     # -- derived masks --------------------------------------------------------
@@ -138,6 +171,41 @@ class FaultSchedule:
         gained[1:] = (conn[1:] & ~conn[:-1]).any(axis=(1, 2))
         return gained
 
+    # -- crash events ---------------------------------------------------------
+
+    def crashes(self) -> np.ndarray:
+        """(T, R) bool — crash *events* (state loss, not mere outage)."""
+        return self.crash
+
+    @property
+    def has_crashes(self) -> bool:
+        return bool(self.crash.any())
+
+    def rejoins(self) -> np.ndarray:
+        """(T, R) bool — first up epoch after each crash (the rebuild).
+
+        A crashed replica forgets its state; the epoch where it next
+        comes up is where peer bootstrap must run before it can serve.
+        A crash with no later up epoch never rejoins (stays amnesiac).
+        """
+        out = np.zeros_like(self.up)
+        pending = np.zeros(self.n_replicas, bool)
+        for t in range(self.n_epochs):
+            pending |= self.crash[t]
+            rejoin = pending & self.up[t]
+            out[t] = rejoin
+            pending &= ~rejoin
+        return out
+
+    def strip_crashes(self) -> "FaultSchedule":
+        """The same outage/partition timeline with no state loss.
+
+        The never-crashed twin the chaos harness converges against: the
+        replica is still *down* for the same epochs, but its disks
+        survive.
+        """
+        return FaultSchedule(self.up, self.link)
+
     # -- composition ----------------------------------------------------------
 
     def __and__(self, other: "FaultSchedule") -> "FaultSchedule":
@@ -146,7 +214,12 @@ class FaultSchedule:
                 f"schedules disagree on shape: {self.up.shape} vs "
                 f"{other.up.shape}"
             )
-        return FaultSchedule(self.up & other.up, self.link & other.link)
+        return FaultSchedule(
+            self.up & other.up,
+            self.link & other.link,
+            # Events union: overlaying schedules keeps every crash.
+            crash=self.crash | other.crash,
+        )
 
 
 # -- constructors -------------------------------------------------------------
@@ -168,6 +241,31 @@ def replica_outage(
     up = s.up.copy()
     up[start:stop, replica] = False
     return FaultSchedule(up, s.link)
+
+
+def replica_crash(
+    n_epochs: int,
+    n_replicas: int,
+    replica: int,
+    epoch: int,
+    down_for: int = 1,
+) -> FaultSchedule:
+    """Replica ``replica`` crashes at ``epoch`` and loses its state.
+
+    The replica is down for ``[epoch, epoch + down_for)`` and rejoins
+    amnesiac at ``epoch + down_for`` (if the run lasts that long) —
+    unlike :func:`replica_outage`, whose replica merely goes silent and
+    keeps its disks.
+    """
+    if not 0 <= epoch < n_epochs:
+        raise ValueError(f"crash epoch {epoch} outside [0, {n_epochs})")
+    if down_for < 1:
+        raise ValueError("a crash takes the replica down for >= 1 epoch")
+    s = replica_outage(
+        n_epochs, n_replicas, replica, epoch, min(epoch + down_for, n_epochs))
+    crash = np.zeros((n_epochs, n_replicas), bool)
+    crash[epoch, replica] = True
+    return FaultSchedule(s.up, s.link, crash=crash)
 
 
 def partition_link(

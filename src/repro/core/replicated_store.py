@@ -28,6 +28,7 @@ instantiations listed in the ``xstcc`` module docstring.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -113,6 +114,58 @@ def _stream_scheduler(sync_every: int, delta: int, n_clients: int,
     return sched
 
 
+@dataclasses.dataclass(frozen=True)
+class DurabilityConfig:
+    """Static durability knobs (hashable — keys jitted runner caches).
+
+    ``snapshot_every`` merge epochs between snapshot markers (0 = no
+    snapshots); ``wal`` additionally journals every applied delta
+    between snapshots, so a crashed replica restores its exact
+    pre-crash state (snapshot load + WAL replay) instead of the
+    state as-of the last marker.  ``bootstrap_ranges`` is the digest
+    granularity of the peer-bootstrap pass; ``impl`` selects the
+    digest-compare kernel (None = auto).  Disabled ⇒ a crash is fully
+    amnesiac and the replica rebuilds from peers alone.
+    """
+
+    snapshot_every: int = 4
+    wal: bool = False
+    bootstrap_ranges: int = 8
+    impl: str | None = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.snapshot_every > 0 or self.wal
+
+
+class DuraState(NamedTuple):
+    """Durable-media shadow of the applied state, as pure arrays.
+
+    ``snap_version``/``snap_vc`` mirror ``replica_version`` /
+    ``replica_vc`` as of each replica's last snapshot marker;
+    ``wal_len`` counts deltas journaled since that marker (the replay
+    cost of a crash); ``wal_total``/``snap_rows`` accumulate lifetime
+    I/O events for the eq. 8 durability bill."""
+
+    snap_version: Array  # (P, R) int32 — applied versions at last marker
+    snap_vc: Array       # (P, C) int32 — applied clock at last marker
+    wal_len: Array       # (P,) int32 — deltas journaled since marker
+    wal_total: Array     # () int32 — lifetime WAL append events
+    snap_rows: Array     # () int32 — lifetime snapshot cells written
+
+
+def make_dura(
+    n_replicas: int, n_clients: int, n_resources: int
+) -> DuraState:
+    return DuraState(
+        snap_version=jnp.zeros((n_replicas, n_resources), jnp.int32),
+        snap_vc=jnp.zeros((n_replicas, n_clients), jnp.int32),
+        wal_len=jnp.zeros((n_replicas,), jnp.int32),
+        wal_total=jnp.zeros((), jnp.int32),
+        snap_rows=jnp.zeros((), jnp.int32),
+    )
+
+
 class HintState(NamedTuple):
     """Bounded per-replica hinted-handoff queues, as pure arrays.
 
@@ -149,12 +202,15 @@ class StoreState(NamedTuple):
     emulation across batch boundaries.  ``hints`` holds the
     hinted-handoff queues when the store was built with a nonzero
     ``hint_cap`` — ``None`` otherwise, which keeps the pytree (and
-    every jitted trace over it) identical to a handoff-free store."""
+    every jitted trace over it) identical to a handoff-free store.
+    ``dura`` follows the same pattern for the durability layer
+    (``None`` unless the store was built with a ``DurabilityConfig``)."""
 
     cluster: xstcc.ClusterState
     duot: duot_lib.Duot
     pend_apply: Array     # (Q,) int32
     hints: HintState | None = None
+    dura: DuraState | None = None
 
 
 class ReplicatedStore:
@@ -179,6 +235,7 @@ class ReplicatedStore:
         duot_cap: int = 1024,
         ingest: str = "auto",
         hint_cap: int = 0,
+        durability: DurabilityConfig | None = None,
     ):
         self.n_replicas = n_replicas
         self.n_clients = n_clients
@@ -187,6 +244,10 @@ class ReplicatedStore:
         self.pending_cap = pending_cap
         self.duot_cap = duot_cap
         self.hint_cap = hint_cap
+        self.durability = (
+            durability if durability is not None and durability.enabled
+            else None
+        )
         self.sync_every, self.delta = merge_cadence(level, merge_every, delta)
         self.enforce_sessions = level.is_session_guarded
         # Op-ingestion implementation (repro.kernels.ops.op_ingest):
@@ -217,6 +278,10 @@ class ReplicatedStore:
             hints=(
                 make_hints(self.n_replicas, self.hint_cap)
                 if self.hint_cap > 0 else None
+            ),
+            dura=(
+                make_dura(self.n_replicas, self.n_clients, self.n_resources)
+                if self.durability is not None else None
             ),
         )
 
@@ -387,7 +452,8 @@ class ReplicatedStore:
             )
         return (
             StoreState(cluster=res.state, duot=duot,
-                       pend_apply=pend_apply, hints=state.hints),
+                       pend_apply=pend_apply, hints=state.hints,
+                       dura=state.dura),
             res,
         )
 
@@ -690,7 +756,12 @@ class ReplicatedStore:
         full anti-entropy pass.  Hints that delivered (or invalidated)
         leave the queue; hints whose holders are still unreachable stay
         queued.  Clock-neutral like :meth:`anti_entropy`.  Returns
-        ``(state, deliveries)``.
+        ``(state, deliveries)`` with ``deliveries`` a ``(P,)`` vector of
+        applied-copy growth *by receiving replica* — destination ``d``'s
+        sub-pass may relay hinted writes through ``d`` to other replicas
+        it can reach, so when several destinations heal in the same
+        epoch a scalar count would misattribute those deliveries to
+        whichever queue drained first.
         """
         hints = state.hints
         h = self.hint_cap
@@ -724,8 +795,8 @@ class ReplicatedStore:
                 up=u, link=(eye | touch_d) & ln,
             )
             ev = jnp.sum(
-                merged.pend_applied.astype(jnp.int32) - before
-            )
+                merged.pend_applied.astype(jnp.int32) - before, axis=0
+            )                                               # (P,)
             cluster = merged._replace(
                 pend_live=saved_live & ~jnp.all(merged.pend_applied, axis=1),
                 clock=saved_clock,
@@ -752,9 +823,222 @@ class ReplicatedStore:
             return (cluster, hints, delivered + ev), None
 
         (cluster, hints, delivered), _ = jax.lax.scan(
-            step, (state.cluster, hints, jnp.int32(0)), rows
+            step, (state.cluster, hints, jnp.zeros((p,), jnp.int32)), rows
         )
         return state._replace(cluster=cluster, hints=hints), delivered
+
+    # -- durability / crash recovery ----------------------------------------------
+
+    def snapshot(self, state: StoreState) -> tuple[StoreState, Array]:
+        """Persist a snapshot marker at every replica; truncate WALs.
+
+        The marker copies each replica's applied state
+        (``replica_version``/``replica_vc``) onto durable media;
+        snapshots are incremental, so the I/O charged is the number of
+        ``(replica, resource)`` cells whose version moved since the
+        previous marker.  Returns ``(state, cells_written)``.
+        """
+        cl, du = state.cluster, state.dura
+        cells = jnp.sum(
+            (du.snap_version != cl.replica_version).astype(jnp.int32)
+        )
+        dura = DuraState(
+            snap_version=cl.replica_version,
+            snap_vc=cl.replica_vc,
+            wal_len=jnp.zeros_like(du.wal_len),
+            wal_total=du.wal_total,
+            snap_rows=du.snap_rows + cells,
+        )
+        return state._replace(dura=dura), cells
+
+    def wal_append(self, state: StoreState, records: Array) -> StoreState:
+        """Journal ``records`` (P,) applied deltas since the last marker."""
+        du = state.dura
+        rec = jnp.asarray(records, jnp.int32)
+        dura = du._replace(
+            wal_len=du.wal_len + rec,
+            wal_total=du.wal_total + jnp.sum(rec),
+        )
+        return state._replace(dura=dura)
+
+    def crash(
+        self, state: StoreState, crashed: Array
+    ) -> tuple[StoreState, dict[str, Array]]:
+        """Destroy the volatile state of ``crashed`` (P,) bool replicas.
+
+        What survives depends on the store's :class:`DurabilityConfig`:
+
+          * **WAL on** — snapshot load + full replay reconstruct the
+            exact pre-crash applied state; only the replay I/O is paid.
+          * **snapshots only** — applied state rolls back to the last
+            marker: version/clock rows restore to the snapshot, and
+            pending-ring applied bits at the crashed replica survive
+            only for writes the marker already covered.
+          * **disabled** — full amnesia: the replica's column of the
+            cluster state zeroes and every applied bit at it clears.
+
+        The commit log itself (the pending ring, ``global_version``,
+        session floors) is coordinator-durable — a crash never un-acks a
+        committed write; it only forgets *applied* state, which peer
+        :meth:`bootstrap` and the merge fixpoint re-deliver.  Returns
+        ``(state, info)`` with ``info`` scalars: ``wal_replayed``
+        (journal records re-applied), ``snap_read`` (snapshot cells
+        loaded), ``rows_lost`` (version cells rolled back — 0 with WAL).
+        """
+        cl = state.cluster
+        du = state.dura
+        cfg = self.durability
+        crashed = jnp.asarray(crashed, bool)
+        zero = jnp.zeros((), jnp.int32)
+        if cfg is not None and cfg.wal:
+            # Redo log: restore is exact; bill marker load + replay.
+            snap_read = jnp.sum(
+                jnp.where(crashed[:, None], (du.snap_version > 0), False)
+                .astype(jnp.int32)
+            )
+            replayed = jnp.sum(jnp.where(crashed, du.wal_len, 0))
+            return state, {
+                "wal_replayed": replayed,
+                "snap_read": snap_read,
+                "rows_lost": zero,
+            }
+        if du is not None and cfg is not None:
+            base_v, base_c = du.snap_version, du.snap_vc
+            snap_read = jnp.sum(
+                jnp.where(crashed[:, None], (base_v > 0), False)
+                .astype(jnp.int32)
+            )
+        else:
+            base_v = jnp.zeros_like(cl.replica_version)
+            base_c = jnp.zeros_like(cl.replica_vc)
+            snap_read = zero
+        new_rv = jnp.where(crashed[:, None], base_v, cl.replica_version)
+        new_vc = jnp.where(crashed[:, None], base_c, cl.replica_vc)
+        rows_lost = jnp.sum(
+            (cl.replica_version > new_rv).astype(jnp.int32)
+        )
+        r = self.n_resources
+        res = jnp.clip(cl.pend_resource, 0, r - 1)
+        covered = cl.pend_version[:, None] <= base_v[:, res].T  # (Q, P)
+        touch = crashed[None, :] & cl.pend_live[:, None]
+        applied = jnp.where(
+            touch, cl.pend_applied & covered, cl.pend_applied
+        )
+        cluster = cl._replace(
+            replica_version=new_rv, replica_vc=new_vc, pend_applied=applied
+        )
+        new = state._replace(cluster=cluster)
+        if du is not None:
+            new = new._replace(
+                dura=du._replace(
+                    wal_len=jnp.where(crashed, 0, du.wal_len)
+                )
+            )
+        return new, {
+            "wal_replayed": zero,
+            "snap_read": snap_read,
+            "rows_lost": rows_lost,
+        }
+
+    def bootstrap(
+        self,
+        state: StoreState,
+        *,
+        targets: Array,      # (P,) bool — replicas rebuilding this epoch
+        up: Array,           # (P,) bool
+        link: Array,         # (P, P) bool — closed connectivity
+        n_ranges: int,
+        impl: str | None = None,
+    ) -> tuple[StoreState, dict[str, Array]]:
+        """Rebuild each target replica from its nearest live holder.
+
+        For every target ``d`` the first live, linked, non-rebuilding
+        peer in ring order after ``d`` is chosen as the source; the two
+        exchange per-range version digests
+        (``repro.gossip.digest.range_digests`` diffed through
+        ``repro.kernels.ops.digest_compare`` — the same path a gossip
+        round uses), and every differing range is pulled:
+
+          * retired history — ``replica_version`` cells in stale ranges
+            max-join the source's row, and the target's applied clock
+            max-joins the source's (retired writes live at every
+            replica, so any live source is complete);
+          * in-flight writes — live pending-ring entries in stale
+            ranges applied at the source are marked applied at the
+            target, then the normal retire check runs.
+
+        Clock-neutral and idempotent (a second pass finds no differing
+        ranges).  Returns ``(state, telemetry)`` with ``(P,)`` arrays:
+        ``valid`` (a source was reachable), ``source``, ``cells``
+        (version cells raised), ``pend`` (pending copies delivered),
+        ``ranges`` (stale ranges pulled).
+        """
+        from repro.gossip import digest as digest_lib
+        from repro.kernels import ops as kernel_ops
+
+        cl = state.cluster
+        p = self.n_replicas
+        r = self.n_resources
+        t_all = jnp.asarray(targets, bool)
+        u = jnp.asarray(up, bool)
+        ln = jnp.asarray(link, bool)
+        rid = digest_lib.range_of_resource(r, n_ranges)     # (R,)
+        res = jnp.clip(cl.pend_resource, 0, r - 1)
+        rows = jnp.arange(p, dtype=jnp.int32)
+        saved_clock = cl.clock
+
+        def step(cluster, d):
+            offs = (d + 1 + jnp.arange(p - 1, dtype=jnp.int32)) % p
+            cand = u[offs] & ln[d, offs] & ~t_all[offs]
+            src = offs[jnp.argmax(cand)]
+            valid = t_all[d] & u[d] & cand.any()
+            dig = digest_lib.range_digests(cluster.replica_version, n_ranges)
+            differ, _, _ = kernel_ops.digest_compare(
+                dig[None, d], dig[None, src], impl=impl
+            )                                               # (1, K)
+            stale = differ[0] & valid                       # (K,)
+            in_stale = stale[rid]                           # (R,)
+            pull = jnp.maximum(
+                cluster.replica_version[d],
+                jnp.where(in_stale, cluster.replica_version[src], 0),
+            )
+            cells = jnp.sum(
+                (pull > cluster.replica_version[d]).astype(jnp.int32)
+            )
+            new_rv = cluster.replica_version.at[d].set(pull)
+            new_vc = jnp.where(
+                valid,
+                jnp.maximum(cluster.replica_vc[d], cluster.replica_vc[src]),
+                cluster.replica_vc[d],
+            )
+            relay = (
+                cluster.pend_live
+                & stale[rid[res]]
+                & cluster.pend_applied[:, src]
+            )
+            pend = jnp.sum(
+                (relay & ~cluster.pend_applied[:, d]).astype(jnp.int32)
+            )
+            applied = cluster.pend_applied.at[:, d].max(relay)
+            live = cluster.pend_live & ~jnp.all(applied, axis=1)
+            cluster = cluster._replace(
+                replica_version=new_rv,
+                replica_vc=cluster.replica_vc.at[d].set(new_vc),
+                pend_applied=applied,
+                pend_live=live,
+            )
+            out = {
+                "valid": valid,
+                "source": jnp.where(valid, src, -1),
+                "cells": cells,
+                "pend": pend,
+                "ranges": jnp.sum(stale.astype(jnp.int32)),
+            }
+            return cluster, out
+
+        cluster, telemetry = jax.lax.scan(step, cl, rows)
+        cluster = cluster._replace(clock=saved_clock)
+        return state._replace(cluster=cluster), telemetry
 
     def install(
         self,

@@ -5,12 +5,22 @@ from repro.runtime.fault_tolerance import (
     StragglerMonitor,
     schedule_from_snapshots,
 )
+from repro.runtime.recovery import (
+    CheckpointRecovery,
+    PartialRestoreError,
+    RecoveryOutcome,
+    StoreRecovery,
+)
 from repro.runtime.elastic import rescale_stacked, rescale_train_state
 
 __all__ = [
+    "CheckpointRecovery",
     "FailurePolicy",
     "NodeHealth",
+    "PartialRestoreError",
+    "RecoveryOutcome",
     "RestartManager",
+    "StoreRecovery",
     "StragglerMonitor",
     "schedule_from_snapshots",
     "rescale_stacked",

@@ -171,14 +171,23 @@ class StragglerMonitor:
 
 
 class RestartManager:
-    """Coordinates restart-from-checkpoint after a failure."""
+    """Coordinates restart-from-checkpoint after a failure.
+
+    The restore itself is delegated to
+    :class:`repro.runtime.recovery.CheckpointRecovery` — the ML
+    checkpoint path is one client of the unified recovery API (the
+    device-fleet crash path is the other); this class only owns the
+    restart *budget* policy around it."""
 
     def __init__(self, store, policy: FailurePolicy):
         self.store = store
         self.policy = policy
         self.restarts = 0
+        self.last_outcome = None
 
-    def recover(self, template, session) -> tuple[object, int]:
+    def recover(
+        self, template, session, allow_partial: bool = False
+    ) -> tuple[object, int]:
         """Restore params and the step to resume from.
 
         Session guarantees make this safe against replica lag: a worker
@@ -191,22 +200,19 @@ class RestartManager:
         can retry against a healed store.  A restored version that no
         replica has metadata for is an integrity error and raises
         (silently resuming from step 0 would replay the whole run over
-        a live checkpoint)."""
+        a live checkpoint).  A restore that lands **behind the fleet's
+        newest known checkpoint** is *partial*: it raises
+        :class:`repro.runtime.recovery.PartialRestoreError` (budget
+        untouched) unless ``allow_partial=True``, in which case the
+        outcome — with its ``partial``/``behind`` fields — is kept in
+        ``last_outcome``."""
+        from repro.runtime.recovery import CheckpointRecovery
+
         if self.restarts >= self.policy.max_restarts:
             raise RuntimeError("restart budget exhausted")
-        self.store.propagate()
-        params, version, rerouted = self.store.restore(template, session)
-        meta_step = None
-        for r in range(self.store.n_replicas):
-            meta = self.store._read_meta(r)
-            e = meta["entries"].get(str(version))
-            if e:
-                meta_step = e["step"]
-                break
-        if meta_step is None:
-            raise RuntimeError(
-                f"restored checkpoint version {version} has no metadata "
-                "entry on any replica; refusing to resume from step 0"
-            )
+        params, outcome = CheckpointRecovery(self.store).recover(
+            template, session, allow_partial=allow_partial
+        )
         self.restarts += 1
-        return params, int(meta_step)
+        self.last_outcome = outcome
+        return params, outcome.step

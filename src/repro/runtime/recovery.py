@@ -1,0 +1,185 @@
+"""One recovery API over both replicated artifact stores.
+
+The crash-recovery engine rebuilds state in two places that used to
+have disjoint code paths:
+
+* **device-fleet state** — a crashed protocol replica restores from the
+  durability layer and peer-bootstraps the rest
+  (:meth:`repro.core.replicated_store.ReplicatedStore.crash` /
+  :meth:`~repro.core.replicated_store.ReplicatedStore.bootstrap`);
+* **ML checkpoints** — a restarting trainer restores params from the
+  replicated :class:`repro.checkpoint.store.CheckpointStore` under
+  session guarantees.
+
+This module is the shared front door.  Both paths produce a
+:class:`RecoveryOutcome` that says *how complete* the restore was —
+in particular, a checkpoint restore that is session-admissible but
+**stale relative to the fleet's newest checkpoint** is a *partial*
+restore: the old ``RestartManager.recover`` silently succeeded on it,
+which is exactly how a run resumes from an hours-old snapshot without
+anyone noticing.  Callers now opt in with ``allow_partial=True`` or get
+a :class:`PartialRestoreError`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+__all__ = [
+    "CheckpointRecovery",
+    "PartialRestoreError",
+    "RecoveryOutcome",
+    "StoreRecovery",
+]
+
+
+class PartialRestoreError(RuntimeError):
+    """A restore succeeded but recovered less than the fleet knows.
+
+    Carries the :class:`RecoveryOutcome` (``.outcome``) so the caller
+    can inspect what *was* recovered before deciding to retry, wait for
+    propagation, or accept the partial state explicitly."""
+
+    def __init__(self, message: str, outcome: "RecoveryOutcome"):
+        super().__init__(message)
+        self.outcome = outcome
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryOutcome:
+    """What a recovery actually achieved.
+
+    ``version``/``step`` locate the restored state; ``rerouted`` is the
+    session-guarantee reroute flag; ``partial`` is True when a fresher
+    version than the restored one exists somewhere in the fleet, and
+    ``behind`` is how many versions behind the restore landed (0 when
+    complete)."""
+
+    version: int
+    step: int
+    rerouted: bool
+    partial: bool
+    behind: int
+
+
+class CheckpointRecovery:
+    """Checkpoint restore as a client of the unified recovery path.
+
+    Wraps anything with the :class:`~repro.checkpoint.store.CheckpointStore`
+    surface (``propagate`` / ``restore`` / ``_read_meta`` /
+    ``n_replicas``).  On top of the store's session-guarded restore it
+
+    * resolves the restored version to its training **step** from the
+      replica metadata — a version no replica has metadata for is an
+      integrity error (resuming from step 0 would replay the whole run
+      over a live checkpoint);
+    * compares the restored version against the **newest version any
+      replica knows of** (committed metadata *and* in-flight pending
+      propagations) and flags the restore partial when it is behind.
+    """
+
+    def __init__(self, store):
+        self.store = store
+
+    def _fleet_latest(self) -> int:
+        """Newest version any replica has committed *or* pending."""
+        latest = 0
+        for r in range(self.store.n_replicas):
+            meta = self.store._read_meta(r)
+            latest = max(latest, int(meta.get("version", 0)))
+            for k in meta.get("entries", {}):
+                latest = max(latest, int(k))
+            for p in meta.get("pending", ()):
+                latest = max(latest, int(p.get("version", 0)))
+        return latest
+
+    def recover(
+        self, template, session, *, allow_partial: bool = False
+    ) -> tuple[Any, RecoveryOutcome]:
+        """Restore params; return ``(params, outcome)``.
+
+        Raises :class:`PartialRestoreError` when the restore lands
+        behind the fleet's newest known version and ``allow_partial``
+        is False; the error carries the outcome so the caller can still
+        use it deliberately."""
+        self.store.propagate()
+        params, version, rerouted = self.store.restore(template, session)
+        step = None
+        for r in range(self.store.n_replicas):
+            meta = self.store._read_meta(r)
+            e = meta.get("entries", {}).get(str(version))
+            if e:
+                step = int(e["step"])
+                break
+        if step is None:
+            raise RuntimeError(
+                f"restored checkpoint version {version} has no metadata "
+                "entry on any replica; refusing to resume from step 0"
+            )
+        latest = self._fleet_latest()
+        outcome = RecoveryOutcome(
+            version=int(version),
+            step=step,
+            rerouted=bool(rerouted),
+            partial=version < latest,
+            behind=max(0, latest - int(version)),
+        )
+        if outcome.partial and not allow_partial:
+            raise PartialRestoreError(
+                f"restored version {version} is {outcome.behind} behind "
+                f"the fleet's newest checkpoint {latest}; pass "
+                "allow_partial=True to resume from it anyway",
+                outcome,
+            )
+        return params, outcome
+
+
+class StoreRecovery:
+    """Device-fleet crash recovery as a client of the same API.
+
+    Wraps a :class:`repro.core.replicated_store.ReplicatedStore` (with a
+    durability config) and runs the full rebuild for a set of crashed
+    replicas: durable restore (snapshot + WAL replay), then peer
+    bootstrap over the digest ranges.  Returns the rebuilt state and a
+    :class:`RecoveryOutcome` whose ``version`` is the maximum version
+    the rebuilt rows reached, with ``partial``/``behind`` measured
+    against the fleet's version frontier — a bootstrap with no live
+    peer in reach leaves the replica behind, and that shows up here
+    instead of silently passing."""
+
+    def __init__(self, store):
+        self.store = store
+
+    def recover(
+        self, state, crashed, *, up, link, n_ranges: int = 8,
+        allow_partial: bool = False,
+    ) -> tuple[Any, RecoveryOutcome]:
+        import jax.numpy as jnp
+        import numpy as np
+
+        crashed = jnp.asarray(crashed, bool)
+        state, _ = self.store.crash(state, crashed)
+        state, tel = self.store.bootstrap(
+            state, targets=crashed, up=jnp.asarray(up, bool),
+            link=jnp.asarray(link, bool), n_ranges=n_ranges,
+        )
+        rv = np.asarray(state.cluster.replica_version)
+        mask = np.asarray(crashed)
+        fleet = int(rv.max()) if rv.size else 0
+        reached = int(rv[mask].max()) if mask.any() else fleet
+        outcome = RecoveryOutcome(
+            version=reached,
+            step=int(np.asarray(state.cluster.clock)),
+            rerouted=bool(np.asarray(tel["valid"]).any()),
+            partial=reached < fleet,
+            behind=max(0, fleet - reached),
+        )
+        if outcome.partial and not allow_partial:
+            raise PartialRestoreError(
+                f"rebuilt replicas reached version {reached} but the "
+                f"fleet frontier is {fleet}; no live peer close enough "
+                "— pass allow_partial=True to accept the lag",
+                outcome,
+            )
+        return state, outcome

@@ -1,3 +1,15 @@
-from repro.serve.engine import ReplicaSnapshot, ServeSession, ServingEngine
+from repro.serve.engine import (
+    ReplicaSnapshot,
+    RetryPolicy,
+    ServeSession,
+    ServeTimeout,
+    ServingEngine,
+)
 
-__all__ = ["ReplicaSnapshot", "ServeSession", "ServingEngine"]
+__all__ = [
+    "ReplicaSnapshot",
+    "RetryPolicy",
+    "ServeSession",
+    "ServeTimeout",
+    "ServingEngine",
+]

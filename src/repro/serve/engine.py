@@ -55,6 +55,55 @@ class ReplicaSnapshot:
     version: int
 
 
+class ServeTimeout(RuntimeError):
+    """A request exhausted its retry/backoff budget without a serve."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Client-side retry/timeout/backoff contract for routed serves.
+
+    A request that cannot be admitted (no live replica, or no replica
+    fresh enough for the session's floor — e.g. its home replica is
+    mid-rebuild after a crash) waits out a **jittered exponential
+    backoff** and retries, up to ``max_retries`` attempts or until the
+    cumulative simulated wait would exceed ``timeout_ms``.  When the
+    budget runs out, ``degrade=True`` admits the request once in
+    **degraded mode** — the freshest live replica with floor
+    enforcement off, i.e. a temporary fallback to an unguarded level —
+    and ``degrade=False`` raises :class:`ServeTimeout`.
+
+    Waits are *simulated* (accumulated in the engine's
+    ``retry_wait_ms`` telemetry, never slept), so retry behavior is
+    deterministic per ``seed`` and free to test.
+    """
+
+    max_retries: int = 3
+    base_backoff_ms: float = 5.0
+    backoff_mult: float = 2.0
+    jitter: float = 0.5
+    timeout_ms: float = 1000.0
+    degrade: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.base_backoff_ms <= 0 or self.backoff_mult < 1.0:
+            raise ValueError(
+                "base_backoff_ms must be > 0 and backoff_mult >= 1"
+            )
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError("jitter must be in [0, 1)")
+
+    def backoff_ms(self, attempt: int, rng: np.random.Generator) -> float:
+        """The jittered wait before retry ``attempt`` (0-indexed)."""
+        base = self.base_backoff_ms * self.backoff_mult ** attempt
+        if self.jitter:
+            base *= 1.0 + self.jitter * float(rng.uniform(-1.0, 1.0))
+        return base
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -73,9 +122,17 @@ class ServingEngine:
         self.total_serves = 0
         self.reroutes = 0
         self.failovers = 0
+        # Retry/backoff telemetry (serve_with_retry).
+        self.retries = 0
+        self.timeouts = 0
+        self.downgrades = 0
+        self.retry_wait_ms = 0.0
         # Replica liveness (NodeHealth-driven): down replicas are
         # inadmissible for every session and requests fail over.
         self.replica_up = np.ones(max_replicas, bool)
+        # Crash-recovery: a replica that is restoring/bootstrapping is
+        # reachable but serves nothing until finish_rebuilding().
+        self.replica_rebuilding = np.zeros(max_replicas, bool)
         # Region-aware routing (set_topology): replica→region map, RTT
         # matrix, per-session region assignment, per-region telemetry.
         self._topology = None
@@ -172,10 +229,24 @@ class ServingEngine:
     def heal_replica(self, replica: int) -> None:
         self.replica_up[replica] = True
 
+    def mark_rebuilding(self, replica: int) -> None:
+        """Take a replica out of serving while it restores/bootstraps.
+
+        The crash-recovery client: a replica that crashed is *up*
+        (reachable for gossip/bootstrap) but must not serve until its
+        state is rebuilt — requests targeting it fail over exactly like
+        a down replica's would.
+        """
+        self.replica_rebuilding[replica] = True
+
+    def finish_rebuilding(self, replica: int) -> None:
+        """Re-admit a rebuilt replica into serving."""
+        self.replica_rebuilding[replica] = False
+
     def _up(self) -> np.ndarray:
-        """Liveness mask over the published replicas."""
+        """Serving-admissible mask: live and not mid-rebuild."""
         n = len(self.replicas)
-        up = self.replica_up[:n]
+        up = self.replica_up[:n] & ~self.replica_rebuilding[:n]
         if not up.any():
             raise RuntimeError("no live replica to serve from")
         return up
@@ -414,6 +485,63 @@ class ServingEngine:
                 idx = best
         return idx
 
+    def serve_with_retry(
+        self,
+        session: ServeSession,
+        preferred: int | None = None,
+        policy: RetryPolicy | None = None,
+    ) -> int:
+        """Route-and-observe one serve under a retry/backoff policy.
+
+        Attempts :meth:`route` + the observe read; an inadmissible
+        request (no live replica, or no replica fresh enough for the
+        session's floor — e.g. the home replica is mid-rebuild after a
+        crash) backs off per ``policy`` and retries.  When the retry
+        budget or ``timeout_ms`` runs out: ``policy.degrade`` admits
+        the request once on the freshest live replica with floor
+        enforcement off (counted in ``downgrades``, and the serve's
+        staleness lands in the normal telemetry); otherwise the request
+        fails with :class:`ServeTimeout` (counted in ``timeouts``).
+        Waits are simulated — accumulated in ``retry_wait_ms`` — so
+        the path is deterministic per ``policy.seed`` and session.
+        Returns the replica that served.
+        """
+        if policy is None:
+            policy = RetryPolicy()
+        rng = np.random.default_rng(
+            policy.seed + self._sid(session)
+        )
+        waited = 0.0
+        last_err: RuntimeError | None = None
+        for attempt in range(policy.max_retries + 1):
+            try:
+                r = self.route(session, preferred)
+                self._observe(session, r)
+                return r
+            except RuntimeError as e:
+                last_err = e
+            if attempt >= policy.max_retries:
+                break
+            wait = policy.backoff_ms(attempt, rng)
+            if waited + wait > policy.timeout_ms:
+                break
+            waited += wait
+            self.retries += 1
+            self.retry_wait_ms += wait
+        if policy.degrade:
+            n = len(self.replicas)
+            live = self.replica_up[:n] & ~self.replica_rebuilding[:n]
+            if n and live.any():
+                r = _freshest_replica(self.replicas, live)
+                self.downgrades += 1
+                self._observe(session, r, enforce=False)
+                return r
+        self.timeouts += 1
+        raise ServeTimeout(
+            f"session {session.session_id}: no admissible replica after "
+            f"{policy.max_retries} retries ({waited:.1f} ms backoff)"
+        ) from last_err
+
     def route_batch(
         self, sessions: list[ServeSession], preferred: Array | None = None,
         use_kernel: bool = True,
@@ -557,19 +685,26 @@ class ServingEngine:
             s.read_floor = max(s.read_floor, int(v))
         return res.version
 
-    def _observe(self, session: ServeSession, replica: int):
+    def _observe(
+        self, session: ServeSession, replica: int,
+        enforce: bool | None = None,
+    ):
         # Telemetry comes from the store's read result — the same
         # source `_observe_batch` uses, so the scalar and batched
         # routing paths can never disagree about one serve (the old
         # python-side `version < latest_version` check diverged from
         # the store under enforcement and snapshot overwrites).
+        # ``enforce`` overrides the session level's guard — the
+        # degraded-admission path serves guarded sessions unguarded.
+        if enforce is None:
+            enforce = self.level_for(session.session_id).is_session_guarded
         self._st, res = self._store.read_batch(
             self._st,
             client=jnp.asarray([self._sid(session)], jnp.int32),
             replica=jnp.asarray([replica], jnp.int32),
             resource=jnp.zeros((1,), jnp.int32),
             record=False,
-            enforce=self.level_for(session.session_id).is_session_guarded,
+            enforce=enforce,
         )
         self.total_serves += 1
         self.stale_serves += int(res.stale[0])

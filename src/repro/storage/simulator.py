@@ -36,7 +36,9 @@ from repro.core import cost_model, xstcc
 from repro.core import duot as duot_lib
 from repro.core import audit as audit_lib
 from repro.core.consistency import ConsistencyLevel
-from repro.core.replicated_store import ReplicatedStore, merge_cadence
+from repro.core.replicated_store import (
+    DurabilityConfig, ReplicatedStore, merge_cadence,
+)
 from repro.gossip import DIGEST_BYTES
 from repro.gossip.scheduler import GossipConfig, gossip_pairs
 from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
@@ -513,6 +515,7 @@ def run_protocol_geo(
     audit: bool = True,
     ingest: str = "auto",
     gossip: GossipConfig | None = None,
+    recovery: DurabilityConfig | None = None,
     cfg: ClusterConfig = PAPER_CLUSTER,
     pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
 ) -> dict[str, Any]:
@@ -551,6 +554,24 @@ def run_protocol_geo(
     (``cost["gossip_network_geo"]``, added into ``cost["total_geo"]``);
     the result gains a ``"gossip"`` block with the (G, G) repair
     matrix.  Hinted handoff does not apply (this driver is all-up).
+
+    ``recovery`` (a
+    :class:`repro.core.replicated_store.DurabilityConfig`) bills the
+    recurring durability overhead — periodic snapshot markers and,
+    with ``wal=True``, the write-ahead delta journal — through the
+    same egress matrix.  This driver is all-up (crashes live in
+    :func:`run_protocol_faulty`), so the durable I/O model is the
+    deterministic steady-state one: every write is eventually applied
+    at all ``P`` replicas (one WAL record each), and each of the
+    ``n_epochs // snapshot_every`` snapshots persists the rows that
+    changed since the previous marker, capped at the key count.  All
+    durable I/O is replica-local, so it lands on the *diagonal* of a
+    ``(G, G)`` traffic matrix billed per pair
+    (``cost["durability_network_geo"]``, added into
+    ``cost["total_geo"]``) next to an informational
+    ``cost["durability_storage"]`` media line; the result gains a
+    ``"durability"`` block.  ``recovery=None`` (the default) changes
+    nothing — the compiled runner never sees the config.
     """
     if topology is None:
         from repro.geo.topology import PAPER_TOPOLOGY
@@ -651,6 +672,48 @@ def run_protocol_geo(
             "peer": gossip.peer,
         }
 
+    durability_info = None
+    if recovery is not None and recovery.enabled:
+        # Steady-state durable-I/O model (all-up driver, host-side
+        # only): every write applies at all P replicas, snapshots
+        # persist the inter-marker working set capped at the key count.
+        n_epochs_total = n_rounds + (1 if rem else 0)
+        se = recovery.snapshot_every
+        n_snaps = n_epochs_total // se if se > 0 else 0
+        n_writes = int((stream["kind"] == 1).sum())
+        wal_records_pp = n_writes if recovery.wal else 0
+        per_snap = (
+            min(n_resources, -(-n_writes // n_snaps)) if n_snaps else 0
+        )
+        snap_cells_pp = per_snap * n_snaps
+        per_region = np.bincount(
+            topology.regions(), minlength=topology.n_regions
+        )
+        dur_mat_gb = np.diag(
+            (snap_cells_pp + wal_records_pp) * per_region
+            * cfg.row_bytes / 1e9
+        )
+        durability_network_geo = cost_model.cost_network_matrix(
+            traffic_gb=dur_mat_gb, egress=egress
+        )
+        cost["durability_network_geo"] = durability_network_geo
+        cost["total_geo"] += durability_network_geo
+        cost["durability_storage"] = cost_model.cost_storage(
+            hosted_gb=3 * n_resources * cfg.row_bytes / 1e9,
+            months=runtime_s / (30 * 24 * 3600.0),
+            io_requests=float((snap_cells_pp + wal_records_pp) * P),
+            pricing=pricing,
+        )
+        durability_info = {
+            "snapshot_every": se,
+            "wal": recovery.wal,
+            "snapshots": n_snaps,
+            "snapshot_cells": snap_cells_pp * P,
+            "wal_records": wal_records_pp * P,
+            "durable_gb": float(dur_mat_gb.sum()),
+            "durable_gb_by_region": np.diag(dur_mat_gb).tolist(),
+        }
+
     reg_stale, reg_reads, reg_lat, reg_ops = (np.asarray(x) for x in reg)
     result = {
         "staleness_rate": stale_rate,
@@ -677,6 +740,8 @@ def run_protocol_geo(
     }
     if gossip_info is not None:
         result["gossip"] = gossip_info
+    if durability_info is not None:
+        result["durability"] = durability_info
     return result
 
 
@@ -814,6 +879,8 @@ def _faulty_runner(
     pending_cap: int,
     ingest: str = "auto",
     gossip: GossipConfig | None = None,
+    recovery: DurabilityConfig | None = None,
+    crashes: bool = False,
 ) -> tuple[ReplicatedStore, Any]:
     """(store, jitted engine) for one failure-scenario configuration.
 
@@ -840,16 +907,36 @@ def _faulty_runner(
     (``bench_faults --check``) and
     ``test_faulty_all_up_bit_identical_to_run_protocol`` police the
     twins against drifting apart.
+
+    ``recovery`` (a hashable
+    :class:`repro.core.replicated_store.DurabilityConfig`) switches on
+    the durability layer — periodic snapshot markers and, with ``wal``,
+    per-epoch applied-delta journaling; ``crashes`` compiles the
+    crash-event path (amnesiac state loss at the crash epoch, snapshot/
+    WAL restore + peer bootstrap at the rejoin epoch).  Both default
+    off, in which case neither branch exists in the jaxpr — the same
+    bit-identity contract the gossip knobs honor.
     """
     g_on = gossip is not None and gossip.enabled
     h_on = gossip is not None and gossip.handoff
+    d_on = recovery is not None and recovery.enabled
+    w_on = d_on and recovery.wal
+    rx_on = d_on or crashes
+    boot_ranges = recovery.bootstrap_ranges if recovery is not None else 8
+    boot_impl = recovery.impl if recovery is not None else None
     store = ReplicatedStore(
         3, n_clients, n_resources, level=level, merge_every=merge_every,
         delta=delta, pending_cap=pending_cap, duot_cap=duot_cap,
         ingest=ingest, hint_cap=gossip.hint_cap if gossip else 0,
+        durability=recovery if d_on else None,
     )
 
     def round_step(carry, ops, step0, width):
+        if rx_on:
+            rx = carry[-1]
+            carry = carry[:-1]
+            (crash_n, wal_rep, rows_lost, snap_read,
+             boot_cells, boot_pend, boot_events) = rx
         if gossip is not None:
             st, n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail, gx = carry
             (g_deliv, g_ranges, g_pairs, g_gap,
@@ -857,13 +944,60 @@ def _faulty_runner(
         else:
             st, n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = carry
         up, conn = ops["up"], ops["conn"]
+        if crashes:
+            # Crash epoch: the replica's volatile state dies *before*
+            # anything else happens this epoch; what survives is the
+            # store's durability layer (snapshot + WAL).
+            def do_crash(s):
+                return store.crash(s, ops["crash"])
+
+            def no_crash(s):
+                z = jnp.int32(0)
+                return s, {"wal_replayed": z, "snap_read": z,
+                           "rows_lost": z}
+
+            st, cinfo = jax.lax.cond(
+                ops["crash"].any(), do_crash, no_crash, st
+            )
+            crash_n = crash_n + jnp.sum(ops["crash"].astype(jnp.int32))
+            wal_rep = wal_rep + cinfo["wal_replayed"]
+            rows_lost = rows_lost + cinfo["rows_lost"]
+            snap_read = snap_read + cinfo["snap_read"]
+            # Rejoin epoch: pull stale ranges from the nearest live
+            # holder before the replica serves anything.
+            def do_boot(s):
+                s2, tel = store.bootstrap(
+                    s, targets=ops["rejoin"], up=up, link=conn,
+                    n_ranges=boot_ranges, impl=boot_impl,
+                )
+                return s2, (
+                    jnp.sum(tel["cells"]), jnp.sum(tel["pend"]),
+                    jnp.sum(tel["valid"].astype(jnp.int32)),
+                )
+
+            def no_boot(s):
+                z = jnp.int32(0)
+                return s, (z, z, z)
+
+            st, (bc, bp, be) = jax.lax.cond(
+                ops["rejoin"].any(), do_boot, no_boot, st
+            )
+            boot_cells = boot_cells + bc
+            boot_pend = boot_pend + bp
+            boot_events = boot_events + be
+        if w_on:
+            # Applied copies at the start of the epoch (post-recovery):
+            # the epoch's growth is what each replica journals.
+            applied0 = jnp.sum(
+                st.cluster.pend_applied.astype(jnp.int32), axis=0
+            )
         if h_on:
             # Heal epoch: targeted hint deliveries front-run the full
             # anti-entropy pass — drained hints shrink its backlog.
             st, hd = jax.lax.cond(
                 ops["heal"],
                 lambda s: store.drain_hints(s, up=up, link=conn),
-                lambda s: (s, jnp.int32(0)),
+                lambda s: (s, jnp.zeros((3,), jnp.int32)),
                 st,
             )
             h_deliv = h_deliv + hd
@@ -887,6 +1021,11 @@ def _faulty_runner(
         st = st._replace(pend_apply=jnp.where(
             ops["faulty"], jnp.maximum(st.pend_apply, end), st.pend_apply
         ))
+        if w_on:
+            # Ring slots claimed by this batch's writes overwrite their
+            # old applied bits; snapshot them so the epoch's journal
+            # growth counts every applied copy, not the net of the sum.
+            pre_bits = st.cluster.pend_applied
         st, res = store.apply_batch(
             st, client=ops["client"], replica=home,
             resource=ops["resource"], kind=ops["kind"],
@@ -936,6 +1075,32 @@ def _faulty_runner(
             g_ranges = g_ranges + gr
             g_pairs = g_pairs + gp
             g_gap = g_gap + gg
+        if w_on:
+            # Journal each replica's applied deltas for this epoch (new
+            # coordinator copies + merge/gossip deliveries).  Recycled
+            # slots destroyed their applied bits mid-epoch; add those
+            # back so the journal measures gross applies, not the net
+            # movement of the column sums.
+            is_w = ops["kind"] == duot_lib.WRITE
+            lost = jnp.sum(
+                pre_bits[res.slot].astype(jnp.int32)
+                * is_w[:, None].astype(jnp.int32),
+                axis=0,
+            )
+            growth = jnp.maximum(
+                jnp.sum(st.cluster.pend_applied.astype(jnp.int32), axis=0)
+                - applied0 + lost, 0,
+            )
+            st = store.wal_append(st, growth)
+        if d_on and recovery.snapshot_every > 0:
+            # Periodic snapshot marker: persist applied state, truncate
+            # the journals (cells billed via DuraState.snap_rows).
+            st = jax.lax.cond(
+                ops["snap"],
+                lambda s: store.snapshot(s)[0],
+                lambda s: s,
+                st,
+            )
         is_read = ops["kind"] == duot_lib.READ
         out = (
             st,
@@ -946,10 +1111,16 @@ def _faulty_runner(
         )
         if gossip is not None:
             gx = (g_deliv, g_ranges, g_pairs, g_gap, h_enq, h_drop, h_deliv)
+            out = out + (gx,)
+        if rx_on:
+            rx = (crash_n, wal_rep, rows_lost, snap_read,
+                  boot_cells, boot_pend, boot_events)
+            out = out + (rx,)
+        if gossip is not None:
             # Per-round repair telemetry rides the scan's ys.
-            return out + (gx,), (gd if g_on else jnp.int32(0),
-                                 gr if g_on else jnp.int32(0),
-                                 gg if g_on else jnp.int32(0))
+            return out, (gd if g_on else jnp.int32(0),
+                         gr if g_on else jnp.int32(0),
+                         gg if g_on else jnp.int32(0))
         return out, None
 
     @jax.jit
@@ -957,6 +1128,9 @@ def _faulty_runner(
         z = jnp.int32(0)
         carry = (store.init(), z, z, z, z, z, z)
         if gossip is not None:
+            carry = carry + ((z, z, z, z, z, z,
+                              jnp.zeros((3,), jnp.int32)),)
+        if rx_on:
             carry = carry + ((z, z, z, z, z, z, z),)
         n_rounds = batched["client"].shape[0]
 
@@ -972,9 +1146,14 @@ def _faulty_runner(
 
 
 def _fault_epoch_inputs(
-    schedule, n_rounds: int, rem: int,
+    schedule, n_rounds: int, rem: int, crashes: bool = False,
 ) -> tuple[Any, dict[str, np.ndarray], dict[str, np.ndarray]]:
-    """(schedule, per-round mask arrays, tail mask arrays)."""
+    """(schedule, per-round mask arrays, tail mask arrays).
+
+    ``crashes`` adds the crash-event and rejoin masks; they are only
+    threaded when the runner compiled the crash path, so crash-free
+    runs scan over exactly the pre-crash input structure.
+    """
     n_epochs = n_rounds + (1 if rem else 0)
     schedule = schedule.slice(n_epochs)
     conn = schedule.closure()
@@ -993,6 +1172,13 @@ def _fault_epoch_inputs(
         "faulty": faulty[t],
         "heal": heals[t],
     }
+    if crashes:
+        crash = schedule.crashes()
+        rejoin = schedule.rejoins()
+        per_round["crash"] = crash[:n_rounds]
+        per_round["rejoin"] = rejoin[:n_rounds]
+        tail["crash"] = crash[t]
+        tail["rejoin"] = rejoin[t]
     return schedule, per_round, tail
 
 
@@ -1027,8 +1213,10 @@ def run_protocol_faulty(
     n_shards: int = 1,
     schedule_unit: int | None = None,
     gossip: GossipConfig | None = None,
+    recovery: DurabilityConfig | None = None,
     cfg: ClusterConfig = PAPER_CLUSTER,
     pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
+    _return_state: bool = False,
 ) -> dict[str, Any]:
     """Run the protocol under replica outages and network partitions.
 
@@ -1076,6 +1264,23 @@ def run_protocol_faulty(
     default) and ``GossipConfig(cadence=0, hint_cap=0)`` both produce
     metrics bit-identical to the heal-only path — the CI gossip smoke
     gates on it.
+
+    **Crash recovery.**  A schedule with crash events
+    (:func:`repro.core.availability.replica_crash`) destroys the
+    crashed replica's applied state at the crash epoch and rebuilds it
+    at its rejoin epoch: restore from the durability layer configured
+    by ``recovery`` (a
+    :class:`repro.core.replicated_store.DurabilityConfig` — periodic
+    snapshot markers, optionally a write-ahead delta journal), then a
+    peer **bootstrap** pass that diffs range digests against the
+    nearest live holder and pulls the stale ranges (billed as
+    inter-DC egress), with hinted-handoff queues draining into the
+    rebuilt replica on the same epoch.  Durability I/O and recovery
+    traffic land in the eq. 8 bill (``cost["durability_storage"]``,
+    ``cost["durability_network"]``) and the result gains a
+    ``"recovery"`` block.  With zero crash events and ``recovery=None``
+    none of this machinery is compiled and the run is bit-identical to
+    the pre-crash driver.
     """
     if n_clients % n_shards or n_resources % n_shards or n_ops % n_shards:
         raise ValueError(
@@ -1103,25 +1308,44 @@ def run_protocol_faulty(
             f"schedule covers {schedule.n_replicas} replicas; the paper "
             "cluster has 3 DCs"
         )
+    crashes = schedule.has_crashes
+    d_on = recovery is not None and recovery.enabled
+    s_on = d_on and recovery.snapshot_every > 0
+    rx_on = d_on or crashes
     if schedule_unit:
         # Re-anchor the op-indexed schedule onto this level's rounds.
+        # Crash *events* fire once: only the first round mapped to a
+        # schedule epoch inherits its crash flags (coarser levels can
+        # map several rounds to one epoch).
         starts = np.arange(n_rounds + (1 if rem else 0)) * sub
         idx = np.minimum(starts // schedule_unit, schedule.n_epochs - 1)
+        first = np.zeros(idx.shape, bool)
+        first[0] = True
+        first[1:] = idx[1:] != idx[:-1]
         schedule = avail_lib.FaultSchedule(
-            schedule.up[idx], schedule.link[idx]
+            schedule.up[idx], schedule.link[idx],
+            crash=schedule.crashes()[idx] & first[:, None],
         )
-    schedule, masks, tail_masks = _fault_epoch_inputs(schedule, n_rounds, rem)
+    schedule, masks, tail_masks = _fault_epoch_inputs(
+        schedule, n_rounds, rem, crashes
+    )
+    n_epochs_total = n_rounds + (1 if rem else 0)
     if gossip is not None:
-        n_epochs_total = n_rounds + (1 if rem else 0)
         g_active, g_pairs = gossip_pairs(3, n_epochs_total, gossip)
         masks["gossip"] = g_active[:n_rounds]
         masks["pairs"] = g_pairs[:n_rounds]
         tail_masks["gossip"] = g_active[n_epochs_total - 1]
         tail_masks["pairs"] = g_pairs[n_epochs_total - 1]
+    if s_on:
+        se = recovery.snapshot_every
+        snap = (np.arange(n_epochs_total) + 1) % se == 0
+        masks["snap"] = snap[:n_rounds]
+        tail_masks["snap"] = snap[n_epochs_total - 1]
 
     store, run = _faulty_runner(
         level, s_clients, s_resources, merge_every, delta, duot_cap,
         sub, rem, emulate, pending_cap, ingest, gossip,
+        recovery if d_on else None, crashes,
     )
 
     batched_shards, tail_shards = [], []
@@ -1161,16 +1385,22 @@ def run_protocol_faulty(
         k: jnp.asarray(np.stack([d[k] for d in dicts]))
         for k in dicts[0]
     }
-    gx = per_round = None
+    gx = rx = per_round = None
     if n_shards > 1:
         batched_s, tail_s = stack(batched_shards), stack(tail_shards)
         out = jax.vmap(run)(batched_s, tail_s)
         if gossip is not None:
             out, per_round = out
-            gx = tuple(int(jnp.sum(x)) for x in out[7])
+            # h_deliv (element 6) is a per-replica vector: sum over the
+            # shard axis only, keeping the by-replica attribution.
+            gx = tuple(int(jnp.sum(x)) for x in out[7][:6]) + (
+                np.asarray(jnp.sum(out[7][6], axis=0)),
+            )
             per_round = tuple(
                 np.asarray(jnp.sum(x, axis=0)) for x in per_round
             )
+        if rx_on:
+            rx = tuple(int(jnp.sum(x)) for x in out[-1])
         st = out[0]
         n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = (
             int(jnp.sum(x)) for x in out[1:7]
@@ -1182,8 +1412,12 @@ def run_protocol_faulty(
         out = run(b, t)
         if gossip is not None:
             out, per_round = out
-            gx = tuple(int(x) for x in out[7])
+            gx = tuple(int(x) for x in out[7][:6]) + (
+                np.asarray(out[7][6]),
+            )
             per_round = tuple(np.asarray(x) for x in per_round)
+        if rx_on:
+            rx = tuple(int(x) for x in out[-1])
         st = out[0]
         n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = (
             int(x) for x in out[1:7]
@@ -1214,11 +1448,49 @@ def run_protocol_faulty(
     propagation_gb = prop_ev * row / 1e9
     gossip_gb = 0.0
     if gossip is not None:
-        (g_deliv, g_ranges, g_pair_n, g_gap, h_enq, h_drop, h_deliv) = gx
+        (g_deliv, g_ranges, g_pair_n, g_gap, h_enq, h_drop,
+         h_deliv_vec) = gx
+        h_deliv = int(h_deliv_vec.sum())
         k_eff = max(1, min(gossip.n_ranges, s_resources))
         digest_gb = g_pair_n * 2 * k_eff * DIGEST_BYTES / 1e9
         repair_gb = (g_deliv + h_deliv) * row / 1e9
         gossip_gb = digest_gb + repair_gb
+    # -- durability + crash recovery (eq. 8's storage/network split) ------
+    snapshot_gb = wal_gb = replay_gb = bootstrap_gb = 0.0
+    recovery_info = None
+    if rx_on:
+        (crash_n, wal_rep, rows_lost, snap_read,
+         boot_cells, boot_pend, boot_events) = rx
+        snap_rows = int(jnp.sum(st.dura.snap_rows)) if d_on else 0
+        wal_total = int(jnp.sum(st.dura.wal_total)) if d_on else 0
+        bk = max(1, min(
+            recovery.bootstrap_ranges if recovery is not None else 8,
+            s_resources,
+        ))
+        snapshot_gb = snap_rows * row / 1e9
+        wal_gb = wal_total * row / 1e9
+        replay_gb = (wal_rep + snap_read) * row / 1e9
+        bootstrap_gb = (
+            (boot_cells + boot_pend) * row
+            + boot_events * 2 * bk * DIGEST_BYTES
+        ) / 1e9
+        recovery_info = {
+            "crashes": crash_n,
+            "rejoins": boot_events,
+            "rows_lost": rows_lost,
+            "wal_replayed": wal_rep,
+            "snapshot_cells_read": snap_read,
+            "snapshot_cells": snap_rows,
+            "wal_records": wal_total,
+            "bootstrap_cells": boot_cells,
+            "bootstrap_pending": boot_pend,
+            "snapshot_gb": snapshot_gb,
+            "wal_gb": wal_gb,
+            "replay_gb": replay_gb,
+            "bootstrap_gb": bootstrap_gb,
+            # Crash-triggered traffic only (zero unless a crash fired).
+            "recovery_gb": bootstrap_gb + replay_gb,
+        }
     thr, _ = throughput_model(level, w, 64, cfg, stale_rate)
     runtime_s = n_ops / thr
     inter_gb, intra_gb = traffic_gb(level, w, n_ops, cfg, stale_rate)
@@ -1228,14 +1500,32 @@ def run_protocol_faulty(
         hosted_gb=cfg.total_data_gb_after_replication,
         months=runtime_s / (30 * 24 * 3600.0),
         io_requests=float(n_ops) * level.write_acks(cfg.replication_factor),
-        inter_dc_gb=inter_gb + anti_entropy_gb + gossip_gb,
-        intra_dc_gb=intra_gb,
+        inter_dc_gb=inter_gb + anti_entropy_gb + gossip_gb + bootstrap_gb,
+        intra_dc_gb=intra_gb + snapshot_gb + wal_gb + replay_gb,
         pricing=pricing,
     )
     cost = bill.as_dict()
     cost["anti_entropy_network"] = cost_model.cost_network(
         inter_dc_gb=anti_entropy_gb, intra_dc_gb=0.0, pricing=pricing
     )
+    if rx_on:
+        # The durable-media side of eq. 8: snapshot copies hosted for
+        # the run plus every marker/journal/restore I/O event.
+        cost["durability_storage"] = cost_model.cost_storage(
+            hosted_gb=(
+                (3 * s_resources * row / 1e9) * n_shards if d_on else 0.0
+            ),
+            months=runtime_s / (30 * 24 * 3600.0),
+            io_requests=float(
+                snap_rows + wal_total + wal_rep + snap_read
+            ) if d_on else float(0),
+            pricing=pricing,
+        )
+        cost["durability_network"] = cost_model.cost_network(
+            inter_dc_gb=bootstrap_gb,
+            intra_dc_gb=snapshot_gb + wal_gb + replay_gb,
+            pricing=pricing,
+        )
     result: dict[str, Any] = {
         "staleness_rate": stale_rate,
         "violation_rate": viol_rate,
@@ -1272,6 +1562,7 @@ def run_protocol_faulty(
                 "enqueued": h_enq,
                 "dropped": h_drop,
                 "delivered": h_deliv,
+                "delivered_by_replica": h_deliv_vec.tolist(),
             },
             "per_round": {
                 "deliveries": pr_deliv.tolist(),
@@ -1279,6 +1570,16 @@ def run_protocol_faulty(
                 "gap_repaired": pr_gap.tolist(),
             },
         }
+    if recovery_info is not None:
+        result["crash_epochs"] = np.flatnonzero(
+            schedule.crashes().any(axis=1)
+        ).tolist()
+        result["recovery"] = recovery_info
+    if _return_state:
+        # Final engine state for convergence checks (chaos harness);
+        # underscore keys so dict-equality gates never see them.
+        result["_state"] = st
+        result["_store"] = store
     return result
 
 

@@ -245,9 +245,15 @@ def test_hints_enqueue_drain_and_overflow():
         home=jnp.asarray([0, 1]), conn=conn)
     assert int(n_enq) == 2 and int(n_drop) == 0
     assert int(st.hints.count[2]) == 2
-    # Heal: draining delivers the hinted writes to replica 2.
+    # Heal: draining delivers the hinted writes to replica 2.  The
+    # telemetry is per *receiving* replica: both hints land at 2, and
+    # the relay legs of the drain merge (0's write reaching 1 and vice
+    # versa) are attributed to their own receivers instead of being
+    # lumped into one scalar.
     st2, deliv = store.drain_hints(st, up=UP3, link=jnp.asarray(R3))
-    assert int(deliv) > 0
+    deliv = np.asarray(deliv)
+    assert deliv.shape == (3,)
+    assert int(deliv[2]) == 2
     assert int(st2.hints.count[2]) == 0
     rv = np.asarray(st2.cluster.replica_version)
     assert rv[2, 1] >= 1 and rv[2, 3] >= 1
