@@ -26,6 +26,18 @@ Rows (name, us_per_call, derived):
                                 deviation (bit-exact -> 0.0)
   protocol_ingest_mem_B<B>      derived = dense_bytes/tiled_bytes mask
                                 footprint ratio (the O(B²) -> O(B) win)
+  protocol_host_hops_<LEVEL>    derived = measured jit re-entries per
+                                replay (repro.engine.jit_entries); the
+                                device-resident scan makes this 1
+  protocol_epochs_<LEVEL>       derived = merge epochs per replay — the
+                                dispatches an epoch-at-a-time host loop
+                                would pay instead
+  protocol_lean_B4096_<LEVEL>   derived = lean-replay ops/s at the big-
+                                batch geometry (B=4096, 24576 ops;
+                                emulated levels only)
+  protocol_lean_speedup_B4096_<LEVEL>   derived = lean/scalar ops/s
+  protocol_lean_stale_dev_B4096_<LEVEL> derived = lean vs scalar
+                                staleness deviation (same 0.5% bar)
 
 ``REPRO_BENCH_NOPS`` scales the stream (default 6000; CI smoke uses
 600).  ``python -m benchmarks.bench_protocol --check`` runs the suite,
@@ -63,16 +75,21 @@ def _stale_dev(got: dict, want: dict) -> float:
 
 def run() -> None:
     from repro.core.consistency import ConsistencyLevel
+    from repro.engine import jit_entries
+    from repro.engine.stream import cadence_plan
     from repro.storage.simulator import run_protocol, run_protocol_scalar
     from repro.storage.ycsb import WORKLOAD_A
 
     speedups = []
     for name in LEVELS:
         level = ConsistencyLevel[name]
+        hops0 = jit_entries()
         us_b, out_b = time_call(
             run_protocol, level, WORKLOAD_A, n_ops=N_OPS, audit=False,
             repeats=3,
         )
+        # time_call makes 1 warmup + 3 timed replays.
+        hops = (jit_entries() - hops0) / 4
         us_s, out_s = time_call(
             run_protocol_scalar, level, WORKLOAD_A, n_ops=N_OPS,
             audit=False, repeats=3,
@@ -84,6 +101,10 @@ def run() -> None:
         emit(f"protocol_scalar_{name}", us_s, f"{ops_s:.0f}")
         emit(f"protocol_speedup_{name}", us_b, f"{ops_b / ops_s:.2f}")
         emit(f"protocol_stale_dev_{name}", 0.0, f"{_stale_dev(out_b, out_s):.4f}")
+        _, rem, n_rounds, _ = cadence_plan(level, N_OPS, 128, 8, 24)
+        emit(f"protocol_host_hops_{name}", 0.0, f"{hops:.0f}")
+        emit(f"protocol_epochs_{name}", 0.0,
+             f"{n_rounds + (1 if rem else 0)}")
 
     geo = 1.0
     for s in speedups:
@@ -123,6 +144,40 @@ def run() -> None:
         tiled_bytes = 4 * b * 4 + 6 * tile * tile * 4
         emit(f"protocol_ingest_mem_B{b}", 0.0,
              f"{dense_bytes / tiled_bytes:.1f}")
+
+    # -- lean-replay headline at the big-batch geometry ----------------------
+    # Emulated levels only: the closed-form cadence emulation already
+    # carries visibility there, so the per-op vector-clock scan, the
+    # DUOT record, and the merge's dependency gate are droppable
+    # bookkeeping (EngineConfig.lean).  24576 ops at B=4096 is the
+    # geometry the lean path is verified bit-identical at; the 0.5%
+    # stale-dev bar still gates it like every other row.  Skipped when
+    # the stream is smaller than one headline batch (the CI smoke).
+    b_head = 4096
+    if N_OPS >= b_head:
+        from repro.engine import EngineConfig, EpochEngine
+
+        n_ops = 6 * b_head
+        for name in ("X_STCC", "TCC", "QUORUM", "ALL"):
+            level = ConsistencyLevel[name]
+            eng = EpochEngine(EngineConfig(
+                level, n_ops=n_ops, batch_size=b_head, audit=False,
+                lean=True,
+            ))
+            us_l, out_l = time_call(eng.run, WORKLOAD_A, repeats=3)
+            us_s, out_s = time_call(
+                run_protocol_scalar, level, WORKLOAD_A, n_ops=n_ops,
+                audit=False, repeats=1,
+            )
+            ops_l = n_ops / (us_l / 1e6)
+            ops_s = n_ops / (us_s / 1e6)
+            emit(f"protocol_lean_B{b_head}_{name}", us_l, f"{ops_l:.0f}")
+            emit(f"protocol_lean_speedup_B{b_head}_{name}", us_l,
+                 f"{ops_l / ops_s:.2f}")
+            emit(f"protocol_lean_stale_dev_B{b_head}_{name}", 0.0,
+                 f"{_stale_dev(out_l, out_s):.4f}")
+    else:
+        emit(f"protocol_lean_skip_B{b_head}", 0.0, f"stream<{b_head}ops")
 
 
 def check() -> int:

@@ -1,0 +1,83 @@
+"""Schema gate for ``BENCH_PROTOCOL.json`` (the cross-PR perf trajectory).
+
+The file is append-merged by every benchmark run (see
+``benchmarks.common.write_json``), so a malformed writer anywhere
+corrupts the trajectory for every later PR.  This gate pins the
+contract:
+
+  * top level: a JSON object mapping row name → row;
+  * every row: an object with exactly ``us_per_call`` (non-negative
+    number) and ``derived`` (string);
+  * no row recorded an ``ERROR:`` marker (a suite crashed mid-run);
+  * the protocol suite's headline rows are present — batched/scalar
+    throughput, speedup, and staleness-deviation per consistency level
+    plus the geomean — so a refactor cannot silently drop the rows the
+    acceptance gates read.
+
+Run:  python -m benchmarks.check_schema [path]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.common import RESULTS_JSON
+
+LEVELS = ("X_STCC", "TCC", "CAUSAL", "ONE", "QUORUM", "ALL")
+REQUIRED = tuple(
+    f"protocol_{kind}_{lv}"
+    for lv in LEVELS
+    for kind in ("batched", "scalar", "speedup", "stale_dev")
+) + ("protocol_speedup_geomean",)
+
+
+def check(path=RESULTS_JSON) -> int:
+    try:
+        data = json.loads(path.read_text())
+    except FileNotFoundError:
+        print(f"{path} missing — run a benchmark first", file=sys.stderr)
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"{path} is not valid JSON: {e}", file=sys.stderr)
+        return 1
+
+    errors = []
+    if not isinstance(data, dict):
+        errors.append(f"top level must be an object, got {type(data).__name__}")
+        data = {}
+    for name, row in data.items():
+        if not isinstance(name, str) or not name:
+            errors.append(f"row key {name!r} is not a non-empty string")
+        if not isinstance(row, dict) or set(row) != {"us_per_call", "derived"}:
+            errors.append(
+                f"{name}: row must have exactly us_per_call+derived, "
+                f"got {sorted(row) if isinstance(row, dict) else row!r}"
+            )
+            continue
+        us = row["us_per_call"]
+        if not isinstance(us, (int, float)) or isinstance(us, bool) or us < 0:
+            errors.append(f"{name}: us_per_call must be a number >= 0, got {us!r}")
+        if not isinstance(row["derived"], str):
+            errors.append(
+                f"{name}: derived must be a string, got {row['derived']!r}"
+            )
+        elif row["derived"].startswith("ERROR:"):
+            errors.append(f"{name}: recorded a crash marker: {row['derived']}")
+    missing = [name for name in REQUIRED if name not in data]
+    if missing:
+        errors.append(f"required protocol rows missing: {missing}")
+
+    if errors:
+        for e in errors:
+            print(f"schema: {e}", file=sys.stderr)
+        return 1
+    print(f"schema OK: {len(data)} rows in {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import pathlib
+
+    target = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else RESULTS_JSON
+    sys.exit(check(target))

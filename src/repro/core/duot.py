@@ -117,29 +117,57 @@ def record(table: Duot, ops: dict[str, Array]) -> Duot:
     """
     b = ops["client"].shape[0]
     cap = table.capacity
-    idx = table.size + jnp.arange(b, dtype=jnp.int32)
-    # Overflow rows get an out-of-range index and are dropped by the
-    # scatter — clamping them to cap-1 would make them collide with (and
-    # clobber) a real entry when a batch straddles capacity.
-    idx = jnp.where(idx < cap, idx, jnp.int32(cap))
-
-    def put(arr, val):
-        return arr.at[idx].set(jnp.asarray(val, arr.dtype), mode="drop")
-
     seqs = table.next_seq + jnp.arange(b, dtype=jnp.int32)
-    return Duot(
-        client=put(table.client, ops["client"]),
-        kind=put(table.kind, ops["kind"]),
-        resource=put(table.resource, ops["resource"]),
-        version=put(table.version, ops["version"]),
-        replica=put(table.replica, ops["replica"]),
-        seq=put(table.seq, seqs),
-        vc=table.vc.at[idx].set(
-            ops["vc"].astype(jnp.int32), mode="drop"
-        ),
-        valid=table.valid.at[idx].set(True, mode="drop"),
-        size=jnp.minimum(table.size + jnp.int32(b), jnp.int32(cap)),
-        next_seq=table.next_seq + jnp.int32(b),
+    fields = (
+        (table.client, ops["client"]),
+        (table.kind, ops["kind"]),
+        (table.resource, ops["resource"]),
+        (table.version, ops["version"]),
+        (table.replica, ops["replica"]),
+        (table.seq, seqs),
+        (table.vc, ops["vc"]),
+        (table.valid, jnp.ones((b,), bool)),
+    )
+
+    def rebuild(cols, size):
+        return table._replace(
+            client=cols[0], kind=cols[1], resource=cols[2], version=cols[3],
+            replica=cols[4], seq=cols[5], vc=cols[6], valid=cols[7],
+            size=size, next_seq=table.next_seq + jnp.int32(b),
+        )
+
+    def contiguous(size):
+        # The whole batch fits: one dynamic_update_slice per field —
+        # a straight copy, no scatter machinery.
+        def dus(arr, val):
+            val = jnp.asarray(val, arr.dtype)
+            if arr.ndim == 1:
+                return jax.lax.dynamic_update_slice(arr, val, (size,))
+            return jax.lax.dynamic_update_slice(
+                arr, val, (size, jnp.int32(0))
+            )
+        return rebuild(
+            tuple(dus(a, v) for a, v in fields), size + jnp.int32(b)
+        )
+
+    def straddle(size):
+        idx = size + jnp.arange(b, dtype=jnp.int32)
+        # Overflow rows get an out-of-range index and are dropped by the
+        # scatter — clamping them to cap-1 would make them collide with
+        # (and clobber) a real entry when a batch straddles capacity.
+        idx = jnp.where(idx < cap, idx, jnp.int32(cap))
+        return rebuild(
+            tuple(
+                a.at[idx].set(jnp.asarray(v, a.dtype), mode="drop")
+                for a, v in fields
+            ),
+            jnp.minimum(size + jnp.int32(b), jnp.int32(cap)),
+        )
+
+    if b > cap:
+        return straddle(table.size)
+    return jax.lax.cond(
+        table.size + b <= cap, contiguous, straddle, table.size
     )
 
 

@@ -39,6 +39,7 @@ from repro.core import audit as audit_lib
 from repro.core import duot as duot_lib
 from repro.core import xstcc
 from repro.core.consistency import ConsistencyLevel
+from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
 
@@ -354,6 +355,7 @@ class ReplicatedStore:
         apply_index: Array | None = None,
         record: bool = True,
         enforce: Array | bool | None = None,
+        with_clocks: bool = True,
     ) -> tuple[StoreState, xstcc.BatchResult]:
         """Ingest a mixed read/write batch and register it in the DUOT.
 
@@ -391,6 +393,13 @@ class ReplicatedStore:
         pend_apply = None
         visible_version = None
         new_pend_apply = None
+        # Every store-layer batch has affine op indices (step0 + i), so
+        # the closed-form fused ingest is always eligible on CPU.
+        impl = kernel_ops.resolve_op_ingest_impl(
+            self.ingest, batch=b,
+            n_clients=self.n_clients, n_replicas=self.n_replicas,
+            n_resources=self.n_resources, affine_op_index=True,
+        )
         if op_step0 is not None:
             step0 = jnp.asarray(op_step0, jnp.int32)
             op_index = step0 + jnp.arange(b, dtype=jnp.int32)
@@ -403,7 +412,11 @@ class ReplicatedStore:
                     apply_index = self.schedule_stream(c, p, k) + step0
                 pend_apply = state.pend_apply
                 new_pend_apply = apply_index
-            if self.ingest != "dense":
+            if impl == "fused":
+                # The fused path folds the pending ring into its own
+                # activation timeline — hand the ring straight through.
+                pass
+            elif impl != "dense":
                 # Fold the pending ring's cadence visibility in
                 # O(B + Q): batch op indices are affine, so slot q
                 # becomes visible at the batch-local activation index
@@ -430,7 +443,7 @@ class ReplicatedStore:
             ),
             op_index=op_index, apply_index=apply_index,
             pend_apply=pend_apply, visible_version=visible_version,
-            ingest=self.ingest,
+            ingest=impl, with_clocks=with_clocks,
         )
         pend_apply = state.pend_apply
         if new_pend_apply is not None:
@@ -498,16 +511,28 @@ class ReplicatedStore:
         delta: Array | int | None = None,
         up: Array | None = None,
         link: Array | None = None,
+        timed_only: bool = False,
+        boundary: Array | int | None = None,
     ) -> tuple[StoreState, Array]:
         """Timed-causal propagation (Δ defaults to the level's cadence).
 
         ``up``/``link`` mask the propagation to live, connected replica
         pairs (see :func:`repro.core.xstcc.server_merge`); omitted they
-        reproduce the fully-connected merge bit-exactly.
+        reproduce the fully-connected merge bit-exactly.  ``timed_only``
+        drops the causal-dependency gate (lean replay — see
+        :func:`repro.core.xstcc.server_merge`); with ``boundary`` (the
+        global op index reached so far) it applies exactly the slots
+        whose emulated apply point has passed — the schedule-faithful
+        boundary merge of the lean engine.
         """
         d = self.delta if delta is None else delta
+        ready = None
+        if boundary is not None:
+            assert timed_only, "boundary requires timed_only"
+            ready = state.pend_apply <= jnp.asarray(boundary, jnp.int32)
         cluster, n = xstcc.server_merge(
-            state.cluster, delta=d, level=self.level, up=up, link=link
+            state.cluster, delta=d, level=self.level, up=up, link=link,
+            timed_only=timed_only, ready=ready,
         )
         return state._replace(cluster=cluster), n
 

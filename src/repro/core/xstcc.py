@@ -249,6 +249,7 @@ def apply_op_batch(
     pend_apply: Array | None = None,
     visible_version: Array | None = None,
     ingest: str | None = None,
+    with_clocks: bool = True,
 ) -> BatchResult:
     """Ingest a batch of ``B`` ops — bit-identical to the scalar loop.
 
@@ -294,6 +295,15 @@ def apply_op_batch(
     The pending ring matches the sequential loop too: the k-th write of
     the batch takes the k-th free slot (ascending), and writes beyond the
     free capacity are dropped and counted in ``pend_dropped``.
+
+    ``with_clocks=False`` skips the sequential vector-clock scan — the
+    one O(B) serial chain of the batch — and leaves ``session_vc``,
+    ``replica_vc``, and ``pend_vc`` untouched (``vc`` in the result is
+    zeros).  Only valid when nothing downstream consumes the clocks: no
+    DUOT registration, no audit, and merges gated on the timed bound
+    alone (``server_merge(timed_only=True)``).  Under an emulated
+    cadence the served/stale outcomes never read the clocks, so the
+    lean batch is metric-identical to the full one.
     """
     from repro.kernels import ops as kernel_ops
 
@@ -325,6 +335,9 @@ def apply_op_batch(
         op_index=op_index,
         apply_index=apply_index,
         impl="dense" if ingest is None else ingest,
+        n_clients=state.session_vc.shape[0],
+        n_replicas=state.replica_version.shape[0],
+        n_resources=state.replica_version.shape[1],
         **pend_kwargs,
     )
     gcur = state.global_version[r] + occ         # global version seen by op i
@@ -340,17 +353,26 @@ def apply_op_batch(
     admissible = jnp.where(is_w, True, adm)
 
     # -- vector clocks (exact sequential chaining, small scan) ---------------
-    def clock_step(carry, op):
-        svcs, rvcs = carry
-        ci, pi, wi = op
-        svc = jnp.maximum(svcs[ci], rvcs[pi]).at[ci].add(1)
-        svcs = svcs.at[ci].set(svc)
-        rvcs = jnp.where(wi, rvcs.at[pi].max(svc), rvcs)
-        return (svcs, rvcs), svc
+    if with_clocks:
+        def clock_step(carry, op):
+            svcs, rvcs = carry
+            ci, pi, wi = op
+            svc = jnp.maximum(svcs[ci], rvcs[pi]).at[ci].add(1)
+            svcs = svcs.at[ci].set(svc)
+            rvcs = jnp.where(wi, rvcs.at[pi].max(svc), rvcs)
+            return (svcs, rvcs), svc
 
-    (session_vc, replica_vc), vcs = jax.lax.scan(
-        clock_step, (state.session_vc, state.replica_vc), (c, p, is_w)
-    )
+        # Unrolling amortizes the scan's per-step loop overhead — the
+        # body is ~tens of scalar ops on two small rows, far below the
+        # iteration cost of an un-unrolled lax.scan on CPU.
+        (session_vc, replica_vc), vcs = jax.lax.scan(
+            clock_step, (state.session_vc, state.replica_vc), (c, p, is_w),
+            unroll=8,
+        )
+    else:
+        session_vc = state.session_vc
+        replica_vc = state.replica_vc
+        vcs = jnp.zeros((B, state.session_vc.shape[1]), jnp.int32)
 
     # -- pending ring: k-th batch write -> k-th free slot --------------------
     # The k-th-free-slot map is a cumsum rank + scatter (O(Q)), not an
@@ -385,7 +407,8 @@ def apply_op_batch(
         pend_client=state.pend_client.at[slot].set(c, mode="drop"),
         pend_resource=state.pend_resource.at[slot].set(r, mode="drop"),
         pend_version=state.pend_version.at[slot].set(ver_w, mode="drop"),
-        pend_vc=state.pend_vc.at[slot].set(vcs, mode="drop"),
+        pend_vc=(state.pend_vc.at[slot].set(vcs, mode="drop")
+                 if with_clocks else state.pend_vc),
         pend_coord=state.pend_coord.at[slot].set(p, mode="drop"),
         pend_time=state.pend_time.at[slot].set(pend_time, mode="drop"),
         pend_live=state.pend_live.at[slot].set(True, mode="drop"),
@@ -442,6 +465,8 @@ def server_merge(
     level: ConsistencyLevel = ConsistencyLevel.X_STCC,
     up: Array | None = None,
     link: Array | None = None,
+    timed_only: bool = False,
+    ready: Array | None = None,
 ) -> tuple[ClusterState, Array]:
     """Timed-causal propagation step (server side).
 
@@ -474,10 +499,23 @@ def server_merge(
     component is the whole fleet, so gates, rounds, and updates
     coincide.
 
+    ``timed_only=True`` drops the causal-dependency gate: one pass, no
+    ``(Q, P, C)`` clock comparison and no fixpoint iteration.  The
+    application criterion is ``ready`` (a ``(Q,)`` bool of slots whose
+    *emulated* apply point has been reached — the lean engine passes
+    ``pend_apply <= ops_done``), falling back to Δ-overdue age when
+    ``ready`` is None.  Slots not yet ready stay live — under an
+    emulated cadence their visibility is already carried by the
+    closed-form apply-index predicates, so the *served* reads are
+    unchanged; only the replica clocks lag, which nothing in the lean
+    path reads.  Incompatible with ``up``/``link`` masks (the fault
+    path always needs the causal gate).
+
     Returns (state, n_applied) — writes that reached at least one new
     replica this merge.
     """
     del level  # the order is identical; levels differ in *when* merge runs
+    assert ready is None or timed_only, "ready requires timed_only"
     d = jnp.asarray(delta, jnp.int32)
     Q, P = state.pend_applied.shape
     C = state.replica_vc.shape[1]
@@ -493,11 +531,33 @@ def server_merge(
 
     live = state.pend_live
     overdue = jnp.logical_and(live, (state.clock - state.pend_time) >= d)
+    res_safe = jnp.where(live, state.pend_resource, jnp.int32(R))
+
+    if timed_only:
+        assert not masked, "timed_only merge cannot take fault masks"
+        elig = overdue if ready is None else jnp.logical_and(live, ready)
+        elig_at = elig[:, None] & ~state.pend_applied          # (Q, P)
+        ver_at = jnp.where(elig_at, state.pend_version[:, None], 0)
+        upd = (
+            jnp.zeros((R, P), jnp.int32)
+            .at[res_safe]
+            .max(ver_at, mode="drop")
+        )
+        applied = state.pend_applied | elig_at
+        fully = jnp.all(applied, axis=1)
+        new = state._replace(
+            replica_version=jnp.maximum(state.replica_version, upd.T),
+            pend_applied=applied,
+            pend_live=jnp.logical_and(live, jnp.logical_not(fully)),
+            clock=state.clock + 1,
+        )
+        n_applied = jnp.sum(jnp.any(elig_at, axis=1).astype(jnp.int32))
+        return new, n_applied
+
     # A write is applicable at all replicas once its causal deps are
     # stable: its vc (minus its own tick) ≤ every replica's vc.
     own = jnp.arange(C, dtype=jnp.int32)[None, :] == state.pend_client[:, None]
     dep_vc = state.pend_vc - own.astype(jnp.int32)
-    res_safe = jnp.where(live, state.pend_resource, jnp.int32(R))
 
     def cond_fn(carry):
         return carry[4]

@@ -1,0 +1,34 @@
+"""Unified epoch engine: one device-resident replay loop for every driver.
+
+``EpochEngine(EngineConfig(...)).run(workload)`` replays a whole YCSB
+stream as a single ``lax.scan`` over merge epochs; topology, fault
+schedule, gossip, durability, sharding, and fidelity are orthogonal
+config pieces, not separate code paths.  The legacy ``run_protocol_*``
+entry points in ``repro.storage.simulator`` are thin wrappers over this
+package, CI-gated bit-identical to their pre-unification outputs.
+"""
+
+from repro.engine.config import EngineConfig
+from repro.engine.replay import (
+    EpochEngine, jit_entries, session_telemetry_runner, unified_runner,
+)
+from repro.engine.stream import (
+    OP_COLS, attach_clients, batch_inputs, cadence_plan, clamp_apply_idx,
+    fault_epoch_inputs, op_stream, op_stream_phased,
+)
+
+__all__ = [
+    "EngineConfig",
+    "EpochEngine",
+    "OP_COLS",
+    "attach_clients",
+    "batch_inputs",
+    "cadence_plan",
+    "clamp_apply_idx",
+    "fault_epoch_inputs",
+    "jit_entries",
+    "op_stream",
+    "op_stream_phased",
+    "session_telemetry_runner",
+    "unified_runner",
+]

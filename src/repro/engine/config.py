@@ -1,0 +1,172 @@
+"""Composable configuration of the unified epoch engine.
+
+One frozen dataclass holds every orthogonal piece of a replay —
+consistency level and cadence, batching, topology, fault schedule,
+gossip, durability, sharding, and fidelity — so each legacy
+``run_protocol_*`` driver is a *config instance*, not a code path.
+The engine compiles one jitted replay per distinct
+:meth:`EngineConfig.static_key`; pieces left at their defaults do not
+appear in the jaxpr at all, which is what the bit-identity bridge
+suite (``tests/test_engine_bridge.py``) leans on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.availability import FaultSchedule
+from repro.core.consistency import ConsistencyLevel
+from repro.core.replicated_store import DurabilityConfig
+from repro.gossip.scheduler import GossipConfig
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class EngineConfig:
+    """Everything one epoch-engine replay needs, in one place.
+
+    Orthogonal pieces compose freely (and order-independently — the
+    dataclass is keyword-constructed):
+
+      * ``topology`` — ``None`` for the flat 3-replica cluster, or a
+        :class:`repro.geo.topology.RegionTopology` for region-aware
+        two-tier merges, RTT-matrix latency, and egress-matrix billing;
+      * ``faults`` — ``None`` for an always-up fleet, or a
+        :class:`repro.core.availability.FaultSchedule` (outages,
+        partitions, crash events) anchored per merge round or, with
+        ``schedule_unit``, per op-index window;
+      * ``gossip`` / ``durability`` — the continuous anti-entropy and
+        crash-durability subsystems; ``None`` compiles neither;
+      * ``n_shards`` — disjoint tenant shards vmapped along a leading
+        axis (one device each when the host has them);
+      * ``lean`` — fidelity switch: skip the vector-clock scan, the
+        DUOT record, and the causal-dependency merge gate when the
+        closed-form cadence emulation already carries visibility
+        (emulated levels only; see ``docs/architecture.md``).  Metric
+        deviation is bounded by the bench's staleness gate; the exact
+        path (default) is what the bridge suite pins bit-identically.
+
+    ``audit`` is a result-assembly knob (DUOT audit severity) and
+    therefore not part of :meth:`static_key`.
+    """
+
+    level: ConsistencyLevel
+    n_ops: int = 6000
+    n_clients: int = 16
+    n_resources: int = 24
+    merge_every: int = 8
+    delta: int = 24
+    duot_cap: int = 2048
+    batch_size: int = 128
+    seed: int = 0
+    audit: bool = True
+    ingest: str = "auto"
+    lean: bool = False
+    topology: Any = None
+    n_shards: int = 1
+    faults: FaultSchedule | None = None
+    schedule_unit: int | None = None
+    gossip: GossipConfig | None = None
+    durability: DurabilityConfig | None = None
+    pending_cap: int | None = None
+    use_devices: bool = True
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.n_shards > 1 and (
+            self.n_clients % self.n_shards
+            or self.n_resources % self.n_shards
+            or self.n_ops % self.n_shards
+        ):
+            raise ValueError(
+                f"n_clients={self.n_clients}, n_resources="
+                f"{self.n_resources}, and n_ops={self.n_ops} must all be "
+                f"divisible by n_shards={self.n_shards}"
+            )
+        if self.faults is not None and self.faults.n_replicas != 3:
+            raise ValueError(
+                f"schedule covers {self.faults.n_replicas} replicas; the "
+                "paper cluster has 3 DCs"
+            )
+        if self.topology is not None and self.n_shards > 1:
+            raise ValueError("topology does not compose with n_shards > 1")
+        if (
+            self.topology is not None and self.faults is not None
+            and self.topology.n_replicas != 3
+        ):
+            raise ValueError(
+                "fault schedules cover the paper's 3 DCs; a composed "
+                "topology must place exactly 3 replicas"
+            )
+        if self.lean and (
+            self.faults is not None or self.topology is not None
+            or self.gossip is not None or self.durability is not None
+            or self.audit
+        ):
+            raise ValueError(
+                "lean fidelity serves the flat throughput path only: no "
+                "faults/topology/gossip/durability, audit=False"
+            )
+
+    # -- identity ---------------------------------------------------------
+
+    def _key(self) -> tuple:
+        f = self.faults
+        faults_key = None if f is None else (
+            f.up.tobytes(), f.link.tobytes(), f.crash.tobytes(), f.up.shape
+        )
+        return (
+            self.level, self.n_ops, self.n_clients, self.n_resources,
+            self.merge_every, self.delta, self.duot_cap, self.batch_size,
+            self.seed, self.audit, self.ingest, self.lean, self.topology,
+            self.n_shards, faults_key, self.schedule_unit, self.gossip,
+            self.durability, self.pending_cap, self.use_devices,
+        )
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, EngineConfig):
+            return NotImplemented
+        return self._key() == other._key()
+
+    def __hash__(self) -> int:
+        return hash(self._key())
+
+    # -- derived plan -----------------------------------------------------
+
+    @property
+    def n_replicas(self) -> int:
+        return 3 if self.topology is None else self.topology.n_replicas
+
+    @property
+    def shard_clients(self) -> int:
+        return self.n_clients // self.n_shards
+
+    @property
+    def shard_resources(self) -> int:
+        return self.n_resources // self.n_shards
+
+    @property
+    def shard_ops(self) -> int:
+        return self.n_ops // self.n_shards
+
+    def resolved_pending_cap(self, w_read_fraction: float) -> int:
+        """The pending-ring bound this replay runs with.
+
+        Fault schedules hold a partition backlog (a write's slot stays
+        live until every replica has it), so the faulty path defaults
+        to a generous write-count-scaled cap; the all-up paths size the
+        ring to the batch.
+        """
+        from repro.engine.stream import cadence_plan
+
+        sub, _, _, _ = cadence_plan(
+            self.level, self.shard_ops, self.batch_size,
+            self.merge_every, self.delta,
+        )
+        if self.pending_cap is not None:
+            return self.pending_cap
+        if self.faults is not None:
+            n_writes = int(round((1.0 - w_read_fraction) * self.shard_ops))
+            return max(256, 2 * sub, n_writes + 1)
+        return max(128, 2 * sub)

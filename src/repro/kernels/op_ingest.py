@@ -397,10 +397,152 @@ def op_ingest_tiled(packed: _Packed, *, block: int = 256):
     return out[:b, OCC], out[:b, RAW], out[:b, FLOOR]
 
 
+# -- fused closed-form path (the CPU hot path) -------------------------------
+
+
+def _seg_prefix_max(seg: Array, val: Array, n_segs: int) -> Array:
+    """Exclusive per-segment prefix max of ``val`` in stream order.
+
+    ``out[i] = max(val[j] for j < i with seg[j] == seg[i])`` (identity
+    0) in O(B log B): sort the packed key ``seg * B + i`` — the sorted
+    key *is* the permutation (``key % B``) and the segment run map
+    (``key // B``), so no argsort is ever materialized — then run a
+    segmented inclusive max scan over the runs and shift it exclusive.
+    Caller must guarantee ``n_segs * B < 2**31`` (the packed key stays
+    int32); :func:`repro.kernels.ops.op_ingest` checks this before
+    selecting the fused path.
+    """
+    b = seg.shape[0]
+    assert n_segs * b < 2 ** 31, "packed segment key overflows int32"
+    key = seg * jnp.int32(b) + jnp.arange(b, dtype=jnp.int32)
+    skey = jax.lax.sort(key)
+    perm = skey % jnp.int32(b)
+    sseg = skey // jnp.int32(b)
+    start = jnp.concatenate(
+        [jnp.ones((1,), bool), sseg[1:] != sseg[:-1]]
+    )
+    sval = val[perm]
+
+    def combine(a, c):
+        va, fa = a
+        vc, fc = c
+        return jnp.where(fc, vc, jnp.maximum(va, vc)), fa | fc
+
+    incl, _ = jax.lax.associative_scan(combine, (sval, start))
+    exc = jnp.where(
+        start, 0, jnp.concatenate([jnp.zeros((1,), val.dtype), incl[:-1]])
+    )
+    return jnp.zeros((b,), val.dtype).at[perm].set(exc)
+
+
+def op_ingest_fused(
+    client: Array,
+    replica: Array,
+    resource: Array,
+    is_write: Array,
+    g0: Array,
+    raw0: Array,
+    floor0: Array,
+    *,
+    n_clients: int,
+    n_replicas: int,
+    n_resources: int,
+    op_index: Array | None = None,
+    apply_index: Array | None = None,
+    pend_version: Array | None = None,
+    pend_resource: Array | None = None,
+    pend_live: Array | None = None,
+    pend_apply: Array | None = None,
+) -> tuple[Array, Array, Array]:
+    """Closed-form ingest: O(B·R + B log B), no O(B²) pair sweep.
+
+    Bit-identical to :func:`repro.kernels.ref.op_ingest_ref` — the three
+    reductions are per-segment prefix counts/maxima, so they collapse to
+
+      * ``occ``   — an exclusive per-resource running count of writes
+        (one ``(B, R)`` cumsum);
+      * the coordinator-visible and session-floor maxima — exclusive
+        per-(replica, resource) / per-(client, resource) prefix maxima
+        via :func:`_seg_prefix_max`;
+      * the cadence-visible and pending-ring maxima — an activation
+        *timeline*: batch op indices are affine, so write ``j`` (pending
+        slot ``q``) becomes visible to every op from batch-local index
+        ``max(j+1, apply_index[j] - op_index[0])`` (``pend_apply[q] -
+        op_index[0]``) on; scattering versions at their activation rows
+        of a ``(B+1, R)`` grid and running a cumulative max down the op
+        axis serves every op its visible per-resource max.
+
+    Preconditions (checked by the dispatch in ``repro.kernels.ops``):
+    ``op_index`` affine (``op_index[i] == op_index[0] + i`` — every
+    store-layer batch is), ids in range, and the packed segment keys
+    fit int32.  Unlike the tiled/Pallas paths this needs the static
+    state sizes, but touches no padded pair blocks at all.
+    """
+    c = jnp.asarray(client, jnp.int32)
+    p = jnp.asarray(replica, jnp.int32)
+    r = jnp.asarray(resource, jnp.int32)
+    is_w = jnp.asarray(is_write, bool)
+    g0 = jnp.asarray(g0, jnp.int32)
+    raw0 = jnp.asarray(raw0, jnp.int32)
+    floor0 = jnp.asarray(floor0, jnp.int32)
+    b = c.shape[0]
+    R = n_resources
+
+    # occ: exclusive per-resource prefix write count.
+    onehot = (
+        (r[:, None] == jnp.arange(R, dtype=jnp.int32)[None, :])
+        & is_w[:, None]
+    ).astype(jnp.int32)
+    exc_cnt = jnp.cumsum(onehot, axis=0) - onehot
+    occ = jnp.take_along_axis(exc_cnt, r[:, None], axis=1)[:, 0]
+
+    ver_w = g0 + occ + 1
+    verw = jnp.where(is_w, ver_w, 0)
+
+    # Coordinator visibility: per-(replica, resource) prefix max.
+    coord_max = _seg_prefix_max(p * jnp.int32(R) + r, verw, n_replicas * R)
+
+    raw = jnp.maximum(raw0, coord_max)
+    if apply_index is not None or pend_apply is not None:
+        step0 = jnp.asarray(op_index, jnp.int32)[0]
+        rows = jnp.arange(1, b + 1, dtype=jnp.int32)
+        timeline = jnp.zeros((b + 1, R), jnp.int32)
+        if apply_index is not None:
+            act = jnp.clip(
+                jnp.maximum(rows, jnp.asarray(apply_index, jnp.int32) - step0),
+                0, b,
+            )
+            timeline = timeline.at[act, r].max(verw)
+        if pend_apply is not None:
+            pact = jnp.clip(
+                jnp.asarray(pend_apply, jnp.int32) - step0, 0, b
+            )
+            res_safe = jnp.where(
+                jnp.asarray(pend_live, bool),
+                jnp.asarray(pend_resource, jnp.int32),
+                R,
+            )
+            timeline = timeline.at[pact, res_safe].max(
+                jnp.asarray(pend_version, jnp.int32), mode="drop"
+            )
+        seen = jax.lax.cummax(timeline, axis=0)
+        cad = seen[jnp.arange(b, dtype=jnp.int32), r]
+        raw = jnp.maximum(raw, cad)
+
+    # Session floor: per-(client, resource) prefix max of contributions.
+    contrib = jnp.where(is_w, ver_w, raw)
+    floor = jnp.maximum(
+        floor0,
+        _seg_prefix_max(c * jnp.int32(R) + r, contrib, n_clients * R),
+    )
+    return occ, raw, floor
+
+
 __all__ = [
     "pack_ops",
     "op_ingest_pallas",
     "op_ingest_tiled",
+    "op_ingest_fused",
     "op_ingest_ref",
     "NEVER",
 ]

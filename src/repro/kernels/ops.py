@@ -26,6 +26,38 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def resolve_op_ingest_impl(
+    impl: str | None,
+    *,
+    batch: int,
+    n_clients: int | None = None,
+    n_replicas: int | None = None,
+    n_resources: int | None = None,
+    affine_op_index: bool = False,
+) -> str:
+    """Resolve the ``op_ingest`` implementation for a call shape.
+
+    ``None``/``"auto"`` picks the fastest bit-identical path for the
+    backend: the Pallas kernel on TPU; on CPU the closed-form fused path
+    (O(B·R + B log B), no pair sweep) whenever the static state sizes
+    are known, its packed segment keys fit int32, and the caller
+    guarantees batch-affine op indices (``op_index[i] == op_index[0] +
+    i`` — every store-layer batch; without cadence inputs the indices
+    are irrelevant and fused is always safe); otherwise the tiled block
+    walk.  Exposed so the store layer can pre-resolve the impl and feed
+    the pending ring to the fused path directly.
+    """
+    if impl is not None and impl != "auto":
+        return impl
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    if None not in (n_clients, n_replicas, n_resources) and affine_op_index:
+        max_seg = max(n_clients, n_replicas) * n_resources
+        if max_seg * max(batch, 1) < 2 ** 31:
+            return "fused"
+    return "tiled"
+
+
 def op_ingest(
     client: jax.Array,     # (B,) int32
     replica: jax.Array,    # (B,) int32
@@ -44,6 +76,9 @@ def op_ingest(
     impl: str | None = None,
     block: int | None = None,
     interpret: bool | None = None,
+    n_clients: int | None = None,
+    n_replicas: int | None = None,
+    n_resources: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Batched op-ingestion prefixes ``(occ, raw, floor)``.
 
@@ -55,20 +90,58 @@ def op_ingest(
       * ``"pallas"`` — the tiled TPU kernel (O(B·block) memory);
       * ``"tiled"``  — the jnp ``lax.scan`` twin of the kernel, the
         fast path on CPU where Pallas runs interpreted;
+      * ``"fused"``  — the closed-form segmented-scan path (O(B·R +
+        B log B), no pair sweep) — needs the static state sizes
+        (``n_clients``/``n_replicas``/``n_resources``) and, when cadence
+        inputs are present, batch-affine ``op_index``;
       * ``"dense"``  — the O(B²) oracle (the PR-1 masks, kept as the
         fallback and differential baseline);
-      * ``None``     — "pallas" on accelerators, "tiled" on CPU.
+      * ``None``     — "pallas" on accelerators; on CPU the fused path
+        when eligible (see :func:`resolve_op_ingest_impl`), else tiled.
     """
     if impl is None or impl == "auto":
         # The Pallas kernel relies on TPU sequential-grid semantics
         # (cross steps read buffer rows published by earlier diagonal
-        # steps); on every other backend the jnp tile walk is the safe
-        # fast path.
-        impl = "pallas" if jax.default_backend() == "tpu" else "tiled"
+        # steps); on every other backend the jnp paths are the safe
+        # fast ones.  Auto only picks fused when the caller passed
+        # op_index itself (the store layer's batches are affine); the
+        # zeros fill below is NOT affine and would corrupt the fused
+        # activation transform.
+        impl = resolve_op_ingest_impl(
+            impl, batch=client.shape[0],
+            n_clients=n_clients, n_replicas=n_replicas,
+            n_resources=n_resources,
+            affine_op_index=(
+                op_index is not None
+                or (apply_index is None and pend_apply is None)
+            ),
+        )
+    had_op_index = op_index is not None
     if op_index is None and (
         apply_index is not None or pend_apply is not None
     ):
         op_index = jnp.zeros(client.shape, jnp.int32)
+    if impl == "fused":
+        if None in (n_clients, n_replicas, n_resources):
+            raise ValueError(
+                "op_ingest impl='fused' needs n_clients/n_replicas/"
+                "n_resources"
+            )
+        if not had_op_index and (
+            apply_index is not None or pend_apply is not None
+        ):
+            raise ValueError(
+                "op_ingest impl='fused' with cadence inputs needs a "
+                "batch-affine op_index"
+            )
+        return _oi.op_ingest_fused(
+            client, replica, resource, is_write, g0, raw0, floor0,
+            n_clients=n_clients, n_replicas=n_replicas,
+            n_resources=n_resources,
+            op_index=op_index, apply_index=apply_index,
+            pend_version=pend_version, pend_resource=pend_resource,
+            pend_live=pend_live, pend_apply=pend_apply,
+        )
     if impl == "dense":
         return _oi.op_ingest_ref(
             client, replica, resource, is_write, g0, raw0, floor0,

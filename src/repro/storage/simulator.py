@@ -19,6 +19,17 @@ Three coupled models produce every figure of the paper:
   * **Monetary** (Figs 14-15): measured traffic x Table-2 pricing via
     ``repro.core.cost_model`` (VM-hours from the throughput model's
     runtime, storage from the dataset + request counts).
+
+Every batched driver below — :func:`run_protocol`,
+:func:`run_protocol_geo`, :func:`run_protocol_sharded`,
+:func:`run_protocol_faulty`, and the adaptive control plane's telemetry
+precompute — is a thin wrapper over the **unified epoch engine**
+(:mod:`repro.engine`): one :class:`repro.engine.EngineConfig` per
+driver, one device-resident replay loop for all of them.  The wrappers
+are CI-gated bit-identical to their pre-unification outputs
+(``tests/test_engine_bridge.py``).  Only the reference *scalar* engine
+(:func:`run_protocol_scalar`) keeps its own one-op-per-step loop — it
+is the semantic baseline everything else is validated against.
 """
 
 from __future__ import annotations
@@ -36,13 +47,26 @@ from repro.core import cost_model, xstcc
 from repro.core import duot as duot_lib
 from repro.core import audit as audit_lib
 from repro.core.consistency import ConsistencyLevel
-from repro.core.replicated_store import (
-    DurabilityConfig, ReplicatedStore, merge_cadence,
+from repro.core.replicated_store import DurabilityConfig, merge_cadence
+from repro.engine import (
+    EngineConfig, EpochEngine, session_telemetry_runner,
 )
-from repro.gossip import DIGEST_BYTES
-from repro.gossip.scheduler import GossipConfig, gossip_pairs
+from repro.engine import results as engine_results
+from repro.engine import stream as engine_stream
+from repro.gossip.scheduler import GossipConfig
 from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
-from repro.storage.ycsb import PhasedWorkload, Workload, generate, generate_phased
+from repro.storage.ycsb import PhasedWorkload, Workload
+
+# Legacy names: the stream/cadence helpers moved to the engine package;
+# existing call sites (benchmarks, examples, tests) keep working.
+_attach_clients = engine_stream.attach_clients
+_op_stream = engine_stream.op_stream
+_op_stream_phased = engine_stream.op_stream_phased
+_OP_COLS = engine_stream.OP_COLS
+_cadence_plan = engine_stream.cadence_plan
+_batch_inputs = engine_stream.batch_inputs
+_fault_epoch_inputs = engine_stream.fault_epoch_inputs
+_clamp_apply_idx = engine_stream.clamp_apply_idx
 
 
 # ---------------------------------------------------------------------------
@@ -143,156 +167,8 @@ def throughput_model(
 
 
 # ---------------------------------------------------------------------------
-# Protocol-engine measurement (staleness / violations / severity)
+# Protocol-engine drivers: EngineConfig shims over repro.engine
 # ---------------------------------------------------------------------------
-
-
-def _attach_clients(
-    ops: dict[str, np.ndarray], n_ops: int, n_clients: int,
-    n_resources: int, seed: int, n_replicas: int = 3,
-) -> dict[str, np.ndarray]:
-    """Attach the client/mobility model to a generated op stream.
-
-    Replicas = the DCs (3 in the paper); a client's home replica is its
-    DC (``client % n_replicas``); reads go to the *nearest* replica
-    (home DC).  Client mobility (paper Fig. 2: Bob reconnects to
-    another server): 30% of ops hit one of the next two replicas in
-    ring order instead of the session's home.  The draws do not depend
-    on ``n_replicas``, so a geo topology with 3 protocol replicas sees
-    the byte-identical stream of the flat engine."""
-    rng = np.random.default_rng(seed + 1)
-    client = rng.integers(0, n_clients, n_ops).astype(np.int32)
-    move = rng.random(n_ops) < 0.30
-    offset = rng.integers(1, 3, n_ops)
-    home = (
-        (client % n_replicas + np.where(move, offset, 0)) % n_replicas
-    ).astype(np.int32)
-    return {
-        "client": client,
-        "kind": ops["kind"].astype(np.int32),
-        "resource": (ops["key"] % n_resources).astype(np.int32),
-        "home": home,
-    }
-
-
-def _op_stream(
-    w: Workload, n_ops: int, n_clients: int, n_resources: int, seed: int,
-    n_replicas: int = 3,
-) -> dict[str, np.ndarray]:
-    """The YCSB op stream shared by the batched and scalar engines."""
-    ops = generate(w, n_ops=n_ops, n_keys=n_resources, seed=seed)
-    return _attach_clients(
-        ops, n_ops, n_clients, n_resources, seed, n_replicas
-    )
-
-
-_OP_COLS = ("client", "kind", "resource", "home")
-
-
-def _cadence_plan(
-    level: ConsistencyLevel, n_ops: int, batch_size: int,
-    merge_every: int, delta: int,
-) -> tuple[int, int, int, bool]:
-    """(sub, rem, n_rounds, emulate) — the per-level batching plan.
-
-    Synchronous and timed levels emulate their merge cadence inside
-    ``batch_size``-op batches; untimed causal levels batch at their
-    real merge period (see :func:`run_protocol`).  Shared by the flat
-    and geo drivers so the twins cannot drift on cadence handling.
-    """
-    sync_every, _ = merge_cadence(level, merge_every, delta)
-    emulate = sync_every == 1 or level.is_timed
-    sub = batch_size if emulate else sync_every
-    sub = max(1, min(sub, n_ops))
-    n_rounds = n_ops // sub
-    rem = n_ops - n_rounds * sub
-    return sub, rem, n_rounds, emulate
-
-
-def _batch_inputs(
-    stream: dict[str, np.ndarray], store: ReplicatedStore,
-    sub: int, n_rounds: int, rem: int, emulate: bool,
-) -> tuple[dict[str, Any], dict[str, Any]]:
-    """(batched, tail) scan inputs for one stream under one plan.
-
-    Rounds carry their first op's global index (``step0``); the
-    emulated-cadence levels also carry the precomputed apply-point
-    schedule, sliced per round.  ``rem == 0`` still builds a one-op
-    dummy tail (the jitted runner ignores it).
-    """
-    batched = {
-        k: jnp.asarray(stream[k][: n_rounds * sub].reshape(n_rounds, sub))
-        for k in _OP_COLS
-    }
-    batched["step0"] = jnp.arange(n_rounds, dtype=jnp.int32) * sub
-    tail = {k: jnp.asarray(stream[k][-max(rem, 1):]) for k in _OP_COLS}
-    if emulate and store.sync_every > 1:
-        apply_idx = store.schedule_stream(
-            stream["client"], stream["home"], stream["kind"]
-        )
-        batched["apply_idx"] = apply_idx[: n_rounds * sub].reshape(
-            n_rounds, sub
-        )
-        tail["apply_idx"] = apply_idx[-max(rem, 1):]
-    return batched, tail
-
-
-@functools.lru_cache(maxsize=None)
-def _batched_runner(
-    level: ConsistencyLevel,
-    n_clients: int,
-    n_resources: int,
-    merge_every: int,
-    delta: int,
-    duot_cap: int,
-    sub: int,
-    rem: int,
-    emulate: bool,
-    ingest: str = "auto",
-) -> tuple[ReplicatedStore, Any]:
-    """(store, jitted engine) for one batched-protocol configuration.
-
-    Cached so repeat runs (benchmarks, figure sweeps over workloads and
-    thread counts) pay tracing/compilation once per configuration.  The
-    pending ring scales with the batch: up to a full batch of writes can
-    be in flight before the batch-boundary merge."""
-    store = ReplicatedStore(
-        3, n_clients, n_resources, level=level, merge_every=merge_every,
-        delta=delta, pending_cap=max(128, 2 * sub), duot_cap=duot_cap,
-        ingest=ingest,
-    )
-
-    def round_step(carry, ops, step0):
-        st, n_stale, n_viol, n_reads = carry
-        st, res = store.apply_batch(
-            st, client=ops["client"], replica=ops["home"],
-            resource=ops["resource"], kind=ops["kind"],
-            op_step0=step0 if emulate else None,
-            apply_index=ops.get("apply_idx"),
-        )
-        st, _ = store.merge(st)
-        is_read = ops["kind"] == duot_lib.READ
-        return (
-            st,
-            n_stale + jnp.sum(res.stale.astype(jnp.int32)),
-            n_viol + jnp.sum(res.violation.astype(jnp.int32)),
-            n_reads + jnp.sum(is_read.astype(jnp.int32)),
-        )
-
-    @jax.jit
-    def run(batched, tail):
-        carry = (store.init(), jnp.int32(0), jnp.int32(0), jnp.int32(0))
-        n_rounds = batched["client"].shape[0]
-
-        def step(carry, ops):
-            return round_step(carry, ops, ops["step0"]), None
-
-        carry, _ = jax.lax.scan(step, carry, batched)
-        if rem:
-            carry = round_step(carry, tail, jnp.int32(n_rounds * sub))
-        return carry
-
-    return store, run
 
 
 def run_protocol(
@@ -335,168 +211,17 @@ def run_protocol(
     (O(B·tile) tiled/Pallas path) or ``"dense"`` (the O(B²)-mask
     baseline) — bit-identical, benchmarked against each other in
     ``benchmarks/bench_protocol.py``.
+
+    This is the flat :class:`repro.engine.EngineConfig` instance of the
+    unified epoch engine — every feature knob left off.
     """
-    stream = _op_stream(w, n_ops, n_clients, n_resources, seed)
-    sub, rem, n_rounds, emulate = _cadence_plan(
-        level, n_ops, batch_size, merge_every, delta
+    config = EngineConfig(
+        level, n_ops=n_ops, n_clients=n_clients, n_resources=n_resources,
+        merge_every=merge_every, delta=delta, duot_cap=duot_cap,
+        seed=seed, batch_size=batch_size, audit=audit, ingest=ingest,
     )
-    store, run = _batched_runner(
-        level, n_clients, n_resources, merge_every, delta, duot_cap,
-        sub, rem, emulate, ingest,
-    )
-    # The emulated apply schedule depends only on the op sequence and
-    # the cadence: _batch_inputs computes it once, slices it per batch.
-    batched, tail = _batch_inputs(stream, store, sub, n_rounds, rem, emulate)
-    st, n_stale, n_viol, n_reads = run(batched, tail)
-
-    severity = 0.0
-    if audit:
-        res_audit = store.audit(st, delta=store.delta if store.delta else 0)
-        severity = float(res_audit.severity)
-    n_reads_f = max(1, int(n_reads))
-    return {
-        "staleness_rate": float(n_stale) / n_reads_f,
-        "violation_rate": float(n_viol) / n_reads_f,
-        "severity": severity,
-        "n_reads": int(n_reads),
-        "dropped_writes": int(st.cluster.pend_dropped),
-    }
-
-
-@functools.lru_cache(maxsize=None)
-def _geo_runner(
-    level: ConsistencyLevel,
-    n_clients: int,
-    n_resources: int,
-    merge_every: int,
-    delta: int,
-    duot_cap: int,
-    sub: int,
-    rem: int,
-    emulate: bool,
-    topology,
-    ingest: str = "auto",
-    gossip: GossipConfig | None = None,
-) -> tuple[ReplicatedStore, Any]:
-    """(store, jitted engine) for one region-aware configuration.
-
-    The geo twin of :func:`_batched_runner`: identical batching and
-    cadence emulation over ``topology.n_replicas`` replicas, but the
-    boundary merge is the two-tier :meth:`ReplicatedStore.merge_geo` —
-    same state bit-for-bit, plus the (G, G) delivery-traffic matrix —
-    and every scan step segment-sums read/staleness counts and
-    RTT-matrix latency by *client region*.  ``topology`` is hashable
-    (tuples all the way down), so it keys the cache like the level
-    does.
-
-    With ``gossip`` set (and ``cadence > 0``) the scheduled digest
-    exchange runs after the boundary merge; its repair deliveries and
-    digest payloads are attributed to *region pairs* (the exchanging
-    replicas' regions) so ``run_protocol_geo`` can bill them through
-    the egress matrix.  Hinted handoff is a fault-path feature and does
-    not apply here (the geo driver is all-up).  ``gossip=None``
-    compiles the exact pre-gossip trace.
-    """
-    P = topology.n_replicas
-    G = topology.n_regions
-    g_on = gossip is not None and gossip.enabled
-    store = ReplicatedStore(
-        P, n_clients, n_resources, level=level, merge_every=merge_every,
-        delta=delta, pending_cap=max(128, 2 * sub), duot_cap=duot_cap,
-        ingest=ingest,
-    )
-    client_reg = jnp.asarray(
-        topology.client_region_of(np.arange(n_clients)), jnp.int32
-    )
-    replica_reg = jnp.asarray(topology.regions(), jnp.int32)
-    rtt = jnp.asarray(topology.rtt(), jnp.float32)
-    all_up = jnp.ones((P,), bool)
-    all_conn = jnp.ones((P, P), bool)
-
-    def round_step(carry, ops, step0):
-        if g_on:
-            st, n_stale, n_viol, n_reads, traffic, reg, gx = carry
-            g_traffic, g_digest, g_ranges, g_gap = gx
-        else:
-            st, n_stale, n_viol, n_reads, traffic, reg = carry
-        st, res = store.apply_batch(
-            st, client=ops["client"], replica=ops["home"],
-            resource=ops["resource"], kind=ops["kind"],
-            op_step0=step0 if emulate else None,
-            apply_index=ops.get("apply_idx"),
-        )
-        st, _, tr = store.merge_geo(st, topology)
-        if g_on:
-            # Digest exchange between replica pairs, repair deliveries
-            # and digest payloads attributed to their region pair.
-            def do_gossip(s):
-                s2, tel = store.gossip_round(
-                    s, pairs=ops["pairs"], up=all_up, link=all_conn,
-                    n_ranges=gossip.n_ranges, impl=gossip.impl,
-                )
-                a, b = ops["pairs"][:, 0], ops["pairs"][:, 1]
-                ra, rb = replica_reg[a], replica_reg[b]
-                mi = jnp.arange(a.shape[0])
-                growth = tel["growth"]
-                v = tel["valid"].astype(jnp.int32)
-                zgg = jnp.zeros((G, G), jnp.int32)
-                gt = zgg.at[ra, rb].add(growth[mi, b])
-                gt = gt.at[rb, ra].add(growth[mi, a])
-                dg = zgg.at[ra, rb].add(v).at[rb, ra].add(v)
-                return s2, (gt, dg, jnp.sum(tel["ranges"]),
-                            tel["gap_repaired"])
-
-            def no_gossip(s):
-                zgg = jnp.zeros((G, G), jnp.int32)
-                return s, (zgg, zgg, jnp.int32(0), jnp.int32(0))
-
-            st, (gt, dg, gr, gg) = jax.lax.cond(
-                ops["gossip"], do_gossip, no_gossip, st
-            )
-            gx = (g_traffic + gt, g_digest + dg, g_ranges + gr, g_gap + gg)
-        is_read = ops["kind"] == duot_lib.READ
-        creg = client_reg[ops["client"]]
-        hreg = replica_reg[ops["home"]]
-        zi = jnp.zeros((G,), jnp.int32)
-        zf = jnp.zeros((G,), jnp.float32)
-        reg = (
-            reg[0] + zi.at[creg].add(res.stale.astype(jnp.int32)),
-            reg[1] + zi.at[creg].add(is_read.astype(jnp.int32)),
-            reg[2] + zf.at[creg].add(rtt[creg, hreg]),
-            reg[3] + zi.at[creg].add(1),
-        )
-        out = (
-            st,
-            n_stale + jnp.sum(res.stale.astype(jnp.int32)),
-            n_viol + jnp.sum(res.violation.astype(jnp.int32)),
-            n_reads + jnp.sum(is_read.astype(jnp.int32)),
-            traffic + tr,
-            reg,
-        )
-        return out + (gx,) if g_on else out
-
-    @jax.jit
-    def run(batched, tail):
-        z = jnp.int32(0)
-        zg = lambda dt: jnp.zeros((G,), dt)                   # noqa: E731
-        carry = (
-            store.init(), z, z, z, jnp.zeros((G, G), jnp.int32),
-            (zg(jnp.int32), zg(jnp.int32), zg(jnp.float32), zg(jnp.int32)),
-        )
-        if g_on:
-            zgg = jnp.zeros((G, G), jnp.int32)
-            carry = carry + ((zgg, zgg, z, z),)
-        n_rounds = batched["client"].shape[0]
-
-        def step(carry, ops):
-            return round_step(carry, ops, ops["step0"]), None
-
-        carry, _ = jax.lax.scan(step, carry, batched)
-        if rem:
-            carry = round_step(carry, tail, jnp.int32(n_rounds * sub))
-        return carry
-
-    return store, run
+    engine = EpochEngine(config)
+    return engine_results.assemble_flat(config, engine.replay(w))
 
 
 def run_protocol_geo(
@@ -577,172 +302,16 @@ def run_protocol_geo(
         from repro.geo.topology import PAPER_TOPOLOGY
 
         topology = PAPER_TOPOLOGY
-    P = topology.n_replicas
-    g_on = gossip is not None and gossip.enabled
-    stream = _op_stream(w, n_ops, n_clients, n_resources, seed, P)
-    sub, rem, n_rounds, emulate = _cadence_plan(
-        level, n_ops, batch_size, merge_every, delta
+    config = EngineConfig(
+        level, n_ops=n_ops, n_clients=n_clients, n_resources=n_resources,
+        merge_every=merge_every, delta=delta, duot_cap=duot_cap,
+        seed=seed, batch_size=batch_size, audit=audit, ingest=ingest,
+        topology=topology, gossip=gossip, durability=recovery,
     )
-    store, run = _geo_runner(
-        level, n_clients, n_resources, merge_every, delta, duot_cap,
-        sub, rem, emulate, topology, ingest, gossip,
+    engine = EpochEngine(config)
+    return engine_results.assemble_geo(
+        config, engine.replay(w), w, cfg, pricing
     )
-    batched, tail = _batch_inputs(stream, store, sub, n_rounds, rem, emulate)
-    if g_on:
-        n_epochs_total = n_rounds + (1 if rem else 0)
-        g_active, g_pairs = gossip_pairs(
-            P, n_epochs_total, gossip,
-            topology if gossip.peer == "nearest" else None,
-        )
-        batched["gossip"] = jnp.asarray(g_active[:n_rounds])
-        batched["pairs"] = jnp.asarray(g_pairs[:n_rounds])
-        tail["gossip"] = jnp.asarray(g_active[n_epochs_total - 1])
-        tail["pairs"] = jnp.asarray(g_pairs[n_epochs_total - 1])
-        st, n_stale, n_viol, n_reads, traffic, reg, gx = run(batched, tail)
-    else:
-        st, n_stale, n_viol, n_reads, traffic, reg = run(batched, tail)
-
-    severity = 0.0
-    if audit:
-        res_audit = store.audit(st, delta=store.delta if store.delta else 0)
-        severity = float(res_audit.severity)
-    n_reads_f = max(1, int(n_reads))
-    stale_rate = float(n_stale) / n_reads_f
-
-    # -- region-pair billing (eq. 8 over the measured traffic matrix) -------
-    events = np.asarray(traffic, np.int64)
-    prop_gb = events * cfg.row_bytes / 1e9
-    off = ~np.eye(topology.n_regions, dtype=bool)
-    inter_gb = float(prop_gb[off].sum())
-    intra_gb = float(np.diag(prop_gb).sum())
-    # One pricebook per run: a topology that pins a custom egress
-    # matrix wins, but the default paper-derived matrix follows a
-    # ``pricing`` override so the geo and scalar bills (and the
-    # instance/storage terms) never mix providers.
-    egress = topology.egress
-    if egress == cost_model.EgressMatrix.from_pricing(
-        topology.n_regions, cost_model.PAPER_PRICING
-    ):
-        egress = cost_model.EgressMatrix.from_pricing(
-            topology.n_regions, pricing
-        )
-    network_geo = cost_model.cost_network_matrix(
-        traffic_gb=prop_gb, egress=egress
-    )
-    network_scalar = cost_model.cost_network(
-        inter_dc_gb=inter_gb, intra_dc_gb=intra_gb, pricing=pricing
-    )
-    thr, _ = throughput_model(level, w, 64, cfg, stale_rate)
-    runtime_s = n_ops / thr
-    bill = cost_model.cost_all(
-        nb_instances=cfg.n_nodes,
-        runtime_hours=runtime_s / 3600.0,
-        hosted_gb=cfg.total_data_gb_after_replication,
-        months=runtime_s / (30 * 24 * 3600.0),
-        io_requests=float(n_ops) * level.write_acks(cfg.replication_factor),
-        inter_dc_gb=inter_gb,
-        intra_dc_gb=intra_gb,
-        pricing=pricing,
-    )
-    cost = bill.as_dict()
-    cost["network_geo"] = network_geo
-    cost["network_scalar"] = network_scalar
-    cost["total_geo"] = cost["instances"] + cost["storage"] + network_geo
-
-    gossip_info = None
-    if g_on:
-        g_traffic, g_digest, g_ranges, g_gap = (np.asarray(x) for x in gx)
-        k_eff = max(1, min(gossip.n_ranges, n_resources))
-        repair_mat_gb = g_traffic.astype(np.float64) * cfg.row_bytes / 1e9
-        digest_mat_gb = (
-            g_digest.astype(np.float64) * k_eff * DIGEST_BYTES / 1e9
-        )
-        gossip_network_geo = cost_model.cost_network_matrix(
-            traffic_gb=repair_mat_gb + digest_mat_gb, egress=egress
-        )
-        cost["gossip_network_geo"] = gossip_network_geo
-        cost["total_geo"] += gossip_network_geo
-        gossip_info = {
-            "cadence": gossip.cadence,
-            "repair_events": g_traffic.tolist(),
-            "repair_gb": float(repair_mat_gb.sum()),
-            "digest_gb": float(digest_mat_gb.sum()),
-            "ranges_diffed": int(g_ranges),
-            "gap_repaired": int(g_gap),
-            "peer": gossip.peer,
-        }
-
-    durability_info = None
-    if recovery is not None and recovery.enabled:
-        # Steady-state durable-I/O model (all-up driver, host-side
-        # only): every write applies at all P replicas, snapshots
-        # persist the inter-marker working set capped at the key count.
-        n_epochs_total = n_rounds + (1 if rem else 0)
-        se = recovery.snapshot_every
-        n_snaps = n_epochs_total // se if se > 0 else 0
-        n_writes = int((stream["kind"] == 1).sum())
-        wal_records_pp = n_writes if recovery.wal else 0
-        per_snap = (
-            min(n_resources, -(-n_writes // n_snaps)) if n_snaps else 0
-        )
-        snap_cells_pp = per_snap * n_snaps
-        per_region = np.bincount(
-            topology.regions(), minlength=topology.n_regions
-        )
-        dur_mat_gb = np.diag(
-            (snap_cells_pp + wal_records_pp) * per_region
-            * cfg.row_bytes / 1e9
-        )
-        durability_network_geo = cost_model.cost_network_matrix(
-            traffic_gb=dur_mat_gb, egress=egress
-        )
-        cost["durability_network_geo"] = durability_network_geo
-        cost["total_geo"] += durability_network_geo
-        cost["durability_storage"] = cost_model.cost_storage(
-            hosted_gb=3 * n_resources * cfg.row_bytes / 1e9,
-            months=runtime_s / (30 * 24 * 3600.0),
-            io_requests=float((snap_cells_pp + wal_records_pp) * P),
-            pricing=pricing,
-        )
-        durability_info = {
-            "snapshot_every": se,
-            "wal": recovery.wal,
-            "snapshots": n_snaps,
-            "snapshot_cells": snap_cells_pp * P,
-            "wal_records": wal_records_pp * P,
-            "durable_gb": float(dur_mat_gb.sum()),
-            "durable_gb_by_region": np.diag(dur_mat_gb).tolist(),
-        }
-
-    reg_stale, reg_reads, reg_lat, reg_ops = (np.asarray(x) for x in reg)
-    result = {
-        "staleness_rate": stale_rate,
-        "violation_rate": float(n_viol) / n_reads_f,
-        "severity": severity,
-        "n_reads": int(n_reads),
-        "dropped_writes": int(st.cluster.pend_dropped),
-        "n_regions": topology.n_regions,
-        "traffic_events": events.tolist(),
-        "propagation_gb": prop_gb.tolist(),
-        "mean_latency_ms": float(reg_lat.sum() / max(1, reg_ops.sum())),
-        "per_region": {
-            "reads": reg_reads.tolist(),
-            "stale": reg_stale.tolist(),
-            "ops": reg_ops.tolist(),
-            "staleness_rate": (
-                reg_stale / np.maximum(1, reg_reads)
-            ).tolist(),
-            "mean_latency_ms": (
-                reg_lat / np.maximum(1, reg_ops)
-            ).tolist(),
-        },
-        "cost": cost,
-    }
-    if gossip_info is not None:
-        result["gossip"] = gossip_info
-    if durability_info is not None:
-        result["durability"] = durability_info
-    return result
 
 
 def run_protocol_sharded(
@@ -784,414 +353,14 @@ def run_protocol_sharded(
             f"n_clients={n_clients}, n_resources={n_resources}, and "
             f"n_ops={n_ops} must all be divisible by n_shards={n_shards}"
         )
-    s_clients = n_clients // n_shards
-    s_resources = n_resources // n_shards
-    s_ops = n_ops // n_shards
-
-    sync_every, _ = merge_cadence(level, merge_every, delta)
-    emulate = sync_every == 1 or level.is_timed
-    sub = batch_size if emulate else sync_every
-    sub = max(1, min(sub, s_ops))
-    n_rounds = s_ops // sub
-    rem = s_ops - n_rounds * sub
-
-    store, run = _batched_runner(
-        level, s_clients, s_resources, merge_every, delta, duot_cap,
-        sub, rem, emulate, ingest,
+    config = EngineConfig(
+        level, n_ops=n_ops, n_clients=n_clients, n_resources=n_resources,
+        merge_every=merge_every, delta=delta, duot_cap=duot_cap,
+        seed=seed, batch_size=batch_size, audit=audit, ingest=ingest,
+        n_shards=n_shards, use_devices=use_devices,
     )
-
-    batched_shards, tail_shards = [], []
-    for s in range(n_shards):
-        stream = _op_stream(w, s_ops, s_clients, s_resources, seed + s)
-        batched = {
-            k: stream[k][: n_rounds * sub].reshape(n_rounds, sub)
-            for k in _OP_COLS
-        }
-        batched["step0"] = np.arange(n_rounds, dtype=np.int32) * sub
-        tail = {k: stream[k][-max(rem, 1):] for k in _OP_COLS}
-        if emulate and store.sync_every > 1:
-            apply_idx = np.asarray(store.schedule_stream(
-                stream["client"], stream["home"], stream["kind"]
-            ))
-            batched["apply_idx"] = apply_idx[: n_rounds * sub].reshape(
-                n_rounds, sub
-            )
-            tail["apply_idx"] = apply_idx[-max(rem, 1):]
-        batched_shards.append(batched)
-        tail_shards.append(tail)
-
-    stack = lambda dicts: {                                   # noqa: E731
-        k: jnp.asarray(np.stack([d[k] for d in dicts]))
-        for k in dicts[0]
-    }
-    batched_s, tail_s = stack(batched_shards), stack(tail_shards)
-
-    devices = jax.devices()
-    if use_devices and n_shards > 1 and len(devices) >= n_shards:
-        # One tenant group per device: lay the shard axis out over a 1-D
-        # mesh; XLA partitions the vmapped program along it.
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec
-
-        mesh = Mesh(np.asarray(devices[:n_shards]), ("shard",))
-        sharding = NamedSharding(mesh, PartitionSpec("shard"))
-        put = functools.partial(jax.device_put, device=sharding)
-        batched_s = jax.tree.map(put, batched_s)
-        tail_s = jax.tree.map(put, tail_s)
-
-    st, n_stale, n_viol, n_reads = jax.vmap(run)(batched_s, tail_s)
-
-    severity = 0.0
-    if audit:
-        sev = []
-        for s in range(n_shards):
-            shard_st = jax.tree.map(lambda x, i=s: x[i], st)
-            sev.append(float(
-                store.audit(shard_st, delta=store.delta or 0).severity
-            ))
-        severity = float(np.mean(sev))
-    n_reads_total = int(jnp.sum(n_reads))
-    return {
-        "staleness_rate": float(jnp.sum(n_stale)) / max(1, n_reads_total),
-        "violation_rate": float(jnp.sum(n_viol)) / max(1, n_reads_total),
-        "severity": severity,
-        "n_reads": n_reads_total,
-        "dropped_writes": int(jnp.sum(st.cluster.pend_dropped)),
-        "n_shards": n_shards,
-        "per_shard": {
-            "stale": np.asarray(n_stale).tolist(),
-            "viol": np.asarray(n_viol).tolist(),
-            "reads": np.asarray(n_reads).tolist(),
-        },
-    }
-
-
-@functools.lru_cache(maxsize=None)
-def _faulty_runner(
-    level: ConsistencyLevel,
-    n_clients: int,
-    n_resources: int,
-    merge_every: int,
-    delta: int,
-    duot_cap: int,
-    sub: int,
-    rem: int,
-    emulate: bool,
-    pending_cap: int,
-    ingest: str = "auto",
-    gossip: GossipConfig | None = None,
-    recovery: DurabilityConfig | None = None,
-    crashes: bool = False,
-) -> tuple[ReplicatedStore, Any]:
-    """(store, jitted engine) for one failure-scenario configuration.
-
-    The faulty twin of :func:`_batched_runner`: identical batching and
-    cadence emulation, but every round carries its epoch's availability
-    masks — a heal-time anti-entropy pass, down-replica failover for
-    the epoch's ops, an emulation clamp while faults are active, and a
-    *masked* boundary merge whose propagation deliveries are metered.
-    With an all-up schedule every one of those is the identity, so the
-    run is bit-identical to :func:`run_protocol`.
-
-    ``gossip`` (a hashable :class:`repro.gossip.GossipConfig`) layers
-    the continuous anti-entropy pass on top: hinted-handoff enqueue on
-    faulty epochs / drain on heal (``hint_cap > 0``) and the scheduled
-    digest-exchange repair round (``cadence > 0``), each metered into an
-    extra gossip carry.  ``gossip=None`` compiles the exact pre-gossip
-    trace — none of the gossip branches exist in the jaxpr, which is
-    what the CI bit-identity gate leans on.
-
-    Kept as a deliberate twin rather than folding :func:`run_protocol`
-    into it: the all-up driver is the throughput benchmark's hot path
-    (``bench_protocol``) and must stay free of mask plumbing, cond'd
-    anti-entropy, and event metering.  The CI fault smoke
-    (``bench_faults --check``) and
-    ``test_faulty_all_up_bit_identical_to_run_protocol`` police the
-    twins against drifting apart.
-
-    ``recovery`` (a hashable
-    :class:`repro.core.replicated_store.DurabilityConfig`) switches on
-    the durability layer — periodic snapshot markers and, with ``wal``,
-    per-epoch applied-delta journaling; ``crashes`` compiles the
-    crash-event path (amnesiac state loss at the crash epoch, snapshot/
-    WAL restore + peer bootstrap at the rejoin epoch).  Both default
-    off, in which case neither branch exists in the jaxpr — the same
-    bit-identity contract the gossip knobs honor.
-    """
-    g_on = gossip is not None and gossip.enabled
-    h_on = gossip is not None and gossip.handoff
-    d_on = recovery is not None and recovery.enabled
-    w_on = d_on and recovery.wal
-    rx_on = d_on or crashes
-    boot_ranges = recovery.bootstrap_ranges if recovery is not None else 8
-    boot_impl = recovery.impl if recovery is not None else None
-    store = ReplicatedStore(
-        3, n_clients, n_resources, level=level, merge_every=merge_every,
-        delta=delta, pending_cap=pending_cap, duot_cap=duot_cap,
-        ingest=ingest, hint_cap=gossip.hint_cap if gossip else 0,
-        durability=recovery if d_on else None,
-    )
-
-    def round_step(carry, ops, step0, width):
-        if rx_on:
-            rx = carry[-1]
-            carry = carry[:-1]
-            (crash_n, wal_rep, rows_lost, snap_read,
-             boot_cells, boot_pend, boot_events) = rx
-        if gossip is not None:
-            st, n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail, gx = carry
-            (g_deliv, g_ranges, g_pairs, g_gap,
-             h_enq, h_drop, h_deliv) = gx
-        else:
-            st, n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = carry
-        up, conn = ops["up"], ops["conn"]
-        if crashes:
-            # Crash epoch: the replica's volatile state dies *before*
-            # anything else happens this epoch; what survives is the
-            # store's durability layer (snapshot + WAL).
-            def do_crash(s):
-                return store.crash(s, ops["crash"])
-
-            def no_crash(s):
-                z = jnp.int32(0)
-                return s, {"wal_replayed": z, "snap_read": z,
-                           "rows_lost": z}
-
-            st, cinfo = jax.lax.cond(
-                ops["crash"].any(), do_crash, no_crash, st
-            )
-            crash_n = crash_n + jnp.sum(ops["crash"].astype(jnp.int32))
-            wal_rep = wal_rep + cinfo["wal_replayed"]
-            rows_lost = rows_lost + cinfo["rows_lost"]
-            snap_read = snap_read + cinfo["snap_read"]
-            # Rejoin epoch: pull stale ranges from the nearest live
-            # holder before the replica serves anything.
-            def do_boot(s):
-                s2, tel = store.bootstrap(
-                    s, targets=ops["rejoin"], up=up, link=conn,
-                    n_ranges=boot_ranges, impl=boot_impl,
-                )
-                return s2, (
-                    jnp.sum(tel["cells"]), jnp.sum(tel["pend"]),
-                    jnp.sum(tel["valid"].astype(jnp.int32)),
-                )
-
-            def no_boot(s):
-                z = jnp.int32(0)
-                return s, (z, z, z)
-
-            st, (bc, bp, be) = jax.lax.cond(
-                ops["rejoin"].any(), do_boot, no_boot, st
-            )
-            boot_cells = boot_cells + bc
-            boot_pend = boot_pend + bp
-            boot_events = boot_events + be
-        if w_on:
-            # Applied copies at the start of the epoch (post-recovery):
-            # the epoch's growth is what each replica journals.
-            applied0 = jnp.sum(
-                st.cluster.pend_applied.astype(jnp.int32), axis=0
-            )
-        if h_on:
-            # Heal epoch: targeted hint deliveries front-run the full
-            # anti-entropy pass — drained hints shrink its backlog.
-            st, hd = jax.lax.cond(
-                ops["heal"],
-                lambda s: store.drain_hints(s, up=up, link=conn),
-                lambda s: (s, jnp.zeros((3,), jnp.int32)),
-                st,
-            )
-            h_deliv = h_deliv + hd
-        # Heal epoch: reconcile the backlog along the newly-available
-        # links (Δ=0 full catch-up) before serving this epoch's ops.
-        st, ev = jax.lax.cond(
-            ops["heal"],
-            lambda s: store.anti_entropy(s, up=up, link=conn),
-            lambda s: (s, jnp.int32(0)),
-            st,
-        )
-        ae_ev = ae_ev + ev
-        # Ops whose home replica is down fail over to the next live
-        # replica in ring order (the serving router's failover).
-        home = avail_lib.reroute_ops(ops["home"], up)
-        n_fail = n_fail + jnp.sum((home != ops["home"]).astype(jnp.int32))
-        # While a fault is active, the closed-form cadence's "applied
-        # everywhere at the apply index" assumption is wrong — defer
-        # pending-ring visibility to the real masked merges.
-        end = step0 + width
-        st = st._replace(pend_apply=jnp.where(
-            ops["faulty"], jnp.maximum(st.pend_apply, end), st.pend_apply
-        ))
-        if w_on:
-            # Ring slots claimed by this batch's writes overwrite their
-            # old applied bits; snapshot them so the epoch's journal
-            # growth counts every applied copy, not the net of the sum.
-            pre_bits = st.cluster.pend_applied
-        st, res = store.apply_batch(
-            st, client=ops["client"], replica=home,
-            resource=ops["resource"], kind=ops["kind"],
-            op_step0=step0 if emulate else None,
-            apply_index=ops.get("apply_idx"),
-        )
-        if h_on:
-            # Writes served during a fault leave hints for the replicas
-            # the coordinator could not reach this epoch.
-            def enq(s):
-                return store.enqueue_hints(
-                    s, slot=res.slot, version=res.version,
-                    kind=ops["kind"], home=home, conn=conn,
-                )
-
-            z = jnp.int32(0)
-            st, ne, nd = jax.lax.cond(
-                ops["faulty"], enq, lambda s: (s, z, z), st
-            )
-            h_enq = h_enq + ne
-            h_drop = h_drop + nd
-        st, _, ev = store.merge_faulty(st, up=up, link=conn)
-        prop_ev = prop_ev + ev
-        if g_on:
-            # Scheduled digest exchange: diff range digests with the
-            # epoch's peers, repair only the stale ranges.
-            def do_gossip(s):
-                s2, tel = store.gossip_round(
-                    s, pairs=ops["pairs"], up=up, link=conn,
-                    n_ranges=gossip.n_ranges, impl=gossip.impl,
-                )
-                return s2, (
-                    jnp.sum(tel["growth"]),
-                    jnp.sum(tel["ranges"]),
-                    jnp.sum(tel["valid"].astype(jnp.int32)),
-                    tel["gap_repaired"],
-                )
-
-            def no_gossip(s):
-                z = jnp.int32(0)
-                return s, (z, z, z, z)
-
-            st, (gd, gr, gp, gg) = jax.lax.cond(
-                ops["gossip"], do_gossip, no_gossip, st
-            )
-            g_deliv = g_deliv + gd
-            g_ranges = g_ranges + gr
-            g_pairs = g_pairs + gp
-            g_gap = g_gap + gg
-        if w_on:
-            # Journal each replica's applied deltas for this epoch (new
-            # coordinator copies + merge/gossip deliveries).  Recycled
-            # slots destroyed their applied bits mid-epoch; add those
-            # back so the journal measures gross applies, not the net
-            # movement of the column sums.
-            is_w = ops["kind"] == duot_lib.WRITE
-            lost = jnp.sum(
-                pre_bits[res.slot].astype(jnp.int32)
-                * is_w[:, None].astype(jnp.int32),
-                axis=0,
-            )
-            growth = jnp.maximum(
-                jnp.sum(st.cluster.pend_applied.astype(jnp.int32), axis=0)
-                - applied0 + lost, 0,
-            )
-            st = store.wal_append(st, growth)
-        if d_on and recovery.snapshot_every > 0:
-            # Periodic snapshot marker: persist applied state, truncate
-            # the journals (cells billed via DuraState.snap_rows).
-            st = jax.lax.cond(
-                ops["snap"],
-                lambda s: store.snapshot(s)[0],
-                lambda s: s,
-                st,
-            )
-        is_read = ops["kind"] == duot_lib.READ
-        out = (
-            st,
-            n_stale + jnp.sum(res.stale.astype(jnp.int32)),
-            n_viol + jnp.sum(res.violation.astype(jnp.int32)),
-            n_reads + jnp.sum(is_read.astype(jnp.int32)),
-            ae_ev, prop_ev, n_fail,
-        )
-        if gossip is not None:
-            gx = (g_deliv, g_ranges, g_pairs, g_gap, h_enq, h_drop, h_deliv)
-            out = out + (gx,)
-        if rx_on:
-            rx = (crash_n, wal_rep, rows_lost, snap_read,
-                  boot_cells, boot_pend, boot_events)
-            out = out + (rx,)
-        if gossip is not None:
-            # Per-round repair telemetry rides the scan's ys.
-            return out, (gd if g_on else jnp.int32(0),
-                         gr if g_on else jnp.int32(0),
-                         gg if g_on else jnp.int32(0))
-        return out, None
-
-    @jax.jit
-    def run(batched, tail):
-        z = jnp.int32(0)
-        carry = (store.init(), z, z, z, z, z, z)
-        if gossip is not None:
-            carry = carry + ((z, z, z, z, z, z,
-                              jnp.zeros((3,), jnp.int32)),)
-        if rx_on:
-            carry = carry + ((z, z, z, z, z, z, z),)
-        n_rounds = batched["client"].shape[0]
-
-        def step(carry, ops):
-            return round_step(carry, ops, ops["step0"], sub)
-
-        carry, per_round = jax.lax.scan(step, carry, batched)
-        if rem:
-            carry, _ = round_step(carry, tail, jnp.int32(n_rounds * sub), rem)
-        return (carry, per_round) if gossip is not None else carry
-
-    return store, run
-
-
-def _fault_epoch_inputs(
-    schedule, n_rounds: int, rem: int, crashes: bool = False,
-) -> tuple[Any, dict[str, np.ndarray], dict[str, np.ndarray]]:
-    """(schedule, per-round mask arrays, tail mask arrays).
-
-    ``crashes`` adds the crash-event and rejoin masks; they are only
-    threaded when the runner compiled the crash path, so crash-free
-    runs scan over exactly the pre-crash input structure.
-    """
-    n_epochs = n_rounds + (1 if rem else 0)
-    schedule = schedule.slice(n_epochs)
-    conn = schedule.closure()
-    faulty = schedule.faulty()
-    heals = schedule.heals()
-    per_round = {
-        "up": schedule.up[:n_rounds],
-        "conn": conn[:n_rounds],
-        "faulty": faulty[:n_rounds],
-        "heal": heals[:n_rounds],
-    }
-    t = n_epochs - 1
-    tail = {
-        "up": schedule.up[t],
-        "conn": conn[t],
-        "faulty": faulty[t],
-        "heal": heals[t],
-    }
-    if crashes:
-        crash = schedule.crashes()
-        rejoin = schedule.rejoins()
-        per_round["crash"] = crash[:n_rounds]
-        per_round["rejoin"] = rejoin[:n_rounds]
-        tail["crash"] = crash[t]
-        tail["rejoin"] = rejoin[t]
-    return schedule, per_round, tail
-
-
-def _clamp_apply_idx(
-    apply_idx: np.ndarray, faulty: np.ndarray, sub: int, n_ops: int,
-) -> np.ndarray:
-    """Defer emulated apply points to end-of-epoch in faulty epochs."""
-    out = np.asarray(apply_idx, np.int32).copy()
-    for t in np.flatnonzero(faulty):
-        lo = t * sub
-        hi = min(n_ops, lo + sub)
-        out[lo:hi] = np.maximum(out[lo:hi], hi)
-    return out
+    engine = EpochEngine(config)
+    return engine_results.assemble_sharded(config, engine.replay(w))
 
 
 def run_protocol_faulty(
@@ -1228,7 +397,7 @@ def run_protocol_faulty(
     batch size) instead anchors the schedule in *op-index* space, so one
     schedule describes the same outage window for every level: round
     ``t`` takes the masks of schedule epoch ``t·sub // schedule_unit``.
-    Per epoch the driver
+    Per epoch the engine
 
       * runs the heal-time **anti-entropy pass** when connectivity
         gained an edge (Δ=0 masked reconciliation, deliveries metered
@@ -1287,300 +456,28 @@ def run_protocol_faulty(
             f"n_clients={n_clients}, n_resources={n_resources}, and "
             f"n_ops={n_ops} must all be divisible by n_shards={n_shards}"
         )
-    s_clients = n_clients // n_shards
-    s_resources = n_resources // n_shards
-    s_ops = n_ops // n_shards
-
-    sync_every, _ = merge_cadence(level, merge_every, delta)
-    emulate = sync_every == 1 or level.is_timed
-    sub = batch_size if emulate else sync_every
-    sub = max(1, min(sub, s_ops))
-    n_rounds = s_ops // sub
-    rem = s_ops - n_rounds * sub
-    if pending_cap is None:
-        n_writes = int(round((1.0 - w.read_fraction) * s_ops)) + 1
-        pending_cap = max(256, 2 * sub, n_writes)
-
     if schedule is None:
+        s_ops = n_ops // n_shards
+        _, rem, n_rounds, _ = engine_stream.cadence_plan(
+            level, s_ops, batch_size, merge_every, delta
+        )
         schedule = avail_lib.all_up(max(1, n_rounds + (1 if rem else 0)), 3)
     if schedule.n_replicas != 3:
         raise ValueError(
             f"schedule covers {schedule.n_replicas} replicas; the paper "
             "cluster has 3 DCs"
         )
-    crashes = schedule.has_crashes
-    d_on = recovery is not None and recovery.enabled
-    s_on = d_on and recovery.snapshot_every > 0
-    rx_on = d_on or crashes
-    if schedule_unit:
-        # Re-anchor the op-indexed schedule onto this level's rounds.
-        # Crash *events* fire once: only the first round mapped to a
-        # schedule epoch inherits its crash flags (coarser levels can
-        # map several rounds to one epoch).
-        starts = np.arange(n_rounds + (1 if rem else 0)) * sub
-        idx = np.minimum(starts // schedule_unit, schedule.n_epochs - 1)
-        first = np.zeros(idx.shape, bool)
-        first[0] = True
-        first[1:] = idx[1:] != idx[:-1]
-        schedule = avail_lib.FaultSchedule(
-            schedule.up[idx], schedule.link[idx],
-            crash=schedule.crashes()[idx] & first[:, None],
-        )
-    schedule, masks, tail_masks = _fault_epoch_inputs(
-        schedule, n_rounds, rem, crashes
+    config = EngineConfig(
+        level, n_ops=n_ops, n_clients=n_clients, n_resources=n_resources,
+        merge_every=merge_every, delta=delta, duot_cap=duot_cap,
+        seed=seed, batch_size=batch_size, audit=audit, ingest=ingest,
+        faults=schedule, schedule_unit=schedule_unit, gossip=gossip,
+        durability=recovery, pending_cap=pending_cap, n_shards=n_shards,
     )
-    n_epochs_total = n_rounds + (1 if rem else 0)
-    if gossip is not None:
-        g_active, g_pairs = gossip_pairs(3, n_epochs_total, gossip)
-        masks["gossip"] = g_active[:n_rounds]
-        masks["pairs"] = g_pairs[:n_rounds]
-        tail_masks["gossip"] = g_active[n_epochs_total - 1]
-        tail_masks["pairs"] = g_pairs[n_epochs_total - 1]
-    if s_on:
-        se = recovery.snapshot_every
-        snap = (np.arange(n_epochs_total) + 1) % se == 0
-        masks["snap"] = snap[:n_rounds]
-        tail_masks["snap"] = snap[n_epochs_total - 1]
-
-    store, run = _faulty_runner(
-        level, s_clients, s_resources, merge_every, delta, duot_cap,
-        sub, rem, emulate, pending_cap, ingest, gossip,
-        recovery if d_on else None, crashes,
+    engine = EpochEngine(config)
+    return engine_results.assemble_faulty(
+        config, engine.replay(w), w, cfg, pricing, _return_state
     )
-
-    batched_shards, tail_shards = [], []
-    for s in range(n_shards):
-        stream = _op_stream(w, s_ops, s_clients, s_resources, seed + s)
-        batched = {
-            k: stream[k][: n_rounds * sub].reshape(n_rounds, sub)
-            for k in _OP_COLS
-        }
-        batched["step0"] = np.arange(n_rounds, dtype=np.int32) * sub
-        tail = {k: stream[k][-max(rem, 1):] for k in _OP_COLS}
-        if emulate:
-            if store.sync_every > 1:
-                apply_idx = np.asarray(store.schedule_stream(
-                    stream["client"], stream["home"], stream["kind"]
-                ))
-            else:
-                # Synchronous levels: instant visibility in clean
-                # epochs, deferred to the masked merge under faults.
-                apply_idx = np.zeros(s_ops, np.int32)
-            full_faulty = np.concatenate(
-                [masks["faulty"],
-                 np.asarray([tail_masks["faulty"]]) if rem else
-                 np.zeros(0, bool)]
-            )
-            apply_idx = _clamp_apply_idx(apply_idx, full_faulty, sub, s_ops)
-            batched["apply_idx"] = apply_idx[: n_rounds * sub].reshape(
-                n_rounds, sub
-            )
-            tail["apply_idx"] = apply_idx[-max(rem, 1):]
-        batched.update(masks)
-        tail.update(tail_masks)
-        batched_shards.append(batched)
-        tail_shards.append(tail)
-
-    stack = lambda dicts: {                                   # noqa: E731
-        k: jnp.asarray(np.stack([d[k] for d in dicts]))
-        for k in dicts[0]
-    }
-    gx = rx = per_round = None
-    if n_shards > 1:
-        batched_s, tail_s = stack(batched_shards), stack(tail_shards)
-        out = jax.vmap(run)(batched_s, tail_s)
-        if gossip is not None:
-            out, per_round = out
-            # h_deliv (element 6) is a per-replica vector: sum over the
-            # shard axis only, keeping the by-replica attribution.
-            gx = tuple(int(jnp.sum(x)) for x in out[7][:6]) + (
-                np.asarray(jnp.sum(out[7][6], axis=0)),
-            )
-            per_round = tuple(
-                np.asarray(jnp.sum(x, axis=0)) for x in per_round
-            )
-        if rx_on:
-            rx = tuple(int(jnp.sum(x)) for x in out[-1])
-        st = out[0]
-        n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = (
-            int(jnp.sum(x)) for x in out[1:7]
-        )
-        dropped = int(jnp.sum(st.cluster.pend_dropped))
-    else:
-        b = {k: jnp.asarray(v) for k, v in batched_shards[0].items()}
-        t = {k: jnp.asarray(v) for k, v in tail_shards[0].items()}
-        out = run(b, t)
-        if gossip is not None:
-            out, per_round = out
-            gx = tuple(int(x) for x in out[7][:6]) + (
-                np.asarray(out[7][6]),
-            )
-            per_round = tuple(np.asarray(x) for x in per_round)
-        if rx_on:
-            rx = tuple(int(x) for x in out[-1])
-        st = out[0]
-        n_stale, n_viol, n_reads, ae_ev, prop_ev, n_fail = (
-            int(x) for x in out[1:7]
-        )
-        dropped = int(st.cluster.pend_dropped)
-
-    severity = 0.0
-    if audit:
-        if n_shards > 1:
-            sev = []
-            for s in range(n_shards):
-                shard_st = jax.tree.map(lambda x, i=s: x[i], st)
-                sev.append(float(
-                    store.audit(shard_st, delta=store.delta or 0).severity
-                ))
-            severity = float(np.mean(sev))
-        else:
-            severity = float(
-                store.audit(st, delta=store.delta or 0).severity
-            )
-
-    stale_rate = n_stale / max(1, n_reads)
-    viol_rate = n_viol / max(1, n_reads)
-
-    # -- eq. 8: the measured failure-path traffic joins the bill ----------
-    row = cfg.row_bytes
-    anti_entropy_gb = ae_ev * row / 1e9
-    propagation_gb = prop_ev * row / 1e9
-    gossip_gb = 0.0
-    if gossip is not None:
-        (g_deliv, g_ranges, g_pair_n, g_gap, h_enq, h_drop,
-         h_deliv_vec) = gx
-        h_deliv = int(h_deliv_vec.sum())
-        k_eff = max(1, min(gossip.n_ranges, s_resources))
-        digest_gb = g_pair_n * 2 * k_eff * DIGEST_BYTES / 1e9
-        repair_gb = (g_deliv + h_deliv) * row / 1e9
-        gossip_gb = digest_gb + repair_gb
-    # -- durability + crash recovery (eq. 8's storage/network split) ------
-    snapshot_gb = wal_gb = replay_gb = bootstrap_gb = 0.0
-    recovery_info = None
-    if rx_on:
-        (crash_n, wal_rep, rows_lost, snap_read,
-         boot_cells, boot_pend, boot_events) = rx
-        snap_rows = int(jnp.sum(st.dura.snap_rows)) if d_on else 0
-        wal_total = int(jnp.sum(st.dura.wal_total)) if d_on else 0
-        bk = max(1, min(
-            recovery.bootstrap_ranges if recovery is not None else 8,
-            s_resources,
-        ))
-        snapshot_gb = snap_rows * row / 1e9
-        wal_gb = wal_total * row / 1e9
-        replay_gb = (wal_rep + snap_read) * row / 1e9
-        bootstrap_gb = (
-            (boot_cells + boot_pend) * row
-            + boot_events * 2 * bk * DIGEST_BYTES
-        ) / 1e9
-        recovery_info = {
-            "crashes": crash_n,
-            "rejoins": boot_events,
-            "rows_lost": rows_lost,
-            "wal_replayed": wal_rep,
-            "snapshot_cells_read": snap_read,
-            "snapshot_cells": snap_rows,
-            "wal_records": wal_total,
-            "bootstrap_cells": boot_cells,
-            "bootstrap_pending": boot_pend,
-            "snapshot_gb": snapshot_gb,
-            "wal_gb": wal_gb,
-            "replay_gb": replay_gb,
-            "bootstrap_gb": bootstrap_gb,
-            # Crash-triggered traffic only (zero unless a crash fired).
-            "recovery_gb": bootstrap_gb + replay_gb,
-        }
-    thr, _ = throughput_model(level, w, 64, cfg, stale_rate)
-    runtime_s = n_ops / thr
-    inter_gb, intra_gb = traffic_gb(level, w, n_ops, cfg, stale_rate)
-    bill = cost_model.cost_all(
-        nb_instances=cfg.n_nodes,
-        runtime_hours=runtime_s / 3600.0,
-        hosted_gb=cfg.total_data_gb_after_replication,
-        months=runtime_s / (30 * 24 * 3600.0),
-        io_requests=float(n_ops) * level.write_acks(cfg.replication_factor),
-        inter_dc_gb=inter_gb + anti_entropy_gb + gossip_gb + bootstrap_gb,
-        intra_dc_gb=intra_gb + snapshot_gb + wal_gb + replay_gb,
-        pricing=pricing,
-    )
-    cost = bill.as_dict()
-    cost["anti_entropy_network"] = cost_model.cost_network(
-        inter_dc_gb=anti_entropy_gb, intra_dc_gb=0.0, pricing=pricing
-    )
-    if rx_on:
-        # The durable-media side of eq. 8: snapshot copies hosted for
-        # the run plus every marker/journal/restore I/O event.
-        cost["durability_storage"] = cost_model.cost_storage(
-            hosted_gb=(
-                (3 * s_resources * row / 1e9) * n_shards if d_on else 0.0
-            ),
-            months=runtime_s / (30 * 24 * 3600.0),
-            io_requests=float(
-                snap_rows + wal_total + wal_rep + snap_read
-            ) if d_on else float(0),
-            pricing=pricing,
-        )
-        cost["durability_network"] = cost_model.cost_network(
-            inter_dc_gb=bootstrap_gb,
-            intra_dc_gb=snapshot_gb + wal_gb + replay_gb,
-            pricing=pricing,
-        )
-    result: dict[str, Any] = {
-        "staleness_rate": stale_rate,
-        "violation_rate": viol_rate,
-        "severity": severity,
-        "n_reads": n_reads,
-        "dropped_writes": dropped,
-        "failovers": n_fail,
-        "anti_entropy_events": ae_ev,
-        "propagation_events": prop_ev,
-        "anti_entropy_gb": anti_entropy_gb,
-        "propagation_gb": propagation_gb,
-        "n_epochs": schedule.n_epochs,
-        "faulty_epochs": int(schedule.faulty().sum()),
-        "heal_epochs": int(schedule.heals().sum()),
-        "n_shards": n_shards,
-        "cost": cost,
-    }
-    if gossip is not None:
-        cost["gossip_network"] = cost_model.cost_network(
-            inter_dc_gb=gossip_gb, intra_dc_gb=0.0, pricing=pricing
-        )
-        pr_deliv, pr_ranges, pr_gap = per_round
-        result["gossip"] = {
-            "cadence": gossip.cadence,
-            "rounds": int(np.asarray(masks["gossip"]).sum())
-            + (int(bool(tail_masks["gossip"])) if rem else 0),
-            "pairs_exchanged": g_pair_n,
-            "ranges_diffed": g_ranges,
-            "repair_events": g_deliv + h_deliv,
-            "gap_repaired": g_gap,
-            "digest_gb": digest_gb,
-            "repair_gb": repair_gb,
-            "hints": {
-                "enqueued": h_enq,
-                "dropped": h_drop,
-                "delivered": h_deliv,
-                "delivered_by_replica": h_deliv_vec.tolist(),
-            },
-            "per_round": {
-                "deliveries": pr_deliv.tolist(),
-                "ranges_diffed": pr_ranges.tolist(),
-                "gap_repaired": pr_gap.tolist(),
-            },
-        }
-    if recovery_info is not None:
-        result["crash_epochs"] = np.flatnonzero(
-            schedule.crashes().any(axis=1)
-        ).tolist()
-        result["recovery"] = recovery_info
-    if _return_state:
-        # Final engine state for convergence checks (chaos harness);
-        # underscore keys so dict-equality gates never see them.
-        result["_state"] = st
-        result["_store"] = store
-    return result
 
 
 def run_protocol_scalar(
@@ -1701,66 +598,6 @@ def _scalar_runner(
 # ---------------------------------------------------------------------------
 
 
-def _op_stream_phased(
-    pw: PhasedWorkload, n_ops: int, n_clients: int, n_resources: int,
-    seed: int,
-) -> dict[str, np.ndarray]:
-    """Phase-shifting variant of :func:`_op_stream` (same client model)."""
-    ops = generate_phased(pw, n_ops=n_ops, n_keys=n_resources, seed=seed)
-    return _attach_clients(ops, n_ops, n_clients, n_resources, seed)
-
-
-@functools.lru_cache(maxsize=None)
-def _telemetry_runner(
-    level: ConsistencyLevel,
-    n_clients: int,
-    n_resources: int,
-    merge_every: int,
-    delta: int,
-    sub: int,
-    emulate: bool,
-) -> tuple[ReplicatedStore, Any]:
-    """(store, jitted engine) emitting per-client counts per sub-batch.
-
-    Same engine/cadence scheme as :func:`_batched_runner`, but each scan
-    step also segment-sums its stale/violation/read/write flags by
-    client — the per-session telemetry the adaptive control plane feeds
-    on.  The DUOT is skipped (``record=False``): adaptive runs report
-    measured rates and cost, not audit severity.
-    """
-    store = ReplicatedStore(
-        3, n_clients, n_resources, level=level, merge_every=merge_every,
-        delta=delta, pending_cap=max(128, 2 * sub), duot_cap=64,
-    )
-
-    @jax.jit
-    def run(batched):
-        def step(st, ops):
-            st, res = store.apply_batch(
-                st, client=ops["client"], replica=ops["home"],
-                resource=ops["resource"], kind=ops["kind"],
-                op_step0=ops["step0"] if emulate else None,
-                apply_index=ops.get("apply_idx"),
-                record=False,
-            )
-            st, _ = store.merge(st)
-            is_read = ops["kind"] == duot_lib.READ
-            c = ops["client"]
-            z = jnp.zeros((n_clients,), jnp.int32)
-            ys = (
-                z.at[c].add(res.stale.astype(jnp.int32)),
-                z.at[c].add(res.violation.astype(jnp.int32)),
-                z.at[c].add(is_read.astype(jnp.int32)),
-                z.at[c].add(jnp.logical_not(is_read).astype(jnp.int32)),
-            )
-            return st, ys
-
-        _, ys = jax.lax.scan(step, store.init(), batched)
-        return ys
-
-    return store, run
-
-
 def level_session_telemetry(
     level: ConsistencyLevel,
     stream: dict[str, np.ndarray],
@@ -1779,6 +616,12 @@ def level_session_telemetry(
     ``viol``, ``reads``, ``writes``.  ``len(stream)`` must be a multiple
     of ``epoch_size``, and ``epoch_size`` a multiple of the level's
     merge cadence (so epochs align with real merge boundaries).
+
+    The engine is the unified epoch engine in *telemetry* mode
+    (:func:`repro.engine.session_telemetry_runner`): the same round
+    step as every other driver, with per-client segment sums riding the
+    scan's ys and the DUOT skipped — adaptive runs report measured
+    rates and cost, not audit severity.
     """
     n_ops = len(stream["client"])
     sync_every, _ = merge_cadence(level, merge_every, delta)
@@ -1791,7 +634,7 @@ def level_session_telemetry(
         )
     n_sub = n_ops // sub
 
-    store, run = _telemetry_runner(
+    store, run = session_telemetry_runner(
         level, n_clients, n_resources, merge_every, delta, sub, emulate,
     )
     batched = {

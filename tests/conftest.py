@@ -10,3 +10,30 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+# The full suite compiles thousands of XLA programs in one process; the
+# LLVM JIT keeps each executable's code pages mapped, and when the
+# process approaches the kernel's vm.max_map_count (65530 by default)
+# further mmaps fail and the *next* backend_compile segfaults.  Bound
+# the map count by dropping jax's compilation caches between test
+# modules once it gets high — a rare, cheap recompile beats a
+# mid-suite SIGSEGV.
+_MAPS_HIGH_WATER = 40_000
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_memory_maps():
+    yield
+    try:
+        with open("/proc/self/maps") as f:
+            n_maps = sum(1 for _ in f)
+    except OSError:       # non-Linux: no map pressure signal, skip
+        return
+    if n_maps > _MAPS_HIGH_WATER:
+        import gc
+
+        import jax
+
+        jax.clear_caches()
+        gc.collect()

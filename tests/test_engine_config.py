@@ -1,0 +1,183 @@
+"""Property tests for the unified epoch engine's config composition.
+
+Two families of invariants:
+
+  * **Config identity** — :class:`repro.engine.EngineConfig` equality
+    and hashing are content-based (fault schedules compare by their
+    mask bytes, not object identity) and keyword-order independent, so
+    equal configs share one compiled runner via the engine's cache.
+
+  * **Disabled components are free** — a component left at its neutral
+    value (all-up fault schedule, ``GossipConfig(cadence=0)``,
+    single-region topology, no durability) must reproduce the *exact*
+    baseline protocol trace: staleness, violations, severity, and read
+    counts equal to the flat driver's, not merely close.
+"""
+
+import pytest
+
+from repro.core import availability as avail_lib
+from repro.core.consistency import ConsistencyLevel
+from repro.engine import EngineConfig, EpochEngine
+from repro.geo.topology import single_region
+from repro.gossip.scheduler import GossipConfig
+from repro.storage.simulator import (
+    run_protocol, run_protocol_faulty, run_protocol_geo,
+)
+from repro.storage.ycsb import WORKLOAD_A, WORKLOAD_B
+
+LEVELS = list(ConsistencyLevel)
+N_OPS = 1536
+PROTO_KEYS = ("staleness_rate", "violation_rate", "severity", "n_reads")
+
+
+def proto(result):
+    return {k: result[k] for k in PROTO_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# Config identity
+# ---------------------------------------------------------------------------
+
+
+def test_config_equality_is_keyword_order_independent():
+    g = GossipConfig(cadence=4, hint_cap=8)
+    f = avail_lib.replica_outage(12, 3, replica=2, start=3, stop=7)
+    a = EngineConfig(
+        ConsistencyLevel.X_STCC, n_ops=1024, gossip=g, faults=f, seed=3,
+    )
+    b = EngineConfig(
+        seed=3, faults=f, gossip=g, n_ops=1024,
+        level=ConsistencyLevel.X_STCC,
+    )
+    assert a == b
+    assert hash(a) == hash(b)
+
+
+def test_fault_schedule_compares_by_content():
+    a = EngineConfig(ConsistencyLevel.TCC, faults=avail_lib.all_up(8, 3))
+    b = EngineConfig(ConsistencyLevel.TCC, faults=avail_lib.all_up(8, 3))
+    assert a.faults is not b.faults
+    assert a == b and hash(a) == hash(b)
+    c = EngineConfig(
+        ConsistencyLevel.TCC,
+        faults=avail_lib.replica_outage(8, 3, replica=0, start=1, stop=2),
+    )
+    assert a != c
+
+
+def test_distinct_components_break_equality():
+    base = EngineConfig(ConsistencyLevel.CAUSAL)
+    assert base != EngineConfig(ConsistencyLevel.CAUSAL, lean=False, seed=1)
+    assert base != EngineConfig(ConsistencyLevel.CAUSAL, n_shards=2)
+    assert base != EngineConfig(
+        ConsistencyLevel.CAUSAL, gossip=GossipConfig(cadence=2),
+        faults=avail_lib.all_up(4, 3),
+    )
+
+
+def test_equal_configs_share_one_compiled_runner():
+    f = avail_lib.all_up(6, 3)
+    a = EngineConfig(ConsistencyLevel.X_STCC, n_ops=N_OPS, faults=f)
+    b = EngineConfig(ConsistencyLevel.X_STCC, n_ops=N_OPS,
+                     faults=avail_lib.all_up(6, 3))
+    ra = EpochEngine(a).runner(WORKLOAD_A)
+    rb = EpochEngine(b).runner(WORKLOAD_A)
+    assert ra is rb
+
+
+def test_invalid_compositions_rejected():
+    with pytest.raises(ValueError):
+        EngineConfig(ConsistencyLevel.X_STCC, n_shards=3, n_ops=1000)
+    with pytest.raises(ValueError):
+        EngineConfig(ConsistencyLevel.X_STCC, lean=True)   # audit=True
+    with pytest.raises(ValueError):
+        EngineConfig(
+            ConsistencyLevel.X_STCC, lean=True, audit=False,
+            faults=avail_lib.all_up(4, 3),
+        )
+    with pytest.raises(ValueError):
+        EngineConfig(
+            ConsistencyLevel.X_STCC, topology=single_region(4),
+            faults=avail_lib.all_up(4, 3),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Disabled components reproduce the exact baseline trace
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    return {
+        lv: proto(run_protocol(lv, WORKLOAD_A, n_ops=N_OPS))
+        for lv in LEVELS
+    }
+
+
+@pytest.mark.parametrize("level", LEVELS, ids=[lv.value for lv in LEVELS])
+def test_allup_faults_are_identity(level, baseline):
+    out = run_protocol_faulty(level, WORKLOAD_A, n_ops=N_OPS)
+    assert proto(out) == baseline[level]
+    assert out["dropped_writes"] == 0
+
+
+@pytest.mark.parametrize(
+    "level",
+    [ConsistencyLevel.X_STCC, ConsistencyLevel.CAUSAL,
+     ConsistencyLevel.QUORUM],
+    ids=lambda lv: lv.value,
+)
+def test_single_region_topology_is_identity(level, baseline):
+    out = run_protocol_geo(level, WORKLOAD_A, topology=single_region(3),
+                           n_ops=N_OPS)
+    assert proto(out) == baseline[level]
+
+
+def test_disabled_gossip_is_identity_under_faults():
+    schedule = avail_lib.replica_outage(10, 3, replica=1, start=2, stop=6)
+    lv = ConsistencyLevel.X_STCC
+    plain = run_protocol_faulty(lv, WORKLOAD_A, n_ops=N_OPS,
+                                schedule=schedule)
+    gated = run_protocol_faulty(
+        lv, WORKLOAD_A, n_ops=N_OPS, schedule=schedule,
+        gossip=GossipConfig(cadence=0, hint_cap=0),
+    )
+    assert proto(gated) == proto(plain)
+    for k in ("failovers", "anti_entropy_events", "propagation_events",
+              "anti_entropy_gb", "propagation_gb", "dropped_writes"):
+        assert gated[k] == plain[k], k
+    g = gated["gossip"]
+    assert g["repair_events"] == 0 and g["pairs_exchanged"] == 0
+
+
+def test_durability_none_keys_absent():
+    out = run_protocol_faulty(ConsistencyLevel.TCC, WORKLOAD_A, n_ops=N_OPS)
+    assert "recovery" not in out
+
+
+@pytest.mark.parametrize(
+    "level", [ConsistencyLevel.X_STCC, ConsistencyLevel.TCC],
+    ids=lambda lv: lv.value,
+)
+def test_lean_replay_within_staleness_gate(level):
+    """Lean fidelity (the bench fast path) stays inside the bench gate.
+
+    Lean replay drops the vector-clock scan and the dependency-gated
+    boundary merge for *emulated* levels; the cadence emulation already
+    pins apply points, so the measured rates must stay within the
+    benchmark's 0.5 % staleness-deviation budget of the exact path (at
+    the bench batch geometry they are bit-identical; this smaller
+    config tolerates the one known boundary-straddle corner).
+    """
+    w = WORKLOAD_B
+    exact = EpochEngine(EngineConfig(level, n_ops=N_OPS, audit=False))
+    lean = EpochEngine(
+        EngineConfig(level, n_ops=N_OPS, audit=False, lean=True)
+    )
+    a = exact.run(w)
+    b = lean.run(w)
+    assert a["n_reads"] == b["n_reads"]
+    assert abs(a["staleness_rate"] - b["staleness_rate"]) <= 0.005
+    assert abs(a["violation_rate"] - b["violation_rate"]) <= 0.005
