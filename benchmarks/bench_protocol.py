@@ -38,11 +38,19 @@ Rows (name, us_per_call, derived):
   protocol_lean_speedup_B4096_<LEVEL>   derived = lean/scalar ops/s
   protocol_lean_stale_dev_B4096_<LEVEL> derived = lean vs scalar
                                 staleness deviation (same 0.5% bar)
+  protocol_p99_<LEVEL>          derived = p99 staleness age in merge
+                                epochs (device-resident obs histograms)
+  protocol_severity_<LEVEL>     derived = p99 violation severity
+  protocol_obs_stale_dev_<LEVEL> derived = obs-on vs obs-off staleness
+                                deviation (bit-inert -> 0.0, same bar)
+  protocol_obs_overhead_B4096   derived = obs-on/obs-off wall-time
+                                ratio at B=4096 (gated <= 1.10)
 
 ``REPRO_BENCH_NOPS`` scales the stream (default 6000; CI smoke uses
 600).  ``python -m benchmarks.bench_protocol --check`` runs the suite,
 writes ``BENCH_PROTOCOL.json``, and exits non-zero unless the JSON is
-valid and every staleness deviation is <= 0.5%.
+valid, every staleness deviation is <= 0.5%, every obs percentile row
+is finite, and the obs overhead ratio (when measured) is <= 1.10.
 
 Timings are steady-state (first call compiles, timed calls reuse the
 cached jitted runner); the audit is excluded so the engines themselves
@@ -77,6 +85,8 @@ def run() -> None:
     from repro.core.consistency import ConsistencyLevel
     from repro.engine import jit_entries
     from repro.engine.stream import cadence_plan
+    from repro.obs.metrics import ObsConfig
+    from repro.obs.report import bench_rows
     from repro.storage.simulator import run_protocol, run_protocol_scalar
     from repro.storage.ycsb import WORKLOAD_A
 
@@ -97,14 +107,29 @@ def run() -> None:
         ops_b = N_OPS / (us_b / 1e6)
         ops_s = N_OPS / (us_s / 1e6)
         speedups.append(ops_b / ops_s)
-        emit(f"protocol_batched_{name}", us_b, f"{ops_b:.0f}")
-        emit(f"protocol_scalar_{name}", us_s, f"{ops_s:.0f}")
-        emit(f"protocol_speedup_{name}", us_b, f"{ops_b / ops_s:.2f}")
+        emit(f"protocol_batched_{name}", us_b, f"{ops_b:.0f}",
+             value=ops_b, unit="ops/s")
+        emit(f"protocol_scalar_{name}", us_s, f"{ops_s:.0f}",
+             value=ops_s, unit="ops/s")
+        emit(f"protocol_speedup_{name}", us_b, f"{ops_b / ops_s:.2f}",
+             value=ops_b / ops_s, unit="x")
         emit(f"protocol_stale_dev_{name}", 0.0, f"{_stale_dev(out_b, out_s):.4f}")
         _, rem, n_rounds, _ = cadence_plan(level, N_OPS, 128, 8, 24)
         emit(f"protocol_host_hops_{name}", 0.0, f"{hops:.0f}")
         emit(f"protocol_epochs_{name}", 0.0,
              f"{n_rounds + (1 if rem else 0)}")
+        # Observability plane: the same replay with obs histograms in
+        # the carry — p99 staleness/severity come off the device state,
+        # and the obs run's metrics must match the obs-off run's
+        # bit-exactly (the stale-dev gate covers the row).
+        us_o, out_o = time_call(
+            run_protocol, level, WORKLOAD_A, n_ops=N_OPS, audit=False,
+            obs=ObsConfig(), repeats=1,
+        )
+        for rname, val in bench_rows(name, out_o).items():
+            emit(rname, us_o, f"{val:.1f}", value=val, unit="epochs")
+        emit(f"protocol_obs_stale_dev_{name}", 0.0,
+             f"{_stale_dev(out_o, out_b):.4f}")
 
     geo = 1.0
     for s in speedups:
@@ -179,10 +204,34 @@ def run() -> None:
     else:
         emit(f"protocol_lean_skip_B{b_head}", 0.0, f"stream<{b_head}ops")
 
+    # -- obs overhead at the big-batch geometry ------------------------------
+    # The acceptance bar: recording every distribution device-side must
+    # cost < 10% of the replay at B=4096 (histogram accumulation is one
+    # O(B·n_bins) pass fused into the scan).
+    if N_OPS >= b_head:
+        n_ops = 6 * b_head
+        us_off, _ = time_call(
+            run_protocol, ConsistencyLevel.X_STCC, WORKLOAD_A,
+            n_ops=n_ops, batch_size=b_head, audit=False, repeats=3,
+        )
+        us_on, _ = time_call(
+            run_protocol, ConsistencyLevel.X_STCC, WORKLOAD_A,
+            n_ops=n_ops, batch_size=b_head, audit=False,
+            obs=ObsConfig(), repeats=3,
+        )
+        emit(f"protocol_obs_overhead_B{b_head}", us_on,
+             f"{us_on / us_off:.3f}", value=us_on / us_off, unit="x")
+    else:
+        emit(f"protocol_obs_skip_B{b_head}", 0.0, f"stream<{b_head}ops")
+
+
+OBS_OVERHEAD_BAR = 1.10  # obs-on wall time <= 110% of obs-off
+
 
 def check() -> int:
     """CI smoke: run, persist JSON, gate on metric consistency."""
     import json
+    import math
 
     run()
     path = write_json()
@@ -195,6 +244,24 @@ def check() -> int:
             bad.append((name, row["derived"]))
     if bad:
         print(f"stale deviation above {STALE_DEV_BAR:.3%}: {bad}",
+              file=sys.stderr)
+        return 1
+    # Obs percentile rows: present for every level, typed, finite.
+    bad_obs = []
+    for lv in LEVELS:
+        for kind in ("p99", "severity"):
+            name = f"protocol_{kind}_{lv}"
+            row = data.get(name)
+            v = row.get("value") if isinstance(row, dict) else None
+            if not isinstance(v, (int, float)) or not math.isfinite(v):
+                bad_obs.append((name, row))
+    overhead = data.get("protocol_obs_overhead_B4096")
+    if overhead is not None:
+        v = overhead.get("value")
+        if v is None or not math.isfinite(v) or v > OBS_OVERHEAD_BAR:
+            bad_obs.append(("protocol_obs_overhead_B4096", overhead))
+    if bad_obs:
+        print(f"obs rows missing/non-finite/over budget: {bad_obs}",
               file=sys.stderr)
         return 1
     print(f"check OK: {len(data)} rows -> {path}")

@@ -6,8 +6,9 @@ corrupts the trajectory for every later PR.  This gate pins the
 contract:
 
   * top level: a JSON object mapping row name → row;
-  * every row: an object with exactly ``us_per_call`` (non-negative
-    number) and ``derived`` (string);
+  * every row: an object with ``us_per_call`` (non-negative number) and
+    ``derived`` (string), optionally plus the typed pair ``value``
+    (finite number or null) and ``unit`` (string) — both or neither;
   * no row recorded an ``ERROR:`` marker (a suite crashed mid-run);
   * the protocol suite's headline rows are present — batched/scalar
     throughput, speedup, and staleness-deviation per consistency level
@@ -20,6 +21,7 @@ Run:  python -m benchmarks.check_schema [path]
 from __future__ import annotations
 
 import json
+import math
 import sys
 
 from benchmarks.common import RESULTS_JSON
@@ -49,9 +51,12 @@ def check(path=RESULTS_JSON) -> int:
     for name, row in data.items():
         if not isinstance(name, str) or not name:
             errors.append(f"row key {name!r} is not a non-empty string")
-        if not isinstance(row, dict) or set(row) != {"us_per_call", "derived"}:
+        keys = set(row) if isinstance(row, dict) else None
+        if keys not in ({"us_per_call", "derived"},
+                        {"us_per_call", "derived", "value", "unit"}):
             errors.append(
-                f"{name}: row must have exactly us_per_call+derived, "
+                f"{name}: row must have us_per_call+derived "
+                "(optionally +value+unit), "
                 f"got {sorted(row) if isinstance(row, dict) else row!r}"
             )
             continue
@@ -64,6 +69,19 @@ def check(path=RESULTS_JSON) -> int:
             )
         elif row["derived"].startswith("ERROR:"):
             errors.append(f"{name}: recorded a crash marker: {row['derived']}")
+        if "value" in row:
+            v = row["value"]
+            if v is not None and (
+                not isinstance(v, (int, float)) or isinstance(v, bool)
+                or not math.isfinite(v)
+            ):
+                errors.append(
+                    f"{name}: value must be a finite number or null, got {v!r}"
+                )
+            if not isinstance(row["unit"], str):
+                errors.append(
+                    f"{name}: unit must be a string, got {row['unit']!r}"
+                )
     missing = [name for name in REQUIRED if name not in data]
     if missing:
         errors.append(f"required protocol rows missing: {missing}")

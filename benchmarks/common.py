@@ -6,7 +6,14 @@ host; ``derived`` is the benchmark's headline metric (a figure-level
 quantity from the paper).  Every emitted row is also collected in
 :data:`RESULTS` so drivers can persist the run machine-readably
 (:func:`write_json` → ``BENCH_PROTOCOL.json`` at the repo root — the
-cross-PR perf trajectory)."""
+cross-PR perf trajectory).
+
+Rows additionally carry a typed ``value``/``unit`` pair next to the
+display string: ``value`` is the headline metric as a plain number
+(parsed from ``derived`` when it is numeric, or passed explicitly when
+the display string is composite, e.g. ``"3.2x @ B=4096"``), ``unit``
+names what it measures (``"ops/s"``, ``"epochs"``, ``"x"``).  Gates
+compare ``value`` — never re-parse the display string."""
 
 from __future__ import annotations
 
@@ -18,8 +25,9 @@ from typing import Callable
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 RESULTS_JSON = REPO_ROOT / "BENCH_PROTOCOL.json"
 
-# name -> {"us_per_call": float, "derived": str} for every emit() of the
-# process, in emission order (dicts preserve it).
+# name -> {"us_per_call": float, "derived": str, "value": float|None,
+# "unit": str} for every emit() of the process, in emission order
+# (dicts preserve it).
 RESULTS: dict[str, dict] = {}
 
 
@@ -33,11 +41,28 @@ def time_call(fn: Callable, *args, repeats: int = 1, **kw) -> tuple[float, objec
     return dt * 1e6, out
 
 
-def emit(name: str, us_per_call: float, derived) -> str:
+def emit(
+    name: str,
+    us_per_call: float,
+    derived,
+    *,
+    value: float | None = None,
+    unit: str = "",
+) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
+    if value is None and isinstance(derived, (int, float)) \
+            and not isinstance(derived, bool):
+        value = derived
+    if value is None:
+        try:
+            value = float(str(derived))
+        except ValueError:
+            value = None
     RESULTS[name] = {"us_per_call": round(us_per_call, 1),
-                     "derived": str(derived)}
+                     "derived": str(derived),
+                     "value": None if value is None else float(value),
+                     "unit": unit}
     return line
 
 

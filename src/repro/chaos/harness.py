@@ -15,6 +15,14 @@ same everything else), then
 
 :func:`run_chaos_suite` aggregates N seeds into one verdict — the CI
 gate runs it with >= 5 seeds.
+
+Pass ``obs=ObsConfig()`` to record the run's staleness/severity
+distributions device-side, and ``tracer=Tracer()`` to get the
+experiment as a timeline: every nemesis action (crash/outage/partition
+epochs), each invariant's verdict, and — with obs on — the per-epoch
+violation counts, including the **first violating epoch**, land as
+trace instants, so a failed chaos run pinpoints *when* it went wrong
+instead of reporting one pass/fail bit.
 """
 
 from __future__ import annotations
@@ -29,6 +37,7 @@ from repro.chaos.nemesis import random_gossip, random_schedule
 from repro.core.consistency import ConsistencyLevel
 from repro.core.replicated_store import DurabilityConfig
 from repro.gossip import GossipConfig
+from repro.obs.metrics import ObsConfig
 from repro.storage.simulator import run_protocol_faulty
 from repro.storage.ycsb import WORKLOAD_A, Workload
 
@@ -61,6 +70,24 @@ def _fleet_signature(state) -> dict[str, np.ndarray]:
     }
 
 
+def _trace_nemesis(tracer, schedule) -> None:
+    """The drawn schedule's actions, as trace instants on the epoch axis."""
+    crashes = np.asarray(schedule.crashes())
+    up = np.asarray(schedule.up)
+    link = np.asarray(schedule.link)
+    for t in range(schedule.n_epochs):
+        for r in np.flatnonzero(crashes[t]):
+            tracer.instant("nemesis.crash", epoch=t, replica=int(r))
+        down = np.flatnonzero(~up[t])
+        if down.size:
+            tracer.instant(
+                "nemesis.outage", epoch=t, replicas=down.tolist()
+            )
+        if not link[t].all():
+            cut = int((~link[t]).sum() - (~link[t].diagonal()).sum())
+            tracer.instant("nemesis.partition", epoch=t, cut_links=cut)
+
+
 def run_chaos(
     seed: int,
     *,
@@ -75,6 +102,8 @@ def run_chaos(
     p_outage: float = 0.10,
     p_partition: float = 0.08,
     quiet_tail: int = 3,
+    obs: ObsConfig | None = None,
+    tracer=None,
 ) -> dict[str, Any]:
     """One seeded chaos experiment; returns a verdict dict.
 
@@ -82,7 +111,16 @@ def run_chaos(
     :class:`~repro.gossip.GossipConfig` or ``None`` to pin it.  The
     verdict's ``ok`` is True iff the invariants held *and* the rebuilt
     fleet converged bit-exactly to the never-crashed twin.
+
+    ``obs`` threads the device-resident observability plane through the
+    crashed run (the twin stays obs-free — obs is bit-inert, so the
+    convergence check is unaffected) and adds ``first_violation_epoch``
+    to the verdict; ``tracer`` (a :class:`repro.obs.trace.Tracer`)
+    records nemesis actions, per-epoch violation counts, and each
+    invariant's outcome as trace events.
     """
+    from contextlib import nullcontext
+
     n_epochs = n_ops // batch_size + (1 if n_ops % batch_size else 0)
     schedule = random_schedule(
         n_epochs, n_replicas, seed=seed, p_crash=p_crash,
@@ -91,25 +129,63 @@ def run_chaos(
     )
     if gossip == "random":
         gossip = random_gossip(seed)
+    if tracer is not None:
+        tracer.instant(
+            "chaos.schedule", seed=seed, level=level.value,
+            n_epochs=n_epochs, n_replicas=n_replicas,
+            cadence=gossip.cadence if gossip is not None else 0,
+        )
+        _trace_nemesis(tracer, schedule)
+    span = tracer.span if tracer is not None else (
+        lambda name, **a: nullcontext()
+    )
     kw = dict(
         n_ops=n_ops, batch_size=batch_size, schedule=schedule,
-        recovery=recovery, gossip=gossip, audit=True,
+        recovery=recovery, gossip=gossip, audit=True, obs=obs,
         _return_state=True,
     )
-    res = run_protocol_faulty(level, w, **kw)
-    twin_kw = dict(kw, schedule=schedule.strip_crashes())
-    twin = run_protocol_faulty(level, w, **twin_kw)
+    with span("chaos.run", seed=seed):
+        res = run_protocol_faulty(level, w, **kw)
+    twin_kw = dict(kw, schedule=schedule.strip_crashes(), obs=None)
+    with span("chaos.twin", seed=seed):
+        twin = run_protocol_faulty(level, w, **twin_kw)
 
     crashed = schedule.has_crashes
     breaches = check_invariants(res, level, crashed=crashed)
 
+    first_violation = None
+    if obs is not None and obs.enabled:
+        ob = res["obs"]
+        first_violation = ob.get("first_violation_epoch")
+        if tracer is not None:
+            for t, v in enumerate(ob["per_round"]["viol"]):
+                if v:
+                    tracer.instant(
+                        "invariant.violations", epoch=t, count=int(v)
+                    )
+
     store = res["_store"]
-    sig = _fleet_signature(_quiesce(store, res["_state"]))
-    twin_sig = _fleet_signature(_quiesce(twin["_store"], twin["_state"]))
+    with span("chaos.quiesce"):
+        sig = _fleet_signature(_quiesce(store, res["_state"]))
+        twin_sig = _fleet_signature(
+            _quiesce(twin["_store"], twin["_state"])
+        )
     diverged = [
         k for k in sig if not np.array_equal(sig[k], twin_sig[k])
     ]
     converged = not diverged
+
+    if tracer is not None:
+        for name, ok in (
+            ("invariants", not breaches), ("convergence", converged),
+        ):
+            tracer.instant(
+                f"verdict.{name}", ok=ok, seed=seed,
+                **({"breaches": breaches} if name == "invariants"
+                   and breaches else {}),
+                **({"diverged": diverged} if name == "convergence"
+                   and diverged else {}),
+            )
 
     return {
         "seed": seed,
@@ -124,6 +200,7 @@ def run_chaos(
         "breaches": breaches,
         "converged": converged,
         "diverged_fields": diverged,
+        "first_violation_epoch": first_violation,
         "metrics": {
             k: res[k]
             for k in ("staleness_rate", "violation_rate", "severity",

@@ -19,6 +19,7 @@ from repro.core.availability import FaultSchedule
 from repro.core.consistency import ConsistencyLevel
 from repro.core.replicated_store import DurabilityConfig
 from repro.gossip.scheduler import GossipConfig
+from repro.obs.metrics import ObsConfig
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -39,6 +40,10 @@ class EngineConfig:
         crash-durability subsystems; ``None`` compiles neither;
       * ``n_shards`` — disjoint tenant shards vmapped along a leading
         axis (one device each when the host has them);
+      * ``obs`` — ``None`` for no observability state at all (the
+        default — the compiled trace is bit-identical to the pre-obs
+        engine), or a :class:`repro.obs.metrics.ObsConfig` to thread
+        the histogram/counter registry through the scan carry;
       * ``lean`` — fidelity switch: skip the vector-clock scan, the
         DUOT record, and the causal-dependency merge gate when the
         closed-form cadence emulation already carries visibility
@@ -70,6 +75,7 @@ class EngineConfig:
     durability: DurabilityConfig | None = None
     pending_cap: int | None = None
     use_devices: bool = True
+    obs: ObsConfig | None = None
 
     def __post_init__(self) -> None:
         if self.n_shards < 1:
@@ -121,7 +127,7 @@ class EngineConfig:
             self.merge_every, self.delta, self.duot_cap, self.batch_size,
             self.seed, self.audit, self.ingest, self.lean, self.topology,
             self.n_shards, faults_key, self.schedule_unit, self.gossip,
-            self.durability, self.pending_cap, self.use_devices,
+            self.durability, self.pending_cap, self.use_devices, self.obs,
         )
 
     def __eq__(self, other: object) -> bool:

@@ -33,6 +33,8 @@ from repro.core.replicated_store import DurabilityConfig, ReplicatedStore
 from repro.engine.config import EngineConfig
 from repro.engine import stream as stream_lib
 from repro.gossip.scheduler import GossipConfig, gossip_pairs
+from repro.kernels import ops as kernel_ops
+from repro.obs import metrics as obs_lib
 
 # Monotone counter of jit re-entries into compiled replays — the
 # "host hops per replay" the protocol bench reports.  One replay = one
@@ -64,6 +66,7 @@ def unified_runner(
     crashes: bool,
     faults_on: bool,
     telemetry: bool,
+    obs: obs_lib.ObsConfig | None = None,
 ) -> tuple[ReplicatedStore, Any]:
     """(store, jitted replay) for one engine configuration.
 
@@ -82,6 +85,11 @@ def unified_runner(
       ``recovery``    WAL journaling and snapshot markers;
       ``telemetry``   per-client count vectors per round (the adaptive
                       control plane's feed) instead of scalar sums;
+      ``obs``         the observability plane: the metric registry's
+                      histogram/counter state rides the scan carry
+                      (binned device-side via the ``ops.histogram``
+                      kernel) and per-epoch stale/violation counts ride
+                      the ys — still one jit entry per replay;
       ``lean``        skip the vector-clock scan, the DUOT record, and
                       the causal-dependency merge gate — the emulated
                       cadence's closed-form predicates already carry
@@ -103,6 +111,11 @@ def unified_runner(
     boot_impl = recovery.impl if recovery is not None else None
     P = topology.n_replicas if geo_on else 3
     G = topology.n_regions if geo_on else 0
+    o_on = obs is not None and obs.enabled
+    if o_on:
+        specs = obs_lib.build_metrics(obs, geo_on=geo_on, h_on=h_on)
+        ob_lo, ob_hi, n_op_metrics = obs_lib.batch_bounds(specs)
+        n_metrics = len(specs)
 
     store = ReplicatedStore(
         P, n_clients, n_resources, level=level, merge_every=merge_every,
@@ -266,7 +279,7 @@ def unified_runner(
         else:
             st, _ = store.merge(st)
         # -- gossip anti-entropy ----------------------------------------
-        gys = None
+        ys = {}
         if gx_on:
             # Scheduled digest exchange: diff range digests with the
             # epoch's peers, repair only the stale ranges.
@@ -305,7 +318,7 @@ def unified_runner(
                       "h_drop": gx["h_drop"] + nd,
                       "h_deliv": gx["h_deliv"] + hd}
             carry = {**carry, "gx": gx}
-            gys = (gd, gr, gg)
+            ys["gossip"] = (gd, gr, gg)
         elif ggx_on:
             # Geo flavor: repair deliveries and digest payloads are
             # attributed to the exchanging replicas' *region pair*.
@@ -372,7 +385,7 @@ def unified_runner(
         if telemetry:
             c = ops["client"]
             z = jnp.zeros((n_clients,), jnp.int32)
-            gys = (
+            ys["tel"] = (
                 z.at[c].add(res.stale.astype(jnp.int32)),
                 z.at[c].add(res.violation.astype(jnp.int32)),
                 z.at[c].add(is_read.astype(jnp.int32)),
@@ -398,9 +411,54 @@ def unified_runner(
                 reg[2] + zf.at[creg].add(rtt[creg, hreg]),
                 reg[3] + zi.at[creg].add(1),
             )}
-        return carry, gys
+        # -- observability plane ----------------------------------------
+        if o_on:
+            # Staleness age = the resource's post-merge write frontier
+            # minus the version actually served — the distribution
+            # whose upper tail the timed levels bound with Δ.  The same
+            # ages masked to audit-flagged reads are the violation
+            # severities.
+            ob = carry["obs"]
+            age = jnp.maximum(
+                st.cluster.global_version[ops["resource"]] - res.version,
+                0,
+            ).astype(jnp.float32)
+            rows = [age, age]
+            row_mask = [is_read, res.violation]
+            if geo_on:
+                rows.append(rtt[creg, hreg])
+                row_mask.append(is_read)
+            part = kernel_ops.histogram(
+                jnp.stack(rows),
+                lo=ob_lo, hi=ob_hi, n_bins=obs.n_bins,
+                mask=jnp.stack(
+                    [m.astype(jnp.int32) for m in row_mask]
+                ),
+                impl=obs.impl,
+            )
+            hist = ob["hist"].at[:n_op_metrics].add(part)
+            if h_on:
+                hist = hist.at[n_op_metrics].add(kernel_ops.histogram(
+                    st.hints.count.astype(jnp.float32),
+                    lo=0.0, hi=obs.depth_hi, n_bins=obs.n_bins,
+                    impl=obs.impl,
+                ))
+            e_stale = jnp.sum(res.stale.astype(jnp.int32))
+            e_viol = jnp.sum(res.violation.astype(jnp.int32))
+            c0 = ob["counters"]
+            n_reads = jnp.sum(is_read.astype(jnp.int32))
+            carry = {**carry, "obs": {"hist": hist, "counters": {
+                "ops": c0["ops"] + jnp.int32(width),
+                "reads": c0["reads"] + n_reads,
+                "writes": c0["writes"] + jnp.int32(width) - n_reads,
+                "stale": c0["stale"] + e_stale,
+                "viol": c0["viol"] + e_viol,
+                "epochs": c0["epochs"] + 1,
+            }}}
+            ys["obs"] = (e_stale, e_viol)
+        return carry, (ys or None)
 
-    has_ys = gx_on or telemetry
+    has_ys = gx_on or telemetry or o_on
 
     @jax.jit
     def run(batched, tail):
@@ -430,6 +488,11 @@ def unified_runner(
                 "crashes": z, "wal_replayed": z, "rows_lost": z,
                 "snap_read": z, "boot_cells": z, "boot_pend": z,
                 "boot_events": z,
+            }
+        if o_on:
+            carry["obs"] = {
+                "hist": jnp.zeros((n_metrics, obs.n_bins), jnp.int32),
+                "counters": {k: z for k in obs_lib.COUNTERS},
             }
         n_rounds = batched["client"].shape[0]
 
@@ -511,7 +574,7 @@ class EpochEngine:
             c.delta, c.duot_cap, sub, rem, emulate,
             c.resolved_pending_cap(w.read_fraction), c.ingest, c.lean,
             c.topology, c.gossip, c.durability if d_on else None,
-            crashes, c.faults is not None, False,
+            crashes, c.faults is not None, False, c.obs,
         )
 
     def prepare(self, w) -> dict[str, Any]:
@@ -692,6 +755,6 @@ def session_telemetry_runner(
             batched,
             {k: v[0] for k, v in batched.items()},  # unused dummy tail
         )
-        return ys
+        return ys["tel"]
 
     return store, run_telemetry

@@ -332,7 +332,7 @@ def assemble_faulty(
             total(gd["h_drop"]) if "h_drop" in gd else 0,
             h_deliv_vec,
         )
-        pr = prep["per_round"]
+        pr = prep["per_round"]["gossip"]
         if sharded:
             per_round = tuple(np.asarray(jnp.sum(x, axis=0)) for x in pr)
         else:
@@ -492,6 +492,78 @@ def assemble_faulty(
     return result
 
 
+def _obs_block(config: EngineConfig, prep: dict) -> dict[str, Any]:
+    """Summarize the final obs carry into the result's ``"obs"`` block.
+
+    Rebuilds the same static metric registry the compiled replay
+    recorded into (row order is a pure function of the config), then
+    renders histograms + percentile tables host-side.  Sharded runs sum
+    the per-shard histogram/counter stacks — integer counts, so the
+    fold is exact.  The per-round stale/violation series covers the
+    full scan rounds (the tail round's ys are discarded, matching the
+    gossip per-round telemetry).
+    """
+    from repro.obs import metrics as obs_lib
+
+    obs = config.obs
+    out = prep["out"]
+    sharded = config.n_shards > 1
+    hist = np.asarray(out["obs"]["hist"])
+    counters = {
+        k: int(jnp.sum(v)) if sharded else int(v)
+        for k, v in out["obs"]["counters"].items()
+    }
+    if sharded:
+        hist = hist.sum(axis=0)
+    h_on = (
+        config.gossip is not None and config.gossip.handoff
+        and config.faults is not None
+    )
+    specs = obs_lib.build_metrics(
+        obs, geo_on=config.topology is not None, h_on=h_on
+    )
+    block = obs_lib.summarize(obs, specs, hist, counters)
+    pr = prep.get("per_round")
+    if pr is not None and "obs" in pr:
+        e_stale, e_viol = pr["obs"]
+        es, ev = np.asarray(e_stale), np.asarray(e_viol)
+        if sharded:
+            es, ev = es.sum(axis=0), ev.sum(axis=0)
+        viol_rounds = np.flatnonzero(ev)
+        block["per_round"] = {
+            "stale": es.tolist(),
+            "viol": ev.tolist(),
+        }
+        block["first_violation_epoch"] = (
+            int(viol_rounds[0]) if viol_rounds.size else None
+        )
+    return block
+
+
+def _cost_attribution(result: dict[str, Any]) -> dict[str, float]:
+    """Re-key the assembled bill's eq. 8 terms by subsystem.
+
+    Every dollar here is already in ``result["cost"]`` — this is an
+    attribution view (merge propagation + anti-entropy vs gossip vs
+    WAL/snapshot durability vs base egress), not a new bill.  Configs
+    without a cost block (flat/sharded) attribute zeros.
+    """
+    cost = result.get("cost") or {}
+
+    def total(*keys: str) -> float:
+        return float(sum(cost.get(k, 0.0) for k in keys))
+
+    return {
+        "merge": total("anti_entropy_network"),
+        "gossip": total("gossip_network", "gossip_network_geo"),
+        "wal": total(
+            "durability_storage", "durability_network",
+            "durability_network_geo",
+        ),
+        "egress": total("network", "network_geo"),
+    }
+
+
 def assemble(
     engine,
     prep: dict,
@@ -503,11 +575,16 @@ def assemble(
     """Dispatch the replay output to its config's result shape."""
     config = engine.config if hasattr(engine, "config") else engine
     if config.faults is not None:
-        return assemble_faulty(
+        result = assemble_faulty(
             config, prep, w, cfg, pricing, _return_state
         )
-    if config.topology is not None:
-        return assemble_geo(config, prep, w, cfg, pricing)
-    if config.n_shards > 1:
-        return assemble_sharded(config, prep)
-    return assemble_flat(config, prep)
+    elif config.topology is not None:
+        result = assemble_geo(config, prep, w, cfg, pricing)
+    elif config.n_shards > 1:
+        result = assemble_sharded(config, prep)
+    else:
+        result = assemble_flat(config, prep)
+    if config.obs is not None and config.obs.enabled:
+        result["obs"] = _obs_block(config, prep)
+        result["obs"]["cost_attribution"] = _cost_attribution(result)
+    return result

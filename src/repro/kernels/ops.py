@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import digest_compare as _dc
 from repro.kernels import flash_attention as _fa
+from repro.kernels import histogram as _hg
 from repro.kernels import op_ingest as _oi
 from repro.kernels import placement_score as _pls
 from repro.kernels import policy_score as _ps
@@ -217,6 +218,69 @@ def digest_compare(
         out[:, _dc.A_BEHIND].astype(bool).reshape(lead),
         out[:, _dc.B_BEHIND].astype(bool).reshape(lead),
     )
+
+
+def histogram(
+    values: jax.Array,  # (B,) or (M, B) f32 — observation batches
+    *,
+    lo,                 # scalar or (M,) — bin range lower bound
+    hi,                 # scalar or (M,) — bin range upper bound
+    n_bins: int,
+    mask: jax.Array | None = None,  # same shape as values; None = all
+    impl: str | None = None,
+    block: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fixed-bin histograms of observation batches; ``(M, n_bins)``
+    int32 counts (``(n_bins,)`` for a 1-D batch).
+
+    Same contract as ``repro.kernels.ref.histogram_ref`` (bit-exact):
+    each row bins into ``clip(floor((v - lo) / width), 0, n_bins-1)``
+    — out-of-range observations saturate into the edge bins — and
+    masked-out observations are not counted.  ``impl`` selects the
+    implementation:
+
+      * ``"pallas"`` — the tiled TPU kernel (O(M·(block+n_bins))
+        memory, sequential accumulation over column tiles);
+      * ``"tiled"``  — the jnp ``lax.map`` twin of the kernel, the
+        fast path on CPU where Pallas runs interpreted;
+      * ``"dense"``  — the whole-array oracle (the (M, B, n_bins)
+        one-hot cube at once);
+      * ``None``     — "pallas" on accelerators, "tiled" on CPU.
+    """
+    if impl is None or impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "tiled"
+    one_d = values.ndim == 1
+    vals = jnp.atleast_2d(jnp.asarray(values, jnp.float32))
+    if mask is not None:
+        mask = jnp.atleast_2d(mask)
+    params = _hg.metric_params(lo, hi, n_bins)
+    if params.shape[0] == 1 and vals.shape[0] > 1:
+        params = jnp.broadcast_to(params, (vals.shape[0], 2))
+    if impl == "dense":
+        from repro.kernels import ref as kernel_ref
+
+        msk = (
+            jnp.ones(vals.shape, jnp.int32) if mask is None
+            else jnp.asarray(mask, jnp.int32)
+        )
+        out = kernel_ref.histogram_ref(vals, msk, params, n_bins=n_bins)
+    else:
+        block = max(1, min(block, vals.shape[1]))
+        vals, msk = _hg.pack_observations(vals, mask, block=block)
+        if impl == "tiled":
+            out = _hg.histogram_tiled(
+                vals, msk, params, n_bins=n_bins, block=block
+            )
+        elif impl == "pallas":
+            interpret = _on_cpu() if interpret is None else interpret
+            out = _hg.histogram_pallas(
+                vals, msk, params, n_bins=n_bins, block=block,
+                interpret=interpret,
+            )
+        else:
+            raise ValueError(f"unknown histogram impl: {impl!r}")
+    return out[0] if one_d else out
 
 
 def flash_attention(

@@ -436,3 +436,34 @@ def digest_compare_ref(
         (d_max > 0) | ((d_max == 0) & (d_sum > 0)) | tie
     )
     return differ, a_behind, b_behind
+
+
+def histogram_ref(
+    vals: Array,    # (M, B) f32 — observation batches, one row per metric
+    mask: Array,    # (M, B) int32 — 1 = count, 0 = inert
+    params: Array,  # (M, 2) f32 — [lo, 1/width] per metric row
+    *,
+    n_bins: int,
+) -> Array:
+    """Dense oracle of the metric-binning kernel.
+
+    Whole-array re-derivation of ``kernels.histogram.bin_tile``: bin
+    index ``clip(floor((v - lo) / width), 0, n_bins-1)`` (below-range
+    saturates into bin 0, at-or-above ``hi`` into the top bin), masked
+    one-hot counts summed over the observation axis — the full
+    ``(M, B, n_bins)`` cube the tiled paths never materialize.  The
+    index is the same elementwise f32 multiply + floor and the counts
+    are integer sums, so the oracle is bit-exact with the Pallas kernel
+    and its jnp twin (``tests/test_obs.py``).
+    """
+    vals = jnp.asarray(vals, jnp.float32)
+    mask = jnp.asarray(mask, jnp.int32)
+    params = jnp.asarray(params, jnp.float32)
+    lo = params[:, 0:1]
+    inv_w = params[:, 1:2]
+    idx = jnp.clip(
+        jnp.floor((vals - lo) * inv_w).astype(jnp.int32), 0, n_bins - 1
+    )
+    sel = jnp.arange(n_bins, dtype=jnp.int32)[None, None, :]
+    hit = (idx[:, :, None] == sel) & (mask[:, :, None] > 0)
+    return jnp.sum(hit.astype(jnp.int32), axis=1)

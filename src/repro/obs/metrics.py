@@ -1,0 +1,249 @@
+"""Typed metric registry for the device-resident observability plane.
+
+The unified epoch engine (``repro.engine.replay``) threads an ``obs``
+block through its scan carry: one ``(M, n_bins)`` int32 histogram
+matrix — one row per registered distribution metric — plus a small dict
+of int32 counters.  Everything here is shape bookkeeping *around* that
+state: which metrics a configuration records (:func:`build_metrics`),
+how their bin ranges pack into kernel params, and how the final carry
+summarizes into percentile tables (:func:`summarize`).  The binning
+itself is ``repro.kernels.ops.histogram`` (Pallas kernel / jnp twin /
+dense oracle, bit-exact), so a whole replay accumulates its
+distributions device-side in one jit entry.
+
+The registry is *static per configuration*: the metric row order is a
+pure function of :class:`ObsConfig` plus the engine's compile-time
+feature flags, so the scan carry layout never depends on data and the
+result epilogue can rebuild the same registry host-side.
+
+Distribution metrics (fixed row order):
+
+  ``staleness_age``       resource write frontier minus the served
+                          version, per read — the age distribution the
+                          timed-consistency papers bound (Δ sits on its
+                          upper tail);
+  ``violation_severity``  the same ages masked to reads the audit
+                          flags as violations — the paper's severity
+                          analysis, as a distribution;
+  ``read_latency_ms``     RTT of each read's (client region, serving
+                          replica region) pair — geo topologies only;
+  ``hint_depth``          per-replica hinted-handoff queue depth
+                          sampled each epoch — handoff + faults only.
+
+Host-side mirrors: :class:`HostHistogram` gives the serving tier the
+same bins/percentile semantics over numpy accumulators, and the
+``window_*`` primitives are the one ring-buffer implementation the
+policy controllers' telemetry windows are built from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+# Percentiles every summary/report renders, in order.
+PERCENTILES = (50.0, 90.0, 99.0)
+
+# Counter keys of the obs carry block, in registry order.
+COUNTERS = ("ops", "reads", "writes", "stale", "viol", "epochs")
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """The observability plane's knobs — hashable, content-keyed.
+
+    ``EngineConfig.obs`` holds one of these (default ``None``: the
+    engine compiles no obs state at all and its trace is bit-identical
+    to the pre-obs engine).  ``n_bins`` is shared by every metric row;
+    the ``*_hi`` bounds pick each metric's bin range (observations at
+    or above saturate into the top bin — the percentile floor, never an
+    overflow).  ``impl`` forwards to ``ops.histogram`` ("pallas" /
+    "tiled" / "dense"; ``None`` auto-selects per backend).
+    """
+
+    enabled: bool = True
+    n_bins: int = 64
+    age_hi: float = 1024.0
+    latency_hi_ms: float = 512.0
+    depth_hi: float = 1024.0
+    impl: str | None = None
+
+    def __post_init__(self) -> None:
+        if self.n_bins < 2:
+            raise ValueError(f"n_bins must be >= 2, got {self.n_bins}")
+        for name in ("age_hi", "latency_hi_ms", "depth_hi"):
+            if getattr(self, name) <= 0:
+                raise ValueError(f"{name} must be > 0")
+
+
+class MetricSpec(NamedTuple):
+    """One registered distribution metric (one histogram row)."""
+
+    name: str
+    lo: float
+    hi: float
+    per_op: bool   # True: one observation per op; False: per epoch state
+    mask: str      # which observations count (documentation only)
+
+
+def build_metrics(
+    obs: ObsConfig, *, geo_on: bool, h_on: bool,
+) -> tuple[MetricSpec, ...]:
+    """The metric registry of one engine configuration.
+
+    Deterministic row order — per-op metrics first (they bin the same
+    ``(B,)`` batch in one kernel call), then per-epoch state metrics —
+    so the scan carry and the host-side epilogue agree on layout.
+    """
+    specs = [
+        MetricSpec("staleness_age", 0.0, obs.age_hi, True, "reads"),
+        MetricSpec("violation_severity", 0.0, obs.age_hi, True,
+                   "violations"),
+    ]
+    if geo_on:
+        specs.append(MetricSpec(
+            "read_latency_ms", 0.0, obs.latency_hi_ms, True, "reads"
+        ))
+    if h_on:
+        specs.append(MetricSpec(
+            "hint_depth", 0.0, obs.depth_hi, False, "replicas"
+        ))
+    return tuple(specs)
+
+
+def batch_bounds(
+    specs: tuple[MetricSpec, ...],
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """(lo, hi, count) of the per-op metric rows, as kernel inputs."""
+    per_op = [s for s in specs if s.per_op]
+    lo = np.asarray([s.lo for s in per_op], np.float32)
+    hi = np.asarray([s.hi for s in per_op], np.float32)
+    return lo, hi, len(per_op)
+
+
+def summarize(
+    obs: ObsConfig,
+    specs: tuple[MetricSpec, ...],
+    hist: np.ndarray,          # (M, n_bins) int32 — final carry state
+    counters: dict[str, int],
+) -> dict:
+    """The per-run obs summary dict (the report/bench feed).
+
+    Percentiles use the cumulative-bin rank semantics of
+    ``repro.kernels.histogram.hist_percentile`` (lower bin edge, empty
+    histograms report ``lo`` so the bench gates stay finite).
+    """
+    hist = np.asarray(hist)
+    metrics = {}
+    for row, spec in enumerate(specs):
+        counts = hist[row]
+        width = (spec.hi - spec.lo) / obs.n_bins
+        entry = {
+            "lo": spec.lo,
+            "hi": spec.hi,
+            "n_bins": obs.n_bins,
+            "mask": spec.mask,
+            "count": int(counts.sum()),
+            "hist": counts.tolist(),
+        }
+        for q in PERCENTILES:
+            entry[f"p{q:g}"] = float(host_percentile(
+                counts, spec.lo, width, q
+            ))
+        metrics[spec.name] = entry
+    return {
+        "n_bins": obs.n_bins,
+        "metrics": metrics,
+        "counters": {k: int(v) for k, v in counters.items()},
+    }
+
+
+# -- host-side mirrors ----------------------------------------------------
+
+
+def host_percentile(
+    counts: np.ndarray, lo: float, width: float, q: float,
+) -> float:
+    """numpy mirror of ``kernels.histogram.hist_percentile`` (same
+    lower-edge rank semantics, same empty-histogram floor)."""
+    counts = np.asarray(counts, np.int64)
+    n = int(counts.sum())
+    if n == 0:
+        return float(lo)
+    rank = int(np.floor(q / 100.0 * np.float32(n - 1)))
+    idx = int(np.sum(np.cumsum(counts) <= rank))
+    return float(lo + min(idx, counts.shape[0] - 1) * width)
+
+
+class HostHistogram:
+    """Fixed-bin histogram over numpy accumulators — the serving tier's
+    per-region latency state, with the device plane's exact bin and
+    percentile semantics (saturating edge bins, lower-edge ranks)."""
+
+    def __init__(self, lo: float, hi: float, n_bins: int = 64):
+        if n_bins < 2 or hi <= lo:
+            raise ValueError(f"bad histogram range [{lo}, {hi}) x {n_bins}")
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.n_bins = int(n_bins)
+        self.width = (self.hi - self.lo) / self.n_bins
+        self.counts = np.zeros(self.n_bins, np.int64)
+
+    def observe(self, values, weights=None) -> None:
+        values = np.atleast_1d(np.asarray(values, np.float32))
+        idx = np.clip(
+            np.floor((values - self.lo) / self.width).astype(np.int64),
+            0, self.n_bins - 1,
+        )
+        if weights is None:
+            np.add.at(self.counts, idx, 1)
+        else:
+            np.add.at(
+                self.counts, idx,
+                np.atleast_1d(np.asarray(weights, np.int64)),
+            )
+
+    @property
+    def count(self) -> int:
+        return int(self.counts.sum())
+
+    def percentile(self, q: float) -> float:
+        return host_percentile(self.counts, self.lo, self.width, q)
+
+    def summary(self) -> dict:
+        out = {"count": self.count}
+        for q in PERCENTILES:
+            out[f"p{q:g}"] = self.percentile(q)
+        return out
+
+
+# -- telemetry window primitives ------------------------------------------
+#
+# The one ring-buffer implementation behind every sliding telemetry
+# window: the policy controllers' bandit state (ControllerState /
+# CadenceState) records epochs and aggregates windowed sums through
+# these, so their forgetting semantics cannot drift apart.  jnp-typed
+# and jit/scan-safe (imported lazily to keep this module usable from
+# config code without touching jax).
+
+
+def window_init(window: int, shape: tuple[int, ...], dtype=None):
+    """A zeroed ``(window, *shape)`` ring."""
+    import jax.numpy as jnp
+
+    return jnp.zeros((window, *shape), dtype or jnp.float32)
+
+
+def window_record(win, ptr, sample):
+    """Overwrite slot ``ptr % window`` with this epoch's sample (old
+    evidence in that slot ages out — the bandit forgetting scheme)."""
+    return win.at[ptr % win.shape[0]].set(sample)
+
+
+def window_total(win):
+    """Windowed sum over the ring axis."""
+    import jax.numpy as jnp
+
+    return jnp.sum(win, axis=0)

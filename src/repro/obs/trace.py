@@ -1,0 +1,208 @@
+"""Host-side span tracing of the engine lifecycle.
+
+The device-resident plane (``repro.obs.metrics``) covers *what the
+protocol did*; this module covers *what the host did to run it*: how
+long stream preparation, XLA compilation, device execution, and result
+assembly took, under which static engine configuration, with how many
+jit re-entries.  A :class:`Tracer` collects spans and instant events
+with microsecond wall-clock timestamps and exports them as Chrome
+trace-event JSON (load ``chrome://tracing`` / Perfetto) or as JSONL
+(one event per line, grep/jq-friendly).
+
+:func:`traced_run` is the instrumented twin of
+``EpochEngine.run``: same replay, same result dict, plus a trace with
+
+  * a ``config`` instant — the content hash of the engine config's
+    static key (two runs with the same hash compiled the same replay);
+  * a ``stages`` instant — the static feature flags the jaxpr was
+    gated on (the compile-time answer to "what is in this trace?");
+  * ``prepare`` / ``compile`` / ``execute`` / ``assemble`` spans —
+    compile wall time is split from execute by lowering the cached
+    jitted replay explicitly, so cold-vs-warm runs are legible;
+  * a ``jit_entries`` instant — host→device re-entries this replay
+    (the engine's one-jit-entry invariant, measured not assumed).
+
+The chaos harness (``repro.chaos.harness``) appends its nemesis
+actions and per-round invariant verdicts to the same tracer, so a
+failed chaos run reads as a timeline, not a pass/fail bit.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import time
+from typing import Any
+
+# Required keys of every exported trace event (the JSON schema the
+# round-trip tests and the CI smoke validate).
+EVENT_KEYS = ("name", "ph", "ts", "pid", "tid")
+TRACE_SCHEMA = "repro-obs-trace/v1"
+
+
+def config_hash(config) -> str:
+    """Content hash of an ``EngineConfig``'s static identity.
+
+    Hashes the same ``_key()`` tuple that keys the compiled-replay
+    cache, so equal hashes ⇒ the same jitted program (topology and
+    fault-mask bytes included)."""
+    return hashlib.sha256(repr(config._key()).encode()).hexdigest()[:16]
+
+
+def stage_flags(config) -> dict[str, bool]:
+    """The static feature gates of one configuration's jaxpr.
+
+    Mirrors the Python-level gating in
+    ``repro.engine.replay.unified_runner`` — a disabled stage does not
+    exist in the compiled trace at all."""
+    gossip, faults = config.gossip, config.faults
+    faults_on = faults is not None
+    d_on = (
+        config.durability is not None and config.durability.enabled
+        and faults_on
+    )
+    return {
+        "faults": faults_on,
+        "crashes": faults_on and faults.has_crashes,
+        "geo": config.topology is not None,
+        "gossip": gossip is not None and gossip.enabled,
+        "handoff": gossip is not None and gossip.handoff and faults_on,
+        "durability": d_on,
+        "wal": d_on and config.durability.wal,
+        "snapshot": d_on and config.durability.snapshot_every > 0,
+        "sharded": config.n_shards > 1,
+        "lean": config.lean,
+        "obs": config.obs is not None and config.obs.enabled,
+    }
+
+
+class Tracer:
+    """Chrome-trace-event collector (complete events + instants).
+
+    Timestamps are microseconds of wall clock relative to the tracer's
+    birth; spans are ``ph="X"`` complete events, instants ``ph="i"``.
+    One process, one thread lane — the engine lifecycle is sequential
+    by construction.
+    """
+
+    def __init__(self, run_id: str = "replay"):
+        self.run_id = run_id
+        self.events: list[dict[str, Any]] = []
+        self._t0 = time.perf_counter()
+
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def _event(self, name: str, ph: str, ts: float, **fields) -> dict:
+        ev = {"name": name, "ph": ph, "ts": ts, "pid": 1, "tid": 1}
+        ev.update(fields)
+        self.events.append(ev)
+        return ev
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args):
+        """``with tracer.span("compile"): ...`` — one complete event."""
+        t0 = self._now_us()
+        try:
+            yield self
+        finally:
+            self._event(
+                name, "X", t0, dur=self._now_us() - t0, args=args
+            )
+
+    def instant(self, name: str, **args) -> None:
+        self._event(name, "i", self._now_us(), s="g", args=args)
+
+    # -- export -----------------------------------------------------------
+
+    def chrome(self) -> dict[str, Any]:
+        """The Chrome trace-event JSON object."""
+        return {
+            "traceEvents": self.events,
+            "displayTimeUnit": "ms",
+            "otherData": {"schema": TRACE_SCHEMA, "run_id": self.run_id},
+        }
+
+    def write_chrome(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.chrome(), f, indent=1)
+
+    def write_jsonl(self, path) -> None:
+        with open(path, "w") as f:
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+
+
+def validate_chrome(obj: dict[str, Any]) -> list[dict[str, Any]]:
+    """Check an exported trace against the event schema; returns the
+    events.  Raises ``ValueError`` on the first malformed event — the
+    CI smoke and the round-trip tests call this on re-loaded JSON."""
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        raise ValueError("not a Chrome trace-event object")
+    events = obj["traceEvents"]
+    for i, ev in enumerate(events):
+        missing = [k for k in EVENT_KEYS if k not in ev]
+        if missing:
+            raise ValueError(f"event {i} missing keys {missing}: {ev}")
+        if ev["ph"] == "X" and "dur" not in ev:
+            raise ValueError(f"complete event {i} missing dur: {ev}")
+    return events
+
+
+def load_chrome(path) -> list[dict[str, Any]]:
+    """Load + validate a written Chrome trace; returns its events."""
+    with open(path) as f:
+        return validate_chrome(json.load(f))
+
+
+def traced_run(engine, w, tracer: Tracer | None = None):
+    """``EpochEngine.run`` with the lifecycle traced; ``(result,
+    tracer)``.
+
+    Accepts an ``EpochEngine`` or a bare ``EngineConfig``.  The
+    single-stack path lowers the cached jitted replay explicitly so
+    compile and execute wall time land in separate spans; the sharded
+    path (vmap over shard stacks) keeps them fused in one ``replay``
+    span.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine import EpochEngine, results
+    from repro.engine import replay as replay_mod
+
+    if not isinstance(engine, EpochEngine):
+        engine = EpochEngine(engine)
+    c = engine.config
+    tracer = tracer or Tracer()
+    tracer.instant(
+        "config", hash=config_hash(c), level=str(c.level),
+        n_ops=c.n_ops, batch_size=c.batch_size, n_shards=c.n_shards,
+    )
+    tracer.instant("stages", **stage_flags(c))
+    j0 = replay_mod.jit_entries()
+    if c.n_shards > 1:
+        with tracer.span("replay", shards=c.n_shards):
+            prep = engine.replay(w)
+            jax.block_until_ready(prep["out"])
+    else:
+        with tracer.span("prepare"):
+            prep = engine.prepare(w)
+            b = {k: jnp.asarray(v) for k, v in prep["batched"][0].items()}
+            t = {k: jnp.asarray(v) for k, v in prep["tails"][0].items()}
+        run = prep["run"]
+        with tracer.span("compile"):
+            compiled = run.jitted.lower(b, t).compile()
+        with tracer.span("execute"):
+            replay_mod._JIT_ENTRIES[0] += 1
+            out = jax.block_until_ready(compiled(b, t))
+        per_round = None
+        if isinstance(out, tuple):
+            out, per_round = out
+        prep["out"] = out
+        prep["per_round"] = per_round
+    tracer.instant("jit_entries", count=replay_mod.jit_entries() - j0)
+    with tracer.span("assemble"):
+        result = results.assemble(engine, prep, w)
+    return result, tracer

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.consistency import ConsistencyLevel
 from repro.core.cost_model import PAPER_PRICING, PricingScheme
+from repro.obs.metrics import window_init, window_record, window_total
 from repro.policy import sla as sla_lib
 from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
 
@@ -109,11 +110,11 @@ class AdaptiveController:
     # -- state ----------------------------------------------------------------
 
     def init(self) -> ControllerState:
-        shape = (self.window, self.n_sessions, self.n_levels)
+        shape = (self.n_sessions, self.n_levels)
         return ControllerState(
-            stale_win=jnp.zeros(shape, jnp.float32),
-            viol_win=jnp.zeros(shape, jnp.float32),
-            reads_win=jnp.zeros(shape, jnp.float32),
+            stale_win=window_init(self.window, shape),
+            viol_win=window_init(self.window, shape),
+            reads_win=window_init(self.window, shape),
             ptr=jnp.int32(0),
             epoch=jnp.int32(0),
         )
@@ -140,16 +141,18 @@ class AdaptiveController:
             jnp.asarray(level_idx, jnp.int32), self.n_levels,
             dtype=jnp.float32,
         )
-        slot = state.ptr % self.window
         return ControllerState(
-            stale_win=state.stale_win.at[slot].set(
-                onehot * jnp.asarray(stale, jnp.float32)[:, None]
+            stale_win=window_record(
+                state.stale_win, state.ptr,
+                onehot * jnp.asarray(stale, jnp.float32)[:, None],
             ),
-            viol_win=state.viol_win.at[slot].set(
-                onehot * jnp.asarray(viol, jnp.float32)[:, None]
+            viol_win=window_record(
+                state.viol_win, state.ptr,
+                onehot * jnp.asarray(viol, jnp.float32)[:, None],
             ),
-            reads_win=state.reads_win.at[slot].set(
-                onehot * jnp.asarray(reads, jnp.float32)[:, None]
+            reads_win=window_record(
+                state.reads_win, state.ptr,
+                onehot * jnp.asarray(reads, jnp.float32)[:, None],
             ),
             ptr=state.ptr + 1,
             epoch=state.epoch + 1,
@@ -157,10 +160,10 @@ class AdaptiveController:
 
     def aggregate(self, state: ControllerState) -> tuple[Array, Array, Array]:
         """Windowed (stale_rate, viol_rate, sample_count), each (S, L)."""
-        reads = jnp.sum(state.reads_win, axis=0)
+        reads = window_total(state.reads_win)
         denom = jnp.maximum(reads, 1.0)
-        stale = jnp.sum(state.stale_win, axis=0) / denom
-        viol = jnp.sum(state.viol_win, axis=0) / denom
+        stale = window_total(state.stale_win) / denom
+        viol = window_total(state.viol_win) / denom
         return stale, viol, reads
 
     # -- selection ------------------------------------------------------------
@@ -337,8 +340,7 @@ class CadenceController:
     # -- state ----------------------------------------------------------------
 
     def init(self) -> CadenceState:
-        shape = (self.window, self.n_arms)
-        z = jnp.zeros(shape, jnp.float32)
+        z = window_init(self.window, (self.n_arms,))
         return CadenceState(
             gb_win=z, stale_win=z, reads_win=z, played_win=z,
             ptr=jnp.int32(0), epoch=jnp.int32(0),
@@ -360,18 +362,19 @@ class CadenceController:
         onehot = jax.nn.one_hot(
             jnp.asarray(arm, jnp.int32), self.n_arms, dtype=jnp.float32
         )
-        slot = state.ptr % self.window
         return CadenceState(
-            gb_win=state.gb_win.at[slot].set(
-                onehot * jnp.asarray(gb, jnp.float32)
+            gb_win=window_record(
+                state.gb_win, state.ptr, onehot * jnp.asarray(gb, jnp.float32)
             ),
-            stale_win=state.stale_win.at[slot].set(
-                onehot * jnp.asarray(stale, jnp.float32)
+            stale_win=window_record(
+                state.stale_win, state.ptr,
+                onehot * jnp.asarray(stale, jnp.float32),
             ),
-            reads_win=state.reads_win.at[slot].set(
-                onehot * jnp.asarray(reads, jnp.float32)
+            reads_win=window_record(
+                state.reads_win, state.ptr,
+                onehot * jnp.asarray(reads, jnp.float32),
             ),
-            played_win=state.played_win.at[slot].set(onehot),
+            played_win=window_record(state.played_win, state.ptr, onehot),
             ptr=state.ptr + 1,
             epoch=state.epoch + 1,
         )
@@ -389,10 +392,10 @@ class CadenceController:
         Observed arms score strictly below zero whenever they shipped
         traffic or served stale reads; unobserved arms score exactly
         zero (the optimum), so greedy argmax probes them first."""
-        plays = jnp.sum(state.played_win, axis=0)
-        gb_rate = jnp.sum(state.gb_win, axis=0) / jnp.maximum(plays, 1.0)
-        stale_rate = jnp.sum(state.stale_win, axis=0) / jnp.maximum(
-            jnp.sum(state.reads_win, axis=0), 1.0
+        plays = window_total(state.played_win)
+        gb_rate = window_total(state.gb_win) / jnp.maximum(plays, 1.0)
+        stale_rate = window_total(state.stale_win) / jnp.maximum(
+            window_total(state.reads_win), 1.0
         )
         u = -(gb_rate * self.gb_price + stale_rate * self.stale_penalty)
         return jnp.where(plays > 0, u, jnp.float32(0.0))

@@ -39,6 +39,7 @@ import numpy as np
 from repro.core.consistency import ConsistencyLevel
 from repro.core.replicated_store import ReplicatedStore, ShardedStore
 from repro.models.model_zoo import Model
+from repro.obs.metrics import HostHistogram
 
 Array = jax.Array
 
@@ -142,6 +143,7 @@ class ServingEngine:
         self._region_stale: np.ndarray | None = None
         self._region_serves: np.ndarray | None = None
         self._region_lat_ms: np.ndarray | None = None
+        self._region_hist: list[HostHistogram] | None = None
         # Per-session overrides of the engine default, plus per-session
         # serve telemetry (stale/violation/serve counts since the last
         # controller consultation) feeding `adapt_sessions`.
@@ -290,6 +292,11 @@ class ServingEngine:
         self._region_stale = np.zeros(g, np.int64)
         self._region_serves = np.zeros(g, np.int64)
         self._region_lat_ms = np.zeros(g, np.float64)
+        # Per-region serve-latency distributions on the shared obs
+        # histogram primitive; RTTs are bounded by the matrix, so the
+        # top bin saturates only if the topology is later mutated.
+        lat_hi = max(1.0, float(self._rtt_np.max()) * 1.5)
+        self._region_hist = [HostHistogram(0.0, lat_hi) for _ in range(g)]
 
     def _geo_rtts(self, session_ids, n: int) -> np.ndarray:
         """(B, n) RTT from each session's region to replicas ``0..n-1``.
@@ -334,14 +341,20 @@ class ServingEngine:
         rreg = int(self._replica_region_np[replica])
         self._region_serves[sreg] += 1
         self._region_stale[sreg] += stale
-        self._region_lat_ms[sreg] += float(self._rtt_np[sreg, rreg])
+        lat = float(self._rtt_np[sreg, rreg])
+        self._region_lat_ms[sreg] += lat
+        self._region_hist[sreg].observe([lat])
 
     def region_stats(self) -> dict[str, list[float]]:
         """Per-region serving telemetry (requires :meth:`set_topology`).
 
         Latency is the RTT-matrix distance between the session's region
         and the replica that served it — the serving-side replacement
-        of the two-value ``ack_latency_ms`` step function.
+        of the two-value ``ack_latency_ms`` step function.  Percentiles
+        come from per-region fixed-bin histograms (the shared obs
+        primitive), so a failover burst that reroutes the slowest few
+        percent of serves moves ``p99_latency_ms`` while
+        ``p50_latency_ms`` holds — the mean alone can't show that.
         """
         if self._topology is None:
             raise RuntimeError("no topology set (call set_topology)")
@@ -351,6 +364,8 @@ class ServingEngine:
             "stale": self._region_stale.tolist(),
             "staleness_rate": (self._region_stale / serves).tolist(),
             "mean_latency_ms": (self._region_lat_ms / serves).tolist(),
+            "p50_latency_ms": [h.percentile(50) for h in self._region_hist],
+            "p99_latency_ms": [h.percentile(99) for h in self._region_hist],
         }
 
     # -- per-session consistency ---------------------------------------------------
@@ -673,14 +688,15 @@ class ServingEngine:
         if self._topology is not None:
             sregs = self._session_region[sid_np]
             rregs = self._replica_region_np[np.asarray(replica)]
+            lat = self._rtt_np[sregs, rregs]
             np.add.at(self._region_serves, sregs, 1)
             np.add.at(
                 self._region_stale, sregs,
                 np.asarray(res.stale).astype(np.int64),
             )
-            np.add.at(
-                self._region_lat_ms, sregs, self._rtt_np[sregs, rregs]
-            )
+            np.add.at(self._region_lat_ms, sregs, lat)
+            for g in np.unique(sregs):
+                self._region_hist[g].observe(lat[sregs == g])
         for s, v in zip(sessions, list(res.version)):
             s.read_floor = max(s.read_floor, int(v))
         return res.version
@@ -787,6 +803,7 @@ class ShardedServingRouter:
         sessions_per_shard: int,
         max_replicas: int = 8,
         level: ConsistencyLevel = ConsistencyLevel.X_STCC,
+        age_hi: float = 1024.0,
     ):
         self.n_shards = n_shards
         self.sessions_per_shard = sessions_per_shard
@@ -807,6 +824,9 @@ class ShardedServingRouter:
         self.stale_serves = 0
         self.reroutes = 0
         self.failovers = 0
+        # Staleness-age distribution of every routed serve (latest
+        # published version minus served version, in versions).
+        self._age_hist = HostHistogram(0.0, float(age_hi))
 
     def set_replica_health(self, health) -> None:
         """Drive the liveness mask (``NodeHealth`` or a bool vector)."""
@@ -897,7 +917,26 @@ class ShardedServingRouter:
         )
         self.total_serves += int(sid.size)
         self.stale_serves += int(jnp.sum(res.stale))
+        ages = self._versions[: self.n_replicas].max() - np.asarray(
+            res.version, np.int64
+        )
+        self._age_hist.observe(np.maximum(ages, 0).ravel())
         return replica, res.version
+
+    def age_stats(self) -> dict[str, float]:
+        """Staleness-age distribution of every serve routed so far.
+
+        Age is how many published versions the served snapshot lagged
+        the freshest replica at serve time; percentiles come from the
+        shared obs histogram primitive, so a failover that pins a
+        tenant group on a stale snapshot shows up as a p99 spike while
+        the p50 (the healthy majority) holds.
+        """
+        return {
+            "serves": int(self._age_hist.count),
+            "p50_age": self._age_hist.percentile(50),
+            "p99_age": self._age_hist.percentile(99),
+        }
 
     def staleness_rate(self) -> float:
         return self.stale_serves / max(1, self.total_serves)

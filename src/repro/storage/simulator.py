@@ -54,6 +54,7 @@ from repro.engine import (
 from repro.engine import results as engine_results
 from repro.engine import stream as engine_stream
 from repro.gossip.scheduler import GossipConfig
+from repro.obs.metrics import ObsConfig
 from repro.storage.cluster import PAPER_CLUSTER, ClusterConfig
 from repro.storage.ycsb import PhasedWorkload, Workload
 
@@ -185,6 +186,7 @@ def run_protocol(
     batch_size: int = 128,
     audit: bool = True,
     ingest: str = "auto",
+    obs: ObsConfig | None = None,
 ) -> dict[str, float]:
     """Run a scaled YCSB stream through the *batched* X-STCC engine.
 
@@ -212,6 +214,12 @@ def run_protocol(
     baseline) — bit-identical, benchmarked against each other in
     ``benchmarks/bench_protocol.py``.
 
+    ``obs`` (a :class:`repro.obs.ObsConfig`) threads the observability
+    plane's histogram/counter state through the scan carry and adds an
+    ``"obs"`` block (percentile tables, per-round stale/violation
+    series) to the result; ``obs=None`` (the default) compiles no obs
+    state and every other key is bit-identical.
+
     This is the flat :class:`repro.engine.EngineConfig` instance of the
     unified epoch engine — every feature knob left off.
     """
@@ -219,9 +227,10 @@ def run_protocol(
         level, n_ops=n_ops, n_clients=n_clients, n_resources=n_resources,
         merge_every=merge_every, delta=delta, duot_cap=duot_cap,
         seed=seed, batch_size=batch_size, audit=audit, ingest=ingest,
+        obs=obs,
     )
     engine = EpochEngine(config)
-    return engine_results.assemble_flat(config, engine.replay(w))
+    return engine_results.assemble(config, engine.replay(w), w)
 
 
 def run_protocol_geo(
@@ -243,6 +252,7 @@ def run_protocol_geo(
     recovery: DurabilityConfig | None = None,
     cfg: ClusterConfig = PAPER_CLUSTER,
     pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
+    obs: ObsConfig | None = None,
 ) -> dict[str, Any]:
     """Run the protocol with region-aware propagation and billing.
 
@@ -306,10 +316,10 @@ def run_protocol_geo(
         level, n_ops=n_ops, n_clients=n_clients, n_resources=n_resources,
         merge_every=merge_every, delta=delta, duot_cap=duot_cap,
         seed=seed, batch_size=batch_size, audit=audit, ingest=ingest,
-        topology=topology, gossip=gossip, durability=recovery,
+        topology=topology, gossip=gossip, durability=recovery, obs=obs,
     )
     engine = EpochEngine(config)
-    return engine_results.assemble_geo(
+    return engine_results.assemble(
         config, engine.replay(w), w, cfg, pricing
     )
 
@@ -330,6 +340,7 @@ def run_protocol_sharded(
     audit: bool = False,
     ingest: str = "auto",
     use_devices: bool = True,
+    obs: ObsConfig | None = None,
 ) -> dict[str, float]:
     """Multi-tenant scale-out: disjoint shards of the workload, one axis.
 
@@ -357,10 +368,10 @@ def run_protocol_sharded(
         level, n_ops=n_ops, n_clients=n_clients, n_resources=n_resources,
         merge_every=merge_every, delta=delta, duot_cap=duot_cap,
         seed=seed, batch_size=batch_size, audit=audit, ingest=ingest,
-        n_shards=n_shards, use_devices=use_devices,
+        n_shards=n_shards, use_devices=use_devices, obs=obs,
     )
     engine = EpochEngine(config)
-    return engine_results.assemble_sharded(config, engine.replay(w))
+    return engine_results.assemble(config, engine.replay(w), w)
 
 
 def run_protocol_faulty(
@@ -385,6 +396,7 @@ def run_protocol_faulty(
     recovery: DurabilityConfig | None = None,
     cfg: ClusterConfig = PAPER_CLUSTER,
     pricing: cost_model.PricingScheme = cost_model.PAPER_PRICING,
+    obs: ObsConfig | None = None,
     _return_state: bool = False,
 ) -> dict[str, Any]:
     """Run the protocol under replica outages and network partitions.
@@ -473,9 +485,10 @@ def run_protocol_faulty(
         seed=seed, batch_size=batch_size, audit=audit, ingest=ingest,
         faults=schedule, schedule_unit=schedule_unit, gossip=gossip,
         durability=recovery, pending_cap=pending_cap, n_shards=n_shards,
+        obs=obs,
     )
     engine = EpochEngine(config)
-    return engine_results.assemble_faulty(
+    return engine_results.assemble(
         config, engine.replay(w), w, cfg, pricing, _return_state
     )
 

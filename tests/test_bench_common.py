@@ -36,13 +36,14 @@ def test_write_json_merges_with_existing_rows(tmp_path, fresh_results):
     assert out["geo_new"]["derived"] == "new-row"
 
 
+ROW_X = {"us_per_call": 1.0, "derived": "x", "value": None, "unit": ""}
+
+
 def test_write_json_handles_missing_and_corrupt_files(tmp_path, fresh_results):
     common.emit("row", 1.0, "x")
     # Missing file: plain write.
     path = common.write_json(tmp_path / "missing.json")
-    assert json.loads(path.read_text()) == {
-        "row": {"us_per_call": 1.0, "derived": "x"}
-    }
+    assert json.loads(path.read_text()) == {"row": ROW_X}
     # Corrupt file: treated as empty, not fatal.
     bad = tmp_path / "bad.json"
     bad.write_text("{not json")
@@ -52,4 +53,44 @@ def test_write_json_handles_missing_and_corrupt_files(tmp_path, fresh_results):
     lst = tmp_path / "list.json"
     lst.write_text("[1, 2]")
     out = json.loads(common.write_json(lst).read_text())
-    assert out == {"row": {"us_per_call": 1.0, "derived": "x"}}
+    assert out == {"row": ROW_X}
+
+
+def test_emit_types_value_and_unit(fresh_results):
+    # Explicit value/unit pass through.
+    common.emit("a", 1.0, "3.2x @ B=4096", value=3.2, unit="x")
+    assert common.RESULTS["a"] == {
+        "us_per_call": 1.0, "derived": "3.2x @ B=4096",
+        "value": 3.2, "unit": "x",
+    }
+    # Numeric derived strings parse into value; display stays a string.
+    common.emit("b", 1.0, "138006")
+    assert common.RESULTS["b"]["value"] == 138006.0
+    assert common.RESULTS["b"]["derived"] == "138006"
+    common.emit("c", 1.0, 7)
+    assert common.RESULTS["c"]["value"] == 7.0
+    # Non-numeric display without an explicit value stays untyped.
+    common.emit("d", 1.0, "batch>600ops")
+    assert common.RESULTS["d"]["value"] is None
+
+
+def test_check_schema_accepts_both_row_shapes(tmp_path, fresh_results):
+    from benchmarks import check_schema
+
+    rows = {
+        name: {"us_per_call": 0.0, "derived": "0.0"}
+        for name in check_schema.REQUIRED
+    }
+    rows["legacy"] = {"us_per_call": 1.0, "derived": "x"}
+    rows["typed"] = dict(ROW_X)
+    path = tmp_path / "BENCH.json"
+    path.write_text(json.dumps(rows))
+    assert check_schema.check(path) == 0
+    # A typed row with a non-finite value fails the gate.
+    rows["typed"]["value"] = float("nan")
+    path.write_text(json.dumps(rows).replace("NaN", "1e999"))
+    assert check_schema.check(path) == 1
+    # So does value without unit.
+    rows["typed"] = {"us_per_call": 1.0, "derived": "x", "value": 2.0}
+    path.write_text(json.dumps(rows))
+    assert check_schema.check(path) == 1
